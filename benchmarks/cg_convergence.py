@@ -1,0 +1,23 @@
+"""Paper Sec. 3 benchmark protocol: CG + Jacobi on pressure matrices,
+iteration cap 10,000 — convergence behaviour and per-iteration cost."""
+from __future__ import annotations
+
+from common import emit, run_bench_subprocess
+
+
+def run():
+    rows = []
+    for mode in ("vector", "task", "balanced"):
+        r = run_bench_subprocess(
+            "repro.testing.bench_spmv",
+            ["--n-node", "4", "--n-core", "2", "--mode", mode,
+             "--n-surface", "1500", "--layers", "12", "--cg",
+             "--tol", "1e-8", "--iters", "10000"])
+        rows.append((f"cg_convergence/{mode}/4x2",
+                     r["us_per_iter"],
+                     f"iters={r['cg_iters']};rel={r['cg_rel']:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

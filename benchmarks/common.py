@@ -1,0 +1,31 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_bench_subprocess(module: str, argv: list[str],
+                         timeout: int = 1200) -> dict:
+    """Run a repro.testing.* bench module in a fresh process and parse the
+    JSON line it prints."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-m", module, *argv],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(f"{module} {argv} failed:\n{r.stderr[-2000:]}")
+    line = [ln for ln in r.stdout.splitlines() if ln.startswith("{")][-1]
+    return json.loads(line)
+
+
+def emit(rows):
+    """Print benchmark rows as the required ``name,us_per_call,derived``."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")

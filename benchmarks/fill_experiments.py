@@ -1,0 +1,25 @@
+"""Splice the generated dry-run/roofline tables into EXPERIMENTS.md at the
+<!-- DRYRUN_TABLES --> and <!-- ROOFLINE_TABLES --> markers."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from report import REPO, tables  # noqa: E402
+
+
+def main():
+    path = os.path.join(REPO, "dryrun_results.json")
+    md = tables(path)
+    dry, roof = md.split("### Roofline terms", 1)
+    roof = "### Roofline terms" + roof
+    # split roofline part at multi-pod section: keep both in roofline block
+    exp_path = os.path.join(REPO, "EXPERIMENTS.md")
+    exp = open(exp_path).read()
+    exp = exp.replace("<!-- DRYRUN_TABLES -->", dry.strip())
+    exp = exp.replace("<!-- ROOFLINE_TABLES -->", roof.strip())
+    open(exp_path, "w").write(exp)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Fig. 2 analogue: SpMV runtime at a fixed device count with varying
+node:core (MPI-rank : OpenMP-thread) ratios, for the three algorithm modes.
+
+The paper fixes the core count per panel (512 / 1024 / 4096 cores) and
+sweeps processes-per-node x threads-per-process; we fix 16 host devices and
+sweep (n_node, n_core) in {16x1, 8x2, 4x4, 2x8, 1x16}.  16x1 is the
+pure-"MPI" baseline (leftmost point of the paper's panels).
+"""
+from __future__ import annotations
+
+from common import emit, run_bench_subprocess
+
+FACTORISATIONS = [(16, 1), (8, 2), (4, 4), (2, 8), (1, 16)]
+MODES = ["vector", "task", "balanced"]
+
+
+def run(n_surface: int = 2000, layers: int = 16, iters: int = 30):
+    rows = []
+    # beyond-paper: ring/neighbour transport vs fused all_to_all at the
+    # paper's preferred hybrid configuration
+    for transport in ("a2a", "ring"):
+        r = run_bench_subprocess(
+            "repro.testing.bench_spmv",
+            ["--n-node", "4", "--n-core", "4", "--mode", "balanced",
+             "--transport", transport, "--n-surface", str(n_surface),
+             "--layers", str(layers), "--iters", str(iters)])
+        rows.append((f"fig2_transport/{transport}/4x4", r["us_per_spmv"],
+                     f"gflops={r['gflops']:.3f}"))
+    for mode in MODES:
+        for n_node, n_core in FACTORISATIONS:
+            r = run_bench_subprocess(
+                "repro.testing.bench_spmv",
+                ["--n-node", str(n_node), "--n-core", str(n_core),
+                 "--mode", mode, "--n-surface", str(n_surface),
+                 "--layers", str(layers), "--iters", str(iters)])
+            rows.append((
+                f"fig2_ratio/{mode}/{n_node}x{n_core}",
+                r["us_per_spmv"],
+                f"gflops={r['gflops']:.3f};halo_B_per_node="
+                f"{r['halo_bytes_per_node']:.0f};nnz={r['nnz']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

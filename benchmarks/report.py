@@ -1,0 +1,108 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
+dryrun_results.json.  Usage: python benchmarks/report.py [path]"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f}"
+
+
+def tables(path):
+    data = json.load(open(path))
+    by = {(r["arch"], r["shape"], r["mesh"]): r for r in data}
+    archs = sorted({r["arch"] for r in data})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+    out = []
+    out.append("### Dry-run matrix (status x mesh)\n")
+    out.append("| arch | " + " | ".join(shapes) + " |")
+    out.append("|---" * (len(shapes) + 1) + "|")
+    for a in archs:
+        row = [a]
+        for s in shapes:
+            cells = []
+            for mesh in ("16x16", "2x16x16"):
+                r = by.get((a, s, mesh))
+                if r is None:
+                    cells.append("—")
+                elif r["status"] == "ok":
+                    cells.append("ok" if r["per_device"]["fits_hbm"]
+                                 else "ok(OOM)")
+                elif r["status"] == "skip":
+                    cells.append("skip")
+                else:
+                    cells.append("ERR")
+            row.append("/".join(cells))
+        out.append("| " + " | ".join(row) + " |")
+
+    out.append("\n### Per-device dry-run detail (single-pod 16x16)\n")
+    out.append("| arch | shape | peak GB | fits | HLO GFLOP/dev | HLO GB/dev "
+               "| coll GB/dev | AR/AG/RS/A2A/CP counts |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in shapes:
+            r = by.get((a, s, "16x16"))
+            if not r or r["status"] != "ok":
+                continue
+            pd = r["per_device"]
+            c = pd["collective_counts"]
+            out.append(
+                f"| {a} | {s} | {pd['peak_bytes']/1e9:.2f} | "
+                f"{'Y' if pd['fits_hbm'] else 'N'} | "
+                f"{pd['hlo_flops']/1e9:.0f} | {pd['hlo_bytes']/1e9:.1f} | "
+                f"{pd['collective_bytes']/1e9:.2f} | "
+                f"{c['all-reduce']}/{c['all-gather']}/{c['reduce-scatter']}/"
+                f"{c['all-to-all']}/{c['collective-permute']} |")
+
+    out.append("\n### Roofline terms (single-pod 16x16, v5e constants)\n")
+    out.append("| arch | shape | t_compute s | t_memory s | t_collective s "
+               "| dominant | MODEL/HLO flops | step bound s |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in shapes:
+            r = by.get((a, s, "16x16"))
+            if not r:
+                continue
+            if r["status"] == "skip":
+                out.append(f"| {a} | {s} | — | — | — | skip (full attn, "
+                           f"500k needs sub-quadratic) | — | — |")
+                continue
+            if r["status"] != "ok":
+                out.append(f"| {a} | {s} | ERROR | | | | | |")
+                continue
+            rf = r["roofline"]
+            bound = max(rf["t_compute_s"], rf["t_memory_s"],
+                        rf["t_collective_s"])
+            out.append(
+                f"| {a} | {s} | {rf['t_compute_s']:.4f} | "
+                f"{rf['t_memory_s']:.4f} | {rf['t_collective_s']:.4f} | "
+                f"**{rf['dominant']}** | {rf['useful_flops_ratio']:.3f} | "
+                f"{bound:.4f} |")
+
+    out.append("\n### Multi-pod deltas (2x16x16 vs 16x16)\n")
+    out.append("| arch | shape | coll GB/dev 1-pod | 2-pod | ratio |")
+    out.append("|---|---|---|---|---|")
+    for a in archs:
+        for s in shapes:
+            r1 = by.get((a, s, "16x16"))
+            r2 = by.get((a, s, "2x16x16"))
+            if not (r1 and r2 and r1["status"] == "ok"
+                    and r2["status"] == "ok"):
+                continue
+            c1 = r1["per_device"]["collective_bytes"] / 1e9
+            c2 = r2["per_device"]["collective_bytes"] / 1e9
+            out.append(f"| {a} | {s} | {c1:.2f} | {c2:.2f} | "
+                       f"{c2 / max(c1, 1e-9):.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    p = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        REPO, "dryrun_results.json")
+    print(tables(p))

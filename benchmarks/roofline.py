@@ -1,0 +1,40 @@
+"""Roofline table from the dry-run artefacts (EXPERIMENTS.md §Roofline).
+
+Reads dryrun_results.json (produced by ``python -m repro.launch.dryrun
+--all``); emits one row per (arch x shape x mesh) with the three roofline
+terms.  No devices touched here.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from common import REPO, emit
+
+
+def run(path: str | None = None):
+    path = path or os.path.join(REPO, "dryrun_results.json")
+    if not os.path.exists(path):
+        return [("roofline/missing", 0.0,
+                 "run `python -m repro.launch.dryrun --all` first")]
+    rows = []
+    for r in json.load(open(path)):
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skip":
+            rows.append((name, 0.0, "skip=" + r["reason"][:40]))
+            continue
+        if r["status"] != "ok":
+            rows.append((name, 0.0, "ERROR"))
+            continue
+        rf = r["roofline"]
+        dom_t = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        rows.append((name, dom_t * 1e6,
+                     f"dom={rf['dominant']};tc={rf['t_compute_s']:.4f};"
+                     f"tm={rf['t_memory_s']:.4f};tl={rf['t_collective_s']:.4f};"
+                     f"useful={rf['useful_flops_ratio']:.3f};"
+                     f"fits={r['per_device']['fits_hbm']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

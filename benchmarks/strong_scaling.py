@@ -1,0 +1,76 @@
+"""Paper Figs. 3-4 analogue: strong scaling of SpMV/CG over device counts.
+
+Measured points: 1..16 host devices (hybrid mode 4 ranks x (n/4) threads as
+in the paper's "4 MPI ranks per node, 8 threads each" configuration when the
+count allows).  Modelled points extend the curve to pod scale using the real
+partition statistics (per-shard flops, per-shard HBM traffic, halo bytes)
+under the v5e roofline constants — the same three-term model as §Roofline.
+
+Fig. 3 matrix ~ 13.5M DoF; Fig. 4 ~ 52M DoF (x4 vertical extrusion).  The
+CPU-measured matrices are scaled down (same generator, same stencil), the
+modelled curve uses the paper-size matrices' partition statistics computed
+on the host.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from common import emit, run_bench_subprocess
+
+PEAK_FLOPS_F32 = 98.5e12 / 2   # v5e fp32 ~ half bf16 peak; SpMV is VPU-bound anyway
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _model_point(n_rows, nnz, n_node, n_core, halo_frac=0.015):
+    """Roofline-model a CG SpMV iteration at pod scale.
+
+    bytes/shard: matrix values+cols (8 B/nnz) + vector reads ~ dominated by
+    the ELL stream; flops/shard: 2 nnz; halo: halo_frac of the shard's rows
+    exchanged (measured fraction from the generator's partition stats).
+    """
+    shards = n_node * n_core
+    flops = 2.0 * nnz / shards
+    bytes_hbm = (8.0 + 4.0) * nnz / shards + 8.0 * n_rows / shards
+    t_comp = flops / PEAK_FLOPS_F32
+    t_mem = bytes_hbm / HBM_BW
+    halo_bytes = halo_frac * (n_rows / n_node) * 4.0
+    t_coll = halo_bytes / ICI_BW + 2e-6  # + per-collective latency floor
+    return max(t_comp, t_mem) + t_coll
+
+
+def run(iters: int = 30):
+    rows = []
+    # measured strong scaling (small matrix, CPU host devices)
+    for ndev in (1, 2, 4, 8, 16):
+        n_node = max(1, ndev // 2)
+        n_core = ndev // n_node
+        r = run_bench_subprocess(
+            "repro.testing.bench_spmv",
+            ["--n-node", str(n_node), "--n-core", str(n_core),
+             "--mode", "balanced", "--n-surface", "2000",
+             "--layers", "32", "--iters", str(iters)])
+        rows.append((f"fig3_measured/balanced/{ndev}dev",
+                     r["us_per_spmv"],
+                     f"gflops={r['gflops']:.3f};n={r['n_rows']}"))
+    # pure-"MPI" comparison at 16 devices
+    r = run_bench_subprocess(
+        "repro.testing.bench_spmv",
+        ["--n-node", "16", "--n-core", "1", "--mode", "task",
+         "--n-surface", "2000", "--layers", "32", "--iters", str(iters)])
+    rows.append(("fig3_measured/pure_mpi/16dev", r["us_per_spmv"],
+                 f"gflops={r['gflops']:.3f}"))
+
+    # modelled pod-scale curves, paper-size matrices
+    for label, n_rows, nnz in [("fig3_model_13.5M", 13_491_933, 371_102_769),
+                               ("fig4_model_52M", 52_040_313, 1_462_610_289)]:
+        for chips in (16, 64, 256, 1024, 4096):
+            n_node, n_core = max(1, chips // 16), min(16, chips)
+            t = _model_point(n_rows, nnz, n_node, n_core)
+            rows.append((f"{label}/{chips}chips", t * 1e6,
+                         f"modelled=1;gflops={2*nnz/t/1e9:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,14 @@
+"""Serve a small model with batched requests — continuous-batching decode.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    sys.exit(serve_main([
+        "--arch", "qwen2.5-3b", "--reduced",
+        "--requests", "8", "--batch", "4",
+        "--prompt-len", "32", "--max-new", "16",
+    ]))

@@ -1,0 +1,6 @@
+"""repro: hybrid hierarchical-parallel SpMV + LM framework in JAX.
+
+Reproduction (and TPU adaptation) of "Achieving Efficient Strong Scaling
+with PETSc using Hybrid MPI/OpenMP Optimisation" (Lange et al., 2013).
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,125 @@
+"""Sharded checkpoint store with elastic restore.
+
+Layout:  <dir>/step_000123/
+           manifest.json     — tree structure, shapes, dtypes, step, extras
+           arrays.npz        — one entry per flattened leaf (host numpy)
+
+Restore is *elastic*: arrays are saved unsharded (host-gathered), so a run
+may resume on a different mesh shape — ``load`` device_puts every leaf with
+the shardings derived from the *new* mesh.  Saves can run asynchronously on
+a host thread so the train loop never blocks on I/O.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+__all__ = ["save", "load", "latest_step", "AsyncSaver"]
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, tree, extra: dict | None = None) -> str:
+    """Write a checkpoint; atomic via tmp-dir rename."""
+    d = os.path.join(path, f"step_{step:09d}")
+    tmp = d + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(jax.device_get(x))
+              for i, x in enumerate(leaves)}
+    np.savez(os.path.join(tmp, _ARRAYS), **arrays)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "shapes": [list(a.shape) for a in arrays.values()],
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(d):
+        shutil.rmtree(d)
+    os.rename(tmp, d)
+    return d
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(n.split("_")[1]) for n in os.listdir(path)
+             if n.startswith("step_") and not n.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def load(path: str, step: int, like, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching tree of
+    NamedShardings for the *current* mesh (elastic restore)."""
+    d = os.path.join(path, f"step_{step:09d}")
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, _ARRAYS))
+    leaves_like, treedef = _flatten(like)
+    assert manifest["n_leaves"] == len(leaves_like), \
+        (manifest["n_leaves"], len(leaves_like))
+    new_leaves = []
+    shard_leaves = (jax.tree_util.tree_flatten(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))[0]
+        if shardings is not None else [None] * len(leaves_like))
+    for i, (ref, shd) in enumerate(zip(leaves_like, shard_leaves)):
+        arr = data[f"leaf_{i}"]
+        assert tuple(arr.shape) == tuple(ref.shape), \
+            f"leaf {i}: ckpt {arr.shape} vs model {ref.shape}"
+        arr = arr.astype(ref.dtype)
+        new_leaves.append(jax.device_put(arr, shd) if shd is not None
+                          else jax.device_put(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return tree, manifest["extra"]
+
+
+class AsyncSaver:
+    """Fire-and-forget checkpointing on a host thread (the train loop never
+    blocks on serialisation I/O); joins on close and keeps at most
+    ``keep`` checkpoints."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def submit(self, step: int, tree, extra=None):
+        # materialise on host *before* handing to the thread so the device
+        # buffers aren't donated away mid-save
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._save, args=(step, host_tree, extra), daemon=True)
+        self._thread.start()
+
+    def _save(self, step, tree, extra):
+        save(self.path, step, tree, extra)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(int(n.split("_")[1]) for n in os.listdir(self.path)
+                       if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.path, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

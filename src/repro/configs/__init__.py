@@ -1,0 +1,5 @@
+from repro.configs.base import (ArchConfig, MoEConfig, ShapeConfig, SHAPES,
+                                get_config, list_archs, register)
+
+__all__ = ["ArchConfig", "MoEConfig", "ShapeConfig", "SHAPES",
+           "get_config", "list_archs", "register"]

@@ -1,0 +1,18 @@
+from repro.core.partition import (
+    partition_equal_rows,
+    partition_greedy_nnz,
+    diffuse_nnz,
+    partition_balanced,
+    imbalance,
+)
+from repro.core.halo import HaloPlan, build_halo_plan
+from repro.core.spmv import SpMVPlan, build_spmv_plan, make_spmv, to_dist, from_dist, MODES
+from repro.core.cg import cg_solve, make_cg
+
+__all__ = [
+    "partition_equal_rows", "partition_greedy_nnz", "diffuse_nnz",
+    "partition_balanced", "imbalance",
+    "HaloPlan", "build_halo_plan",
+    "SpMVPlan", "build_spmv_plan", "make_spmv", "to_dist", "from_dist", "MODES",
+    "cg_solve", "make_cg",
+]

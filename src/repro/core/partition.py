@@ -1,0 +1,111 @@
+"""Thread-level load balancing: greedy allocation + iterative local diffusion.
+
+Sec. 2.3 of the paper: rows are divided between workers so that each worker
+owns an approximately equal number of *non-zeros* rather than an equal number
+of rows.  "The method ... starts with an initial greedy allocation, where each
+worker thread receives a block of continuous rows.  This is followed by an
+iterative local diffusion algorithm, which further balances the number of
+non-zeros allocated to each thread."
+
+The partition is computed once on the host after assembly and cached with the
+matrix (the stencil never changes during a solve), so its cost is irrelevant
+to the steady-state SpMV rate.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "partition_equal_rows",
+    "partition_greedy_nnz",
+    "diffuse_nnz",
+    "partition_balanced",
+    "imbalance",
+]
+
+
+def partition_equal_rows(n_rows: int, nbins: int) -> np.ndarray:
+    """Equal-rows partition — the `omp parallel for` / vector-mode analogue.
+
+    Returns bounds (nbins+1,) with bounds[0]==0 and bounds[-1]==n_rows.
+    """
+    return np.linspace(0, n_rows, nbins + 1).round().astype(np.int64)
+
+
+def partition_greedy_nnz(row_nnz: np.ndarray, nbins: int) -> np.ndarray:
+    """Greedy contiguous allocation: advance each boundary until the
+    cumulative nnz reaches the next multiple of total/nbins."""
+    row_nnz = np.asarray(row_nnz, dtype=np.int64)
+    n = len(row_nnz)
+    cum = np.concatenate([[0], np.cumsum(row_nnz)])
+    total = cum[-1]
+    bounds = np.zeros(nbins + 1, dtype=np.int64)
+    bounds[-1] = n
+    for t in range(1, nbins):
+        target = total * t / nbins
+        # first row index where cumulative nnz >= target
+        bounds[t] = np.searchsorted(cum, target, side="left")
+    # enforce monotonicity (degenerate rows with zero nnz)
+    bounds = np.maximum.accumulate(bounds)
+    bounds = np.minimum(bounds, n)
+    for t in range(1, nbins + 1):  # every bin keeps >= 0 rows; clamp order
+        bounds[t] = max(bounds[t], bounds[t - 1])
+    return bounds
+
+
+def imbalance(row_nnz: np.ndarray, bounds: np.ndarray) -> float:
+    """max/mean nnz per bin — 1.0 is perfect balance."""
+    row_nnz = np.asarray(row_nnz, dtype=np.int64)
+    loads = np.array([row_nnz[bounds[t]:bounds[t + 1]].sum()
+                      for t in range(len(bounds) - 1)], dtype=np.float64)
+    mean = loads.mean() if len(loads) else 1.0
+    return float(loads.max() / mean) if mean > 0 else 1.0
+
+
+def diffuse_nnz(row_nnz: np.ndarray, bounds: np.ndarray,
+                max_sweeps: int = 100) -> np.ndarray:
+    """Iterative local diffusion: for each interior boundary, shift it by one
+    row towards the heavier neighbour while that reduces the pairwise
+    |nnz_left - nnz_right| difference.  Converges to a local optimum of the
+    pairwise imbalance; cheap because only boundary rows move.
+    """
+    row_nnz = np.asarray(row_nnz, dtype=np.int64)
+    bounds = np.asarray(bounds, dtype=np.int64).copy()
+    nbins = len(bounds) - 1
+    loads = np.array([row_nnz[bounds[t]:bounds[t + 1]].sum()
+                      for t in range(nbins)], dtype=np.int64)
+    for _ in range(max_sweeps):
+        moved = False
+        for t in range(1, nbins):
+            # boundary between bin t-1 and bin t sits at row bounds[t]
+            while True:
+                diff = loads[t - 1] - loads[t]
+                if diff > 0 and bounds[t] > bounds[t - 1]:
+                    # left heavier: move last row of bin t-1 into bin t
+                    w = row_nnz[bounds[t] - 1]
+                    if abs(diff - 2 * w) < abs(diff) and w >= 0:
+                        bounds[t] -= 1
+                        loads[t - 1] -= w
+                        loads[t] += w
+                        moved = True
+                        continue
+                elif diff < 0 and bounds[t] < bounds[t + 1]:
+                    # right heavier: move first row of bin t into bin t-1
+                    w = row_nnz[bounds[t]]
+                    if abs(diff + 2 * w) < abs(diff):
+                        bounds[t] += 1
+                        loads[t - 1] += w
+                        loads[t] -= w
+                        moved = True
+                        continue
+                break
+        if not moved:
+            break
+    return bounds
+
+
+def partition_balanced(row_nnz: np.ndarray, nbins: int,
+                       max_sweeps: int = 100) -> np.ndarray:
+    """The paper's full scheme: greedy + diffusion."""
+    bounds = partition_greedy_nnz(row_nnz, nbins)
+    return diffuse_nnz(row_nnz, bounds, max_sweeps=max_sweeps)

@@ -1,0 +1,367 @@
+"""Hybrid hierarchical-parallel distributed SpMV — the paper's contribution.
+
+PETSc's MPIAIJ SpMV runs in two phases (paper Sec. 1.1):
+  1. diagonal block x local vector, while remote vector elements are gathered;
+  2. off-diagonal block x gathered ghost elements, added to the partial result.
+
+The hybrid MPI/OpenMP hierarchy maps onto a 2-D device mesh:
+
+  ``node`` axis  — MPI-rank analogue.  Block rows of A are distributed over
+                   ``node``; the input vector is likewise row-distributed and
+                   ghost entries are exchanged with a static halo plan
+                   (one fused ``all_to_all``; see ``repro.core.halo``).
+  ``core`` axis  — OpenMP-thread analogue.  Rows *within* a node group are
+                   subdivided over ``core`` with **no halo communication**;
+                   the node-local input slice is assembled by an intra-group
+                   ``all_gather`` (the shared-memory read analogue).
+
+Three algorithm modes, exactly as benchmarked in the paper (Sec. 2, Fig. 2):
+
+  ``vector``    equal-*rows* split over cores, and the ghost exchange is
+                *serialised* before the diagonal multiply (an
+                ``optimization_barrier`` pins the schedule) — modelling
+                master-only comm with no true asynchronous progress.
+  ``task``      same row split, but the exchange and the diagonal multiply
+                are data-independent in the HLO, so the XLA latency-hiding
+                scheduler overlaps them — the task-based comm/compute overlap.
+  ``balanced``  ``task`` + the greedy+diffusion **nnz-balanced** partition of
+                rows over cores (paper Sec. 2.3).  On TPU this also minimises
+                static-shape padding, so balance == less wasted compute.
+
+The per-(node,core) local multiply runs either as vectorised jnp (``jnp``
+backend) or through the Pallas TPU kernel (``pallas`` backend,
+``repro.kernels.spmv_bcsr``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.halo import HaloPlan, build_halo_plan
+from repro.core.partition import (partition_balanced, partition_equal_rows)
+from repro.sparse.csr import CSRMatrix
+
+__all__ = ["SpMVPlan", "build_spmv_plan", "make_spmv", "MODES"]
+
+MODES = ("vector", "task", "balanced")
+
+
+def _align_up(v: int, a: int) -> int:
+    return int(max(a, -(-int(v) // a) * a))
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["diag_cols", "diag_vals", "offd_cols", "offd_vals",
+                      "send_idx", "recv_scatter", "x_gather", "y_local_rows",
+                      "diag_a", "mask"],
+         meta_fields=["n", "n_node", "n_core", "rc_pad", "nl_pad", "g_pad",
+                      "hc", "mode"])
+@dataclasses.dataclass
+class SpMVPlan:
+    """Device-ready distributed matrix + halo plan (a pytree).
+
+    Leading axes of every data field are (n_node, n_core, ...) so that
+    ``shard_map`` with ``P('node', 'core')`` assigns one slice per device.
+    Vectors in "CG layout" are (n_node, n_core, rc_pad).
+    """
+
+    # local ELL blocks, one per (node, core) shard
+    diag_cols: jax.Array   # (n_node, n_core, rc_pad, wd) int32 -> node-local col
+    diag_vals: jax.Array   # (n_node, n_core, rc_pad, wd)
+    offd_cols: jax.Array   # (n_node, n_core, rc_pad, wo) int32 -> ghost-local col
+    offd_vals: jax.Array   # (n_node, n_core, rc_pad, wo)
+    # halo plan
+    send_idx: jax.Array     # (n_node, n_core, n_node, hc) int32
+    recv_scatter: jax.Array  # (n_node, n_core, n_node, hc) int32
+    # vector layout maps
+    x_gather: jax.Array     # (n_node, n_core, nl_pad) int32 (replicated on core)
+    y_local_rows: jax.Array  # (n_node, n_core, rc_pad) int32 first-row offsets (diag extraction)
+    diag_a: jax.Array       # (n_node, n_core, rc_pad) diag(A) in CG layout (1 at pad)
+    mask: jax.Array         # (n_node, n_core, rc_pad) 1.0 valid / 0.0 padding
+    # static meta
+    n: int
+    n_node: int
+    n_core: int
+    rc_pad: int
+    nl_pad: int
+    g_pad: int
+    hc: int
+    mode: str
+
+    # ------------------------------------------------------------------ #
+    @property
+    def cg_shape(self) -> tuple[int, int, int]:
+        return (self.n_node, self.n_core, self.rc_pad)
+
+    def nnz_stored(self) -> int:
+        return int(self.diag_cols.size + self.offd_cols.size)
+
+
+# ---------------------------------------------------------------------- #
+# host-side plan construction (one-off, cached with the matrix)
+# ---------------------------------------------------------------------- #
+def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
+                    mode: str = "balanced", dtype=jnp.float32,
+                    rows_align: int = 8, width_align: int = 1) -> tuple[SpMVPlan, dict]:
+    """Partition ``A``, split diag/offdiag, build ELL blocks + halo plan.
+
+    Returns (plan, layout) where ``layout`` carries the host-side index
+    arrays needed by ``to_dist`` / ``from_dist``.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    n = A.n_rows
+    node_bounds = partition_equal_rows(n, n_node)
+
+    diag_blocks: list[list[CSRMatrix]] = []
+    offd_blocks: list[list[CSRMatrix]] = []
+    ghost_cols: list[np.ndarray] = []
+    core_bounds_all: list[np.ndarray] = []
+
+    for i in range(n_node):
+        lo, hi = int(node_bounds[i]), int(node_bounds[i + 1])
+        Ai = A.row_slice(lo, hi)
+        diag_i, offd_i, ghosts = Ai.col_split(lo, hi)
+        ghost_cols.append(ghosts)
+        if mode == "balanced":
+            cb = partition_balanced(Ai.row_nnz, n_core)
+        else:
+            cb = partition_equal_rows(Ai.n_rows, n_core)
+        core_bounds_all.append(cb)
+        diag_blocks.append([diag_i.row_slice(int(cb[c]), int(cb[c + 1]))
+                            for c in range(n_core)])
+        offd_blocks.append([offd_i.row_slice(int(cb[c]), int(cb[c + 1]))
+                            for c in range(n_core)])
+
+    # uniform static shapes across every (node, core) shard
+    rc_pad = _align_up(max(int(cb[c + 1] - cb[c])
+                           for cb in core_bounds_all for c in range(n_core)),
+                       rows_align)
+    nl_pad = _align_up(max(int(node_bounds[i + 1] - node_bounds[i])
+                           for i in range(n_node)), rows_align)
+    wd = _align_up(max((int(b.row_nnz.max()) if b.n_rows and b.nnz else 1
+                        for row in diag_blocks for b in row), default=1),
+                   width_align)
+    wo = _align_up(max((int(b.row_nnz.max()) if b.n_rows and b.nnz else 1
+                        for row in offd_blocks for b in row), default=1),
+                   width_align)
+
+    from repro.sparse.csr import ell_arrays_from_csr
+
+    def stack_ell(blocks, width):
+        cols = np.zeros((n_node, n_core, rc_pad, width), dtype=np.int32)
+        vals = np.zeros((n_node, n_core, rc_pad, width), dtype=np.float64)
+        for i in range(n_node):
+            for c in range(n_core):
+                cols[i, c], vals[i, c] = ell_arrays_from_csr(
+                    blocks[i][c], width=width, n_rows_pad=rc_pad)
+        return cols, vals
+
+    diag_cols, diag_vals = stack_ell(diag_blocks, wd)
+    offd_cols, offd_vals = stack_ell(offd_blocks, wo)
+
+    halo: HaloPlan = build_halo_plan(ghost_cols, node_bounds, n_core)
+
+    # x_gather: node-local row r -> flat index into (n_core * rc_pad)
+    x_gather = np.zeros((n_node, n_core, nl_pad), dtype=np.int32)
+    mask = np.zeros((n_node, n_core, rc_pad), dtype=np.float64)
+    diag_a = np.ones((n_node, n_core, rc_pad), dtype=np.float64)
+    y_rows = np.zeros((n_node, n_core, rc_pad), dtype=np.int32)
+    # host layout maps for to_dist / from_dist
+    global_row_of = np.full((n_node, n_core, rc_pad), -1, dtype=np.int64)
+
+    diag_full = A.diagonal()
+    for i in range(n_node):
+        lo = int(node_bounds[i])
+        cb = core_bounds_all[i]
+        gather_i = np.zeros(nl_pad, dtype=np.int32)
+        for c in range(n_core):
+            blo, bhi = int(cb[c]), int(cb[c + 1])
+            nrows = bhi - blo
+            gather_i[blo:bhi] = c * rc_pad + np.arange(nrows)
+            mask[i, c, :nrows] = 1.0
+            diag_a[i, c, :nrows] = diag_full[lo + blo: lo + bhi]
+            y_rows[i, c, :nrows] = np.arange(blo, bhi)
+            global_row_of[i, c, :nrows] = lo + blo + np.arange(nrows)
+        x_gather[i, :] = gather_i[None, :]
+
+    # neighbour structure (for the ring transport): which (dst - src) mod n
+    # offsets actually carry halo traffic.  Contiguous partitions of banded
+    # (extrusion-ordered) matrices touch only a few neighbours.
+    pair_counts = np.zeros((n_node, n_node), dtype=np.int64)
+    for dst in range(n_node):
+        g = np.asarray(ghost_cols[dst], dtype=np.int64)
+        if g.size:
+            owner = np.searchsorted(node_bounds, g, side="right") - 1
+            for src in owner:
+                pair_counts[dst, src] += 1
+    offsets = sorted({int((dst - src) % n_node)
+                      for dst in range(n_node) for src in range(n_node)
+                      if pair_counts[dst, src] > 0})
+
+    plan = SpMVPlan(
+        diag_cols=jnp.asarray(diag_cols),
+        diag_vals=jnp.asarray(diag_vals, dtype=dtype),
+        offd_cols=jnp.asarray(offd_cols),
+        offd_vals=jnp.asarray(offd_vals, dtype=dtype),
+        send_idx=jnp.asarray(halo.send_idx),
+        recv_scatter=jnp.asarray(halo.recv_scatter),
+        x_gather=jnp.asarray(x_gather),
+        y_local_rows=jnp.asarray(y_rows),
+        diag_a=jnp.asarray(diag_a, dtype=dtype),
+        mask=jnp.asarray(mask, dtype=dtype),
+        n=n, n_node=n_node, n_core=n_core,
+        rc_pad=rc_pad, nl_pad=nl_pad, g_pad=halo.g_pad, hc=halo.h_per_core,
+        mode=mode,
+    )
+    layout = {
+        "node_bounds": node_bounds,
+        "core_bounds": core_bounds_all,
+        "global_row_of": global_row_of,
+        "halo": halo,
+        "neighbor_offsets": offsets,
+        "pair_counts": pair_counts,
+    }
+    return plan, layout
+
+
+# ---------------------------------------------------------------------- #
+# vector layout conversion (host)
+# ---------------------------------------------------------------------- #
+def to_dist(v: np.ndarray, layout: dict, plan: SpMVPlan,
+            dtype=None) -> jax.Array:
+    g = layout["global_row_of"]
+    out = np.zeros(plan.cg_shape, dtype=np.asarray(v).dtype)
+    valid = g >= 0
+    out[valid] = np.asarray(v)[g[valid]]
+    return jnp.asarray(out, dtype=dtype or plan.diag_vals.dtype)
+
+
+def from_dist(vd: jax.Array, layout: dict, plan: SpMVPlan) -> np.ndarray:
+    g = layout["global_row_of"]
+    vd = np.asarray(vd)
+    out = np.zeros(plan.n, dtype=vd.dtype)
+    valid = g >= 0
+    out[g[valid]] = vd[valid]
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# the distributed SpMV itself
+# ---------------------------------------------------------------------- #
+def _ell_matvec(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
+    """Local padded-row SpMV: (R, W) x (N,) -> (R,)."""
+    return jnp.einsum("rk,rk->r", vals, x[cols].astype(vals.dtype))
+
+
+def make_spmv(plan: SpMVPlan, mesh: jax.sharding.Mesh,
+              axis_names: tuple[str, str] = ("node", "core"),
+              backend: str = "jnp", transport: str = "a2a",
+              neighbor_offsets: list[int] | None = None):
+    """Build the jitted distributed SpMV: (n_node, n_core, rc_pad) -> same.
+
+    ``backend``: 'jnp' (vectorised gather ELL) or 'pallas' (TPU kernel via
+    ``repro.kernels``; interpret-mode on CPU).
+
+    ``transport``: 'a2a' — one fused all_to_all (PETSc VecScatter analogue);
+    'ring' — one ppermute per populated neighbour offset (beyond-paper:
+    each hop is independent of the diagonal multiply AND of the other hops,
+    giving the scheduler strictly finer-grained overlap; only valid when
+    ``neighbor_offsets`` covers every populated (dst-src) offset, e.g.
+    banded extrusion-ordered matrices with contiguous partitions).
+    """
+    node_ax, core_ax = axis_names
+    mode = plan.mode
+    if transport == "ring" and not neighbor_offsets:
+        raise ValueError("ring transport needs layout['neighbor_offsets']")
+
+    if backend == "pallas":
+        from repro.kernels.ops import ell_spmv as _kernel_matvec
+    elif backend != "jnp":
+        raise ValueError(f"unknown backend {backend!r}")
+
+    def local_matvec(vals, cols, x):
+        if backend == "pallas":
+            return _kernel_matvec(vals, cols, x)
+        return _ell_matvec(vals, cols, x)
+
+    def shard_fn(diag_cols, diag_vals, offd_cols, offd_vals,
+                 send_idx, recv_scatter, x_gather, xd):
+        # strip the leading (1, 1, ...) shard dims
+        diag_cols, diag_vals = diag_cols[0, 0], diag_vals[0, 0]
+        offd_cols, offd_vals = offd_cols[0, 0], offd_vals[0, 0]
+        send_idx = send_idx[0, 0]
+        recv_scatter = recv_scatter[0]          # (n_core, n_node, hc) full table
+        x_gather = x_gather[0, 0]
+        x_mine = xd[0, 0]                       # (rc_pad,) my row bin of x
+
+        # -- shared-memory read analogue: assemble the node-local x slice --
+        x_bins = jax.lax.all_gather(x_mine, core_ax, axis=0)  # (n_core, rc_pad)
+        x_local = x_bins.reshape(-1)[x_gather]                # (nl_pad,)
+
+        # -- VecScatter analogue: halo exchange over the node axis --
+        x_ghost = jnp.zeros(plan.g_pad + 1, dtype=x_local.dtype)
+        if transport == "a2a":
+            send_buf = x_local[send_idx]                      # (n_node, hc)
+            recv = jax.lax.all_to_all(send_buf, node_ax,
+                                      split_axis=0, concat_axis=0)
+            # cores exchanged 1/n_core of the halo each; assemble in-node
+            recv_all = jax.lax.all_gather(recv, core_ax, axis=0)
+            x_ghost = x_ghost.at[recv_scatter.reshape(-1)].set(
+                recv_all.reshape(-1))
+        else:  # ring: one independent ppermute per populated offset
+            n = plan.n_node
+            me = jax.lax.axis_index(node_ax)
+            for d in neighbor_offsets:
+                # I am src for dst = me + d; I receive from src = me - d
+                dst_row = (me + d) % n
+                send = jnp.take(send_idx, dst_row, axis=0)     # (hc,)
+                perm = [(i, (i + d) % n) for i in range(n)]
+                got = jax.lax.ppermute(x_local[send], node_ax, perm)
+                got_all = jax.lax.all_gather(got, core_ax, axis=0)
+                src_row = (me - d) % n
+                scat = jnp.take(recv_scatter, src_row, axis=1)  # (n_core, hc)
+                x_ghost = x_ghost.at[scat.reshape(-1)].set(
+                    got_all.reshape(-1))
+
+        if mode == "vector":
+            # master-only comm: no asynchronous progress — the diagonal
+            # multiply must wait for the exchange to finish.
+            x_local, x_ghost = jax.lax.optimization_barrier((x_local, x_ghost))
+
+        # -- phase 1: diagonal block x local vector (overlaps the exchange
+        #    in task/balanced mode: no data dependence on x_ghost) --
+        y = local_matvec(diag_vals, diag_cols, x_local)
+        # -- phase 2: off-diagonal block x ghost elements --
+        y = y + local_matvec(offd_vals, offd_cols, x_ghost)
+        return y[None, None]                   # (1, 1, rc_pad)
+
+    spec = P(node_ax, core_ax)
+    node_spec = P(node_ax)
+    try:
+        fn = jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(spec, spec, spec, spec, spec, node_spec, spec, spec),
+            out_specs=spec,
+            check_vma=False,
+        )
+    except TypeError:  # older shard_map spelling
+        fn = jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(spec, spec, spec, spec, spec, node_spec, spec, spec),
+            out_specs=spec,
+            check_rep=False,
+        )
+
+    @jax.jit
+    def spmv(xd: jax.Array) -> jax.Array:
+        return fn(plan.diag_cols, plan.diag_vals, plan.offd_cols,
+                  plan.offd_vals, plan.send_idx, plan.recv_scatter,
+                  plan.x_gather, xd)
+
+    return spmv

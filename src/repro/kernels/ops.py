@@ -1,0 +1,56 @@
+"""Jit'd public wrappers around the Pallas SpMV kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels target TPU and are validated through the interpreter, per the
+project brief).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmv_bcsr import balanced_spmv_pallas, ell_spmv_pallas
+
+__all__ = ["ell_spmv", "balanced_spmv", "default_interpret"]
+
+
+@functools.cache
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _align_up(v: int, a: int) -> int:
+    return int(max(a, -(-int(v) // a) * a))
+
+
+def ell_spmv(vals: jax.Array, cols: jax.Array, x: jax.Array,
+             row_tile: int = 256, interpret: bool | None = None) -> jax.Array:
+    """Row-tiled ELL SpMV; pads the row count to the tile size."""
+    rows = vals.shape[0]
+    row_tile = min(row_tile, _align_up(rows, 8))
+    rows_pad = _align_up(rows, row_tile)
+    if rows_pad != rows:
+        pad = ((0, rows_pad - rows), (0, 0))
+        vals = jnp.pad(vals, pad)
+        cols = jnp.pad(cols, pad)
+    y = ell_spmv_pallas(vals, cols, x, row_tile=row_tile,
+                        interpret=default_interpret() if interpret is None
+                        else interpret)
+    return y[:rows]
+
+
+def balanced_spmv(bcoo, x: jax.Array, nnz_chunk: int = 512,
+                  interpret: bool | None = None) -> jax.Array:
+    """Full BalancedCOO SpMV -> flat (n_rows,) float32."""
+    nnz_pad = bcoo.vals.shape[1]
+    # nnz_pad is aligned to 128 at construction; pick a dividing chunk
+    chunk = min(nnz_chunk, nnz_pad)
+    while nnz_pad % chunk:
+        chunk //= 2
+    y_binned = balanced_spmv_pallas(
+        bcoo.vals, bcoo.cols, bcoo.lrows, x, rows_pad=bcoo.rows_pad,
+        nnz_chunk=chunk,
+        interpret=default_interpret() if interpret is None else interpret)
+    return y_binned.reshape(-1)[bcoo.out_gather]

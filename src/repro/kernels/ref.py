@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ell_spmv_ref", "balanced_spmv_ref", "binned_matvec_ref"]
+
+
+def ell_spmv_ref(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
+    """Padded-row SpMV oracle: y[r] = sum_k vals[r,k] * x[cols[r,k]].
+
+    Padding entries carry vals == 0, so they contribute nothing.
+    Accumulates in float32 regardless of storage dtype.
+    """
+    g = jnp.take(x, cols, axis=0).astype(jnp.float32)
+    return jnp.einsum("rk,rk->r", vals.astype(jnp.float32), g)
+
+
+def binned_matvec_ref(vals: jax.Array, cols: jax.Array, lrows: jax.Array,
+                      x: jax.Array, rows_pad: int) -> jax.Array:
+    """nnz-binned COO SpMV oracle.
+
+    vals/cols/lrows: (nbins, nnz_pad); returns (nbins, rows_pad).
+    """
+    contrib = vals.astype(jnp.float32) * jnp.take(x, cols, axis=0).astype(jnp.float32)
+
+    def one_bin(c, lr):
+        return jax.ops.segment_sum(c, lr, num_segments=rows_pad)
+
+    return jax.vmap(one_bin)(contrib, lrows)
+
+
+def balanced_spmv_ref(bcoo, x: jax.Array) -> jax.Array:
+    """Full BalancedCOO SpMV oracle: returns the flat (n_rows,) result."""
+    y_binned = binned_matvec_ref(bcoo.vals, bcoo.cols, bcoo.lrows, x,
+                                 bcoo.rows_pad)
+    return y_binned.reshape(-1)[bcoo.out_gather]

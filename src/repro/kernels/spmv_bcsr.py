@@ -1,0 +1,134 @@
+"""Pallas TPU kernels for sparse matrix-vector multiplication.
+
+Two kernels implement the paper's two threading models, adapted from CPU
+threads to the TPU grid:
+
+``ell_spmv_kernel``
+    "vector-based threading": the grid splits *rows* equally (a row tile per
+    grid step).  Gather of input-vector elements uses Mosaic's dynamic
+    gather (``jnp.take`` on a VMEM-resident vector).
+
+``balanced_spmv_kernel``
+    "task-based + thread-balanced": the grid iterates over *nnz-balanced
+    bins* (greedy + diffusion partition, computed once on the host and
+    cached with the matrix — paper Sec. 2.3).  Every grid step touches the
+    same number of stored nonzeros, so the static-shape padding waste — the
+    TPU analogue of thread load imbalance — is minimised.  The in-bin
+    segmented reduction is expressed as a one-hot matmul so it runs on the
+    MXU (the TPU-native substitute for scatter-add, which Mosaic does not
+    support).
+
+Hardware adaptation notes (see DESIGN.md):
+  * CPU threads pin to cores; TPU grid steps are sequential per core but the
+    VPU/MXU parallelism inside a step plays the role of the thread team.
+    Load balance across *grid steps* still matters because the padded shape
+    (nnz_pad) is sized by the heaviest bin — balance = smaller nnz_pad =
+    less wasted VMEM bandwidth and fewer wasted MXU cycles.
+  * The input vector x is kept VMEM-resident per grid step.  In the
+    distributed setting (repro.core.spmv) x is the *node-local* slice, whose
+    size is bounded by n / n_node — the hierarchical decomposition is what
+    makes the working set fit VMEM (the paper's NUMA-alignment argument,
+    transposed to the HBM->VMEM hierarchy).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ell_spmv_pallas", "balanced_spmv_pallas"]
+
+
+# --------------------------------------------------------------------- #
+# vector-mode kernel: equal-rows tiles
+# --------------------------------------------------------------------- #
+def _ell_kernel(cols_ref, vals_ref, x_ref, y_ref):
+    vals = vals_ref[...]                       # (rt, w)
+    cols = cols_ref[...]                       # (rt, w) int32
+    x = x_ref[...]                             # (n,)
+    g = jnp.take(x, cols.reshape(-1), axis=0).reshape(cols.shape)
+    y_ref[...] = jnp.sum(vals.astype(jnp.float32) * g.astype(jnp.float32),
+                         axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
+def ell_spmv_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
+                    row_tile: int = 256, interpret: bool = True) -> jax.Array:
+    """y = A @ x for ELL-packed A.  vals/cols: (rows_pad, w); x: (n,).
+
+    rows_pad must be a multiple of ``row_tile`` (the wrapper in ops.py pads).
+    """
+    rows_pad, w = vals.shape
+    assert rows_pad % row_tile == 0, (rows_pad, row_tile)
+    grid = (rows_pad // row_tile,)
+    return pl.pallas_call(
+        _ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, w), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, w), lambda i: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0,)),     # full x each step
+        ],
+        out_specs=pl.BlockSpec((row_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad,), jnp.float32),
+        interpret=interpret,
+    )(cols, vals, x)
+
+
+# --------------------------------------------------------------------- #
+# balanced-mode kernel: nnz-balanced bins, one-hot MXU segmented sum
+# --------------------------------------------------------------------- #
+def _balanced_kernel(vals_ref, cols_ref, lrows_ref, x_ref, y_ref, *,
+                     rows_pad: int, nnz_chunk: int):
+    vals = vals_ref[...][0]                    # (nnz_pad,)
+    cols = cols_ref[...][0]
+    lrows = lrows_ref[...][0]
+    x = x_ref[...]
+    nnz_pad = vals.shape[0]
+    n_chunks = nnz_pad // nnz_chunk
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (1, rows_pad), 1)
+
+    def body(k, acc):
+        off = (k * nnz_chunk,)
+        v = jax.lax.dynamic_slice(vals, off, (nnz_chunk,)).astype(jnp.float32)
+        c = jax.lax.dynamic_slice(cols, off, (nnz_chunk,))
+        lr = jax.lax.dynamic_slice(lrows, off, (nnz_chunk,))
+        contrib = (v * jnp.take(x, c, axis=0).astype(jnp.float32))
+        # segmented sum on the MXU: (1, nnz_chunk) @ (nnz_chunk, rows_pad)
+        onehot = (lr[:, None] == row_ids).astype(jnp.float32)
+        return acc + jax.lax.dot_general(
+            contrib[None, :], onehot,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[0]
+
+    y_ref[...] = jax.lax.fori_loop(0, n_chunks, body,
+                                   jnp.zeros((rows_pad,), jnp.float32))[None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rows_pad", "nnz_chunk", "interpret"))
+def balanced_spmv_pallas(vals: jax.Array, cols: jax.Array, lrows: jax.Array,
+                         x: jax.Array, rows_pad: int,
+                         nnz_chunk: int = 512,
+                         interpret: bool = True) -> jax.Array:
+    """Binned SpMV: vals/cols/lrows (nbins, nnz_pad) -> y (nbins, rows_pad)."""
+    nbins, nnz_pad = vals.shape
+    nnz_chunk = min(nnz_chunk, nnz_pad)
+    assert nnz_pad % nnz_chunk == 0, (nnz_pad, nnz_chunk)
+    kernel = functools.partial(_balanced_kernel, rows_pad=rows_pad,
+                               nnz_chunk=nnz_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(nbins,),
+        in_specs=[
+            pl.BlockSpec((1, nnz_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, nnz_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, nnz_pad), lambda i: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, rows_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbins, rows_pad), jnp.float32),
+        interpret=interpret,
+    )(vals, cols, lrows, x)

@@ -1,0 +1,405 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch x shape x mesh)
+cell and extract memory / cost / collective statistics for the roofline.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init).  This module is the ONLY place the 512 fake devices
+exist; smoke tests and benchmarks see the real single CPU device.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--jobs 4]     # full 40-cell sweep x2
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import cache_specs, input_specs, opt_specs, param_specs
+from repro.models.model import decode_step, loss_fn, prefill
+from repro.optim.adamw import AdamWConfig, apply_updates
+from repro.runtime.sharding import (batch_pspecs, cache_pspecs, named,
+                                    param_pspecs)
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+ARCHS = ["yi-34b", "stablelm-1.6b", "qwen2.5-3b", "granite-3-8b",
+         "chameleon-34b", "xlstm-350m", "granite-moe-3b-a800m",
+         "qwen3-moe-30b-a3b", "zamba2-1.2b", "whisper-large-v3"]
+
+# hardware constants: TPU v5e (target platform)
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+HBM_BYTES = 16e9          # per chip
+
+_COLL_RE = re.compile(
+    r"(\ball(?:-reduce|-gather|-to-all)(?:-start)?\b|"
+    r"\breduce-scatter\b|\bcollective-permute(?:-start)?\b)")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def skip_reason(arch: str, shape_name: str) -> str | None:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch: 500k-context decode requires "
+                "sub-quadratic attention (DESIGN.md §Arch-applicability)")
+    return None
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device wire bytes of every collective in the compiled HLO,
+    using ring-algorithm formulas per op kind."""
+    stats = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+             "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(stats, 0)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "= " not in line:
+            continue
+        kind = m.group(1).replace("-start", "")
+        lhs = line.split("= ", 1)[0]
+        result = line.split("= ", 1)[1]
+        # bytes of the result shape(s) that precede the op name
+        head = result.split(m.group(1))[0]
+        nbytes = 0
+        for d, dims in _SHAPE_RE.findall(head):
+            n = 1
+            for x in dims.split(","):
+                if x:
+                    n *= int(x)
+            nbytes += _DTYPE_BYTES[d] * n
+        g = 2
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        if g <= 1:
+            continue
+        if kind == "all-reduce":
+            wire = 2 * nbytes * (g - 1) / g
+        elif kind == "all-gather":
+            wire = nbytes * (g - 1) / g            # result is gathered size
+        elif kind == "reduce-scatter":
+            wire = nbytes * (g - 1)                # result is scattered size
+        elif kind == "all-to-all":
+            wire = nbytes * (g - 1) / g
+        else:                                      # collective-permute
+            wire = nbytes
+        stats[kind] += wire
+        counts[kind] += 1
+    return {"bytes": stats, "counts": counts,
+            "total_bytes": sum(stats.values())}
+
+
+def _depth_variants(cfg):
+    """(cfg_small, cfg_big, units_small, units_big, units_full) for the
+    scan-body cost extrapolation: XLA's cost_analysis counts a scan body
+    ONCE, so per-layer costs are recovered from two shallow compiles and
+    extrapolated linearly to the full depth."""
+    import dataclasses
+    # cost-exact mode: unroll the layer scan (cost_analysis counts a rolled
+    # scan body once).  Flash-attention tile loops are python-unrolled in
+    # the implementation itself, and the SSD/mLSTM chunk scans only carry
+    # small summary states (their big einsums are outside the scan), so
+    # chunked costs are counted faithfully.
+    exact = dict(layer_unroll=True)
+    if cfg.block_pattern == "xlstm":
+        per = 8
+        return (dataclasses.replace(cfg, n_layers=per, **exact),
+                dataclasses.replace(cfg, n_layers=2 * per, **exact),
+                1, 2, cfg.n_layers // per)
+    if cfg.block_pattern == "zamba":
+        # 6k+2 structure: one period + tail vs two periods + tail
+        return (dataclasses.replace(cfg, n_layers=8, **exact),
+                dataclasses.replace(cfg, n_layers=14, **exact),
+                1, 2, (cfg.n_layers - 2) // 6)
+    return (dataclasses.replace(cfg, n_layers=1, **exact),
+            dataclasses.replace(cfg, n_layers=2, **exact),
+            1, 2, cfg.n_layers)
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool, cfg=None,
+               accum_override: int | None = None, strategy: str | None = None,
+               remat_policy: str | None = None):
+    import dataclasses
+    cfg = cfg or get_config(arch)
+    if strategy:
+        cfg = dataclasses.replace(cfg, shard_strategy=strategy)
+    if remat_policy:
+        cfg = dataclasses.replace(cfg, remat_policy=remat_policy)
+    if os.environ.get("DRYRUN_LAYER_UNROLL"):
+        cfg = dataclasses.replace(cfg, layer_unroll=True)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    serving = shape.kind != "train"
+    pspecs_tree = param_specs(cfg)
+    if serving:
+        # inference weights: bf16, replicated over the batch axes (no
+        # optimizer state to shard; re-gathering FSDP'd weights every
+        # decode step would be pure collective waste — §Perf P3)
+        pspecs_tree = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+            pspecs_tree)
+    psh = named(mesh, param_pspecs(cfg, mesh, pspecs_tree, serving=serving))
+    bspec = batch_pspecs(cfg, shape, mesh)
+    inputs = input_specs(cfg, shape)
+    adamw = AdamWConfig()
+
+    if shape.kind == "train":
+        osh = named(mesh, param_pspecs(cfg, mesh, param_specs(cfg)))
+        from repro.optim.adamw import OptState
+        opt_sh = OptState(m=osh, v=jax.tree.map(lambda x: x, osh),
+                          step=NamedSharding(mesh, P()))
+
+        # microbatch accumulation: keep <= 4 sequences resident per device
+        # (activation-memory lever at fixed global batch + total flops)
+        n_batch_shards = mesh.size if cfg.shard_strategy == "dp" \
+            else mesh.size // mesh.shape["model"]
+        per_dev = max(1, shape.global_batch // n_batch_shards)
+        accum = accum_override or max(1, per_dev // 4)
+
+        from repro.launch.train import make_train_step
+        step_impl = make_train_step(cfg, adamw, accum=accum)
+
+        def train_step(params, opt, batch):
+            params, opt, loss, _ = step_impl(params, opt, batch)
+            return params, opt, loss
+
+        args = (param_specs(cfg), opt_specs(param_specs(cfg)), inputs)
+        in_sh = (psh, opt_sh,
+                 named(mesh, {k: bspec[k] for k in inputs}))
+        fn = jax.jit(train_step, in_shardings=in_sh,
+                     out_shardings=(psh, opt_sh, NamedSharding(mesh, P())),
+                     donate_argnums=(0, 1))
+        return cfg, shape, mesh, fn, args
+
+    cspecs = cache_specs(cfg, shape)
+    csh = named(mesh, cache_pspecs(cfg, shape, mesh, cspecs))
+
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            def prefill_step(params, tokens, frames, cache):
+                return prefill(params, cfg, tokens, cache, frames=frames)
+            args = (pspecs_tree, inputs["tokens"], inputs["frames"],
+                    cspecs)
+            in_sh = (psh, NamedSharding(mesh, bspec["tokens"]),
+                     NamedSharding(mesh, bspec["frames"]), csh)
+        else:
+            def prefill_step(params, tokens, cache):
+                return prefill(params, cfg, tokens, cache)
+            args = (pspecs_tree, inputs["tokens"], cspecs)
+            in_sh = (psh, NamedSharding(mesh, bspec["tokens"]), csh)
+        fn = jax.jit(prefill_step, in_shardings=in_sh,
+                     donate_argnums=(len(args) - 1,))
+        return cfg, shape, mesh, fn, args
+
+    # decode
+    def serve_step(params, tokens, cache, pos):
+        return decode_step(params, cfg, tokens, cache, pos)
+
+    args = (pspecs_tree, inputs["tokens"], cspecs, inputs["pos"])
+    in_sh = (psh, NamedSharding(mesh, bspec["tokens"]), csh,
+             NamedSharding(mesh, bspec["pos"]))
+    fn = jax.jit(serve_step, in_shardings=in_sh, donate_argnums=(2,))
+    return cfg, shape, mesh, fn, args
+
+
+def _cell_costs(arch, shape_name, multi_pod, cfg, strategy=None,
+                remat_policy=None):
+    # accum=1: the microbatch scan body would be cost-counted once
+    _, _, mesh, fn, args = build_cell(arch, shape_name, multi_pod, cfg=cfg,
+                                      accum_override=1, strategy=strategy,
+                                      remat_policy=remat_policy)
+    with mesh:
+        compiled = fn.lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll["total_bytes"]))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             strategy: str | None = None,
+             remat_policy: str | None = None) -> dict:
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skip", "reason": reason}
+    t0 = time.time()
+    cfg, shape, mesh, fn, args = build_cell(arch, shape_name, multi_pod,
+                                            strategy=strategy,
+                                            remat_policy=remat_policy)
+    n_chips = mesh.size
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+
+    # scan-body extrapolation: compile two shallow variants to recover
+    # true per-layer flops/bytes/collectives (cost_analysis counts a scan
+    # body once regardless of trip count)
+    c_small, c_big, u1, u2, u_full = _depth_variants(cfg)
+    f1, b1, w1 = _cell_costs(arch, shape_name, multi_pod, c_small,
+                             strategy=strategy, remat_policy=remat_policy)
+    f2, b2, w2 = _cell_costs(arch, shape_name, multi_pod, c_big,
+                             strategy=strategy, remat_policy=remat_policy)
+    per_unit = ((f2 - f1) / (u2 - u1), (b2 - b1) / (u2 - u1),
+                (w2 - w1) / (u2 - u1))
+    flops_dev = f1 + per_unit[0] * (u_full - u1)
+    bytes_dev = b1 + per_unit[1] * (u_full - u1)
+    coll_dev = w1 + per_unit[2] * (u_full - u1)
+    # model flops (6ND dense / 6·N_active·D for MoE; decode: per generated token)
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * shape.global_batch
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+
+    arg_b = mem.argument_size_in_bytes
+    tmp_b = mem.temp_size_in_bytes
+    out_b = mem.output_size_in_bytes
+    alias_b = mem.alias_size_in_bytes
+    peak = arg_b + tmp_b + out_b - alias_b
+
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "per_device": {
+            "argument_bytes": arg_b, "temp_bytes": tmp_b,
+            "output_bytes": out_b, "alias_bytes": alias_b,
+            "peak_bytes": peak, "fits_hbm": bool(peak < HBM_BYTES),
+            "hlo_flops": flops_dev, "hlo_bytes": bytes_dev,
+            "collective_bytes": coll_dev,
+            "collective_counts": coll["counts"],
+            "collective_by_kind": coll["bytes"],
+            "raw_scanbody_flops": float(cost.get("flops", 0.0)),
+        },
+        "roofline": {
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "model_flops_global": model_flops,
+            "hlo_flops_global": flops_dev * n_chips,
+            "useful_flops_ratio": model_flops / max(flops_dev * n_chips, 1.0),
+        },
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default=None, help="tp|dp override")
+    ap.add_argument("--remat-policy", default=None,
+                    help="full|dots|none override")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.all:
+        return sweep(args.jobs, args.out or "dryrun_results.json")
+
+    res = run_cell(args.arch, args.shape, args.multi_pod,
+                   strategy=args.strategy, remat_policy=args.remat_policy)
+    js = json.dumps(res, indent=2)
+    print(js)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(js)
+    return 0 if res["status"] in ("ok", "skip") else 1
+
+
+def sweep(jobs: int, out: str) -> int:
+    """Run every cell in its own subprocess (isolation + parallelism)."""
+    cells = [(a, s, mp) for a in ARCHS for s in SHAPES for mp in
+             (False, True)]
+    results, procs = [], {}
+    cells_iter = iter(cells)
+
+    def launch(cell):
+        a, s, mp = cell
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", a, "--shape", s,
+               "--out", f"/tmp/dryrun_{a}_{s}_{int(mp)}.json"]
+        if mp:
+            cmd.append("--multi-pod")
+        return subprocess.Popen(cmd, stdout=subprocess.DEVNULL,
+                                stderr=subprocess.PIPE, text=True)
+
+    active = {}
+    try:
+        while active or True:
+            while len(active) < jobs:
+                try:
+                    cell = next(cells_iter)
+                except StopIteration:
+                    break
+                active[launch(cell)] = cell
+            if not active:
+                break
+            for p in list(active):
+                if p.poll() is not None:
+                    cell = active.pop(p)
+                    a, s, mp = cell
+                    f = f"/tmp/dryrun_{a}_{s}_{int(mp)}.json"
+                    if p.returncode == 0 and os.path.exists(f):
+                        results.append(json.load(open(f)))
+                    else:
+                        results.append({
+                            "arch": a, "shape": s,
+                            "mesh": "2x16x16" if mp else "16x16",
+                            "status": "error",
+                            "error": p.stderr.read()[-2000:]})
+                    r = results[-1]
+                    print(f"[{len(results)}/{len(cells)}] {a} x {s} x "
+                          f"{r['mesh']}: {r['status']}", flush=True)
+            time.sleep(2)
+    finally:
+        for p in active:
+            p.kill()
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = len(results) - n_ok - n_skip
+    print(f"ok={n_ok} skip={n_skip} error={n_err} -> {out}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state.  Shapes: single pod = (data=16, model=16) — 256 chips of a
+TPU v5e pod; multi-pod = (pod=2, data=16, model=16) = 512 chips.
+
+The SpMV/CG side reinterprets the same physical mesh as (node, core) — the
+paper's (MPI rank, OpenMP thread) hierarchy.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_cg_mesh", "make_host_mesh"]
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_cg_mesh(n_node: int, n_core: int):
+    """The hybrid (MPI x OpenMP) analogue mesh for the paper's benchmark."""
+    return _mk((n_node, n_core), ("node", "core"))
+
+
+def make_host_mesh(*, model: int | None = None):
+    """Best-effort mesh over whatever devices exist (examples / smoke)."""
+    n = len(jax.devices())
+    m = model or (2 if n % 2 == 0 and n > 1 else 1)
+    return _mk((n // m, m), ("data", "model"))

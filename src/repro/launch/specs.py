@@ -1,0 +1,51 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run never
+allocates memory for the full configs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.model import init_cache, init_params
+from repro.optim.adamw import init_opt
+
+__all__ = ["input_specs", "param_specs", "opt_specs", "cache_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.is_encdec:
+            out["frames"] = _sds((b, cfg.n_audio_frames, cfg.d_model),
+                                 jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.is_encdec:
+            out["frames"] = _sds((b, cfg.n_audio_frames, cfg.d_model),
+                                 jnp.bfloat16)
+        return out
+    if shape.kind == "decode":
+        # scalar position: synchronized decode wave (uniform lengths) — the
+        # per-batch ragged path exists for continuous batching on host
+        return {"tokens": _sds((b, 1), jnp.int32),
+                "pos": _sds((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def param_specs(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def opt_specs(param_tree):
+    return jax.eval_shape(init_opt, param_tree)
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))

@@ -1,0 +1,145 @@
+"""GQA attention layer (multi-query / grouped-query, RoPE, optional QK-norm,
+optional QKV bias) with train / prefill / decode entry points.
+
+Weights are stored 2-D with heads fused into the output dim so tensor
+parallelism shards the fused dim evenly even when head counts (e.g. Yi's 56)
+don't divide the mesh axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (cdtype, decode_attention, dense_init,
+                                 flash_attention, rms_norm, rope)
+
+__all__ = ["init_attention", "attention_train", "attention_prefill",
+           "attention_decode", "init_cache_layer"]
+
+
+def init_attention(key, cfg, cross: bool = False) -> dict:
+    d = cfg.d_model
+    dh = cfg.d_head
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, nq * dh)),
+        "wk": dense_init(ks[1], (d, nkv * dh)),
+        "wv": dense_init(ks[2], (d, nkv * dh)),
+        "wo": dense_init(ks[3], (nq * dh, d), scale=1.0 / (nq * dh) ** 0.5),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((nq * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((nkv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((nkv * dh,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions, use_rope=True):
+    B, S, _ = x.shape
+    dh, nq, nkv = cfg.d_head, cfg.n_heads, cfg.n_kv_heads
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, S, nq, dh)
+    k = k.reshape(B, S, nkv, dh)
+    v = v.reshape(B, S, nkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_train(p, cfg, x, *, causal: bool = True, use_rope: bool = True,
+                    kv_source=None, chunk_q: int | None = None,
+                    chunk_k: int | None = None):
+    """Full-sequence attention (training / encoder).  x: (B, S, d).
+
+    ``kv_source``: if given, keys/values come from this tensor instead
+    (cross-attention); no RoPE is applied to cross-attention."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    if kv_source is None:
+        q, k, v = _project_qkv(p, cfg, x, positions, use_rope)
+    else:
+        q, _, _ = _project_qkv(p, cfg, x, positions, use_rope=False)
+        Sk = kv_source.shape[1]
+        kpos = jnp.arange(Sk)[None, :]
+        _, k, v = _project_qkv(p, cfg, kv_source, kpos, use_rope=False)
+        causal = False
+    out = flash_attention(q, k, v, causal=causal,
+                          chunk_q=chunk_q or cfg.attn_chunk_q or S,
+                          chunk_k=chunk_k or cfg.attn_chunk_k or k.shape[1])
+    return out.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+
+
+def init_cache_layer(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    dh, nkv = cfg.d_head, cfg.n_kv_heads
+    return {
+        "k": jnp.zeros((batch, max_len, nkv, dh), dtype),
+        "v": jnp.zeros((batch, max_len, nkv, dh), dtype),
+    }
+
+
+def attention_prefill(p, cfg, x, cache, *, chunk_q=None, chunk_k=None):
+    """Prefill: run causal attention AND write the KV cache."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = flash_attention(q, k, v, causal=True,
+                          chunk_q=chunk_q or cfg.attn_chunk_q or S,
+                          chunk_k=chunk_k or cfg.attn_chunk_k or S)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+    }
+    y = out.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+    return y, cache
+
+
+def attention_decode(p, cfg, x, cache, pos, *, cross_kv=None):
+    """One-token decode step.  x: (B, 1, d); pos: (B,) write positions.
+
+    With ``cross_kv`` (precomputed (B, Sk, KV, dh) pair) this is a
+    cross-attention read — no cache update."""
+    B = x.shape[0]
+    if cross_kv is not None:
+        q, _, _ = _project_qkv(p, cfg, x, jnp.zeros((B, 1), jnp.int32),
+                               use_rope=False)
+        k, v = cross_kv
+        Sk = k.shape[1]
+        out = decode_attention(q, k, v, jnp.full((B,), Sk, jnp.int32))
+        return out.reshape(B, 1, -1) @ p["wo"].astype(x.dtype), cache
+
+    pos_vec = jnp.broadcast_to(pos, (B,)) if pos.ndim == 0 else pos
+    q, k, v = _project_qkv(p, cfg, x, pos_vec[:, None])
+    if pos.ndim == 0:
+        # synchronized decode (uniform position): a single DUS, which GSPMD
+        # partitions even when the cache S dim is model-sharded — the
+        # per-batch scatter below would force an unsharded cache copy
+        def upd(buf, new):
+            return jax.lax.dynamic_update_slice(
+                buf, new.astype(buf.dtype), (0, pos, 0, 0))
+    else:
+        # ragged positions (continuous batching): per-batch vmap'd DUS
+        def upd(buf, new):
+            def one(b, n, p_):
+                return jax.lax.dynamic_update_slice(
+                    b, n.astype(b.dtype), (p_, 0, 0))
+            return jax.vmap(one)(buf, new, pos_vec)
+    cache = {"k": upd(cache["k"], k), "v": upd(cache["v"], v)}
+    out = decode_attention(q, cache["k"], cache["v"], pos_vec + 1)
+    return out.reshape(B, 1, -1) @ p["wo"].astype(x.dtype), cache

@@ -1,0 +1,204 @@
+"""Mamba2 (SSD — state-space duality) mixer, chunked parallel form.
+
+Used by the zamba2 hybrid.  The chunked algorithm has the same structure as
+the paper's two-phase SpMV: intra-chunk work is local and dense
+(MXU-friendly), inter-chunk information moves through a small carried state
+(the "halo"), so long sequences cost O(S) instead of O(S^2).
+
+Shapes follow the Mamba2 reference: d_inner = 2 * d_model, heads of size
+``headdim``, shared B/C of size ``d_state`` (ngroups = 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+__all__ = ["init_mamba2", "mamba2_train", "mamba2_decode", "init_mamba2_state",
+           "mamba2_ref_scan", "HEADDIM", "CONV_W"]
+
+HEADDIM = 64
+CONV_W = 4
+
+
+def _dims(cfg):
+    d_in = 2 * cfg.d_model
+    n_heads = d_in // HEADDIM
+    return d_in, n_heads, cfg.ssm_state
+
+
+def init_mamba2(key, cfg) -> dict:
+    d = cfg.d_model
+    d_in, nh, ns = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    conv_dim = d_in + 2 * ns
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": dense_init(ks[0], (d, 2 * d_in + 2 * ns + nh)),
+        "conv_w": dense_init(ks[1], (CONV_W, conv_dim), scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),   # A = -exp(a_log)
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), jnp.float32),
+        "w_out": dense_init(ks[2], (d_in, d), scale=1.0 / d_in ** 0.5),
+    }
+
+
+def _split_in(p, cfg, xz):
+    d_in, nh, ns = _dims(cfg)
+    z, xbc, dt = jnp.split(xz, [d_in, 2 * d_in + 2 * ns], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv, width CONV_W.  xbc: (B,S,C).
+
+    Returns (out, new_state) where state is the last CONV_W-1 inputs."""
+    B, S, C = xbc.shape
+    if state is None:
+        state = jnp.zeros((B, CONV_W - 1, C), xbc.dtype)
+    xp = jnp.concatenate([state, xbc], axis=1)
+    out = sum(xp[:, i:i + S] * w[i].astype(xbc.dtype)
+              for i in range(CONV_W))
+    out = jax.nn.silu(out + b.astype(xbc.dtype))
+    return out, xp[:, -(CONV_W - 1):] if CONV_W > 1 else state
+
+
+def _ssd_chunked(xh, dt, a, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) inputs; dt: (B,S,H) softplus'd step; a: (H,) negative decay
+    rate; Bm/Cm: (B,S,N).  Returns (y (B,S,H,P), final state (B,H,P,N)).
+    """
+    Bb, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S0 = S
+    if S % Q:
+        # pad to a chunk multiple; padded steps carry dt = 0 (decay 1,
+        # zero input) so they neither emit nor perturb the state
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    la = (dt * a[None, None, :]).astype(jnp.float32)      # (B,S,H) log-decay <0
+    xw = (xh * dt[..., None]).astype(jnp.float32)         # dt-weighted input
+    la = la.reshape(Bb, nc, Q, H)
+    xw = xw.reshape(Bb, nc, Q, H, P)
+    Bc = Bm.reshape(Bb, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bb, nc, Q, N).astype(jnp.float32)
+
+    cum = jnp.cumsum(la, axis=2)                          # (B,nc,Q,H)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Qs,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: exp of the (positive) upper-triangle entries would
+    # overflow and poison the backward pass with 0 * inf = NaN
+    seg = jnp.where(tri[None, None, :, :, None], seg, -1e30)
+    L = jnp.exp(seg)
+
+    # intra-chunk: y[q] = C_q . sum_{s<=q} exp(cum_q-cum_s) B_s xw_s
+    scores = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)        # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcqs,bcqsh,bcshp->bcqhp", scores, L, xw)
+
+    # chunk summary state: Z_c = sum_s exp(cum_end - cum_s) B_s x_s
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,Q,H)
+    Z = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, decay_to_end, xw)
+    chunk_decay = jnp.exp(cum[:, :, -1])                  # (B,nc,H)
+
+    def step(h, inp):
+        Zc, dc = inp                                      # (B,H,P,N), (B,H)
+        h_new = h * dc[..., None, None] + Zc
+        return h_new, h                                   # emit state BEFORE chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    h_fin, h_prevs = jax.lax.scan(
+        step, h0, (Z.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)            # (B,nc,H,P,N)
+
+    # inter-chunk: y[q] += exp(cum_q) * C_q . h_prev
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         Cc, jnp.exp(cum), h_prevs)
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)[:, :S0]
+    return y, h_fin
+
+
+def mamba2_ref_scan(xh, dt, a, Bm, Cm, h0=None):
+    """Token-by-token oracle for the chunked SSD (tests)."""
+    Bb, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def step(h, t):
+        at = jnp.exp(dt[:, t] * a[None, :])               # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xh[:, t] * dt[:, t, :, None], Bm[:, t])
+        h = h * at[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, Cm[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3), h
+
+
+def mamba2_train(p, cfg, x, chunk: int | None = None):
+    """x: (B,S,d) -> (B,S,d)."""
+    d_in, nh, ns = _dims(cfg)
+    B, S, d = x.shape
+    dt_model = x.dtype
+    xz = x @ p["w_in"].astype(dt_model)
+    z, xbc, dt_raw = _split_in(p, cfg, xz)
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xm, Bm, Cm = jnp.split(xbc, [d_in, d_in + ns], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xm.reshape(B, S, nh, HEADDIM)
+    y, _ = _ssd_chunked(xh, dt, a, Bm, Cm,
+                        chunk or cfg.ssm_chunk or S)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(dt_model)
+    y = y * jax.nn.silu(z)
+    from repro.models.common import rms_norm
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps)
+    return y @ p["w_out"].astype(dt_model)
+
+
+def init_mamba2_state(cfg, batch: int):
+    d_in, nh, ns = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nh, HEADDIM, ns), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, d_in + 2 * ns), jnp.bfloat16),
+    }
+
+
+def mamba2_decode(p, cfg, x, state):
+    """One-token step.  x: (B,1,d)."""
+    d_in, nh, ns = _dims(cfg)
+    B = x.shape[0]
+    dt_model = x.dtype
+    xz = x @ p["w_in"].astype(dt_model)
+    z, xbc, dt_raw = _split_in(p, cfg, xz)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state["conv"].astype(xbc.dtype))
+    xm, Bm, Cm = jnp.split(xbc, [d_in, d_in + ns], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]
+    a = -jnp.exp(p["a_log"])
+    at = jnp.exp(dt * a[None, :])                          # (B,H)
+    xh = xm.reshape(B, nh, HEADDIM).astype(jnp.float32)
+    upd = jnp.einsum("bhp,bn->bhpn", xh * dt[..., None],
+                     Bm[:, 0].astype(jnp.float32))
+    h = state["h"] * at[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm[:, 0].astype(jnp.float32))
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(B, 1, d_in).astype(dt_model)
+    y = y * jax.nn.silu(z)
+    from repro.models.common import rms_norm
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps)
+    new_state = {"h": h, "conv": conv_state.astype(state["conv"].dtype)}
+    return y @ p["w_out"].astype(dt_model), new_state

@@ -1,0 +1,41 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+__all__ = ["init_swiglu", "swiglu", "init_gelu_mlp", "gelu_mlp"]
+
+
+def init_swiglu(key, d: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, d_ff)),
+        "w_up": dense_init(k2, (d, d_ff)),
+        "w_down": dense_init(k3, (d_ff, d), scale=1.0 / d_ff ** 0.5),
+    }
+
+
+def swiglu(p, x):
+    dt = x.dtype
+    g = jax.nn.silu(x @ p["w_gate"].astype(dt))
+    u = x @ p["w_up"].astype(dt)
+    return (g * u) @ p["w_down"].astype(dt)
+
+
+def init_gelu_mlp(key, d: int, d_ff: int) -> dict:
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_up": dense_init(k1, (d, d_ff)),
+        "b_up": jnp.zeros((d_ff,), jnp.float32),
+        "w_down": dense_init(k2, (d_ff, d), scale=1.0 / d_ff ** 0.5),
+        "b_down": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def gelu_mlp(p, x):
+    dt = x.dtype
+    h = jax.nn.gelu(x @ p["w_up"].astype(dt) + p["b_up"].astype(dt))
+    return h @ p["w_down"].astype(dt) + p["b_down"].astype(dt)

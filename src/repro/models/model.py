@@ -1,0 +1,725 @@
+"""Model assembly: init / train forward / prefill / decode for every family.
+
+Families
+--------
+``attn``   uniform decoder-only stacks (dense, VLM, MoE) — blocks are stacked
+           along a leading layer dim and driven by ``lax.scan`` (small HLO,
+           fast SPMD partitioning for 60-layer configs).
+``xlstm``  period-8 pattern: 7 mLSTM blocks + 1 sLSTM block per period.
+``zamba``  Mamba2 backbone with one *shared* attention block applied every
+           6th layer (Zamba2's parameter-sharing trick).
+``encdec`` whisper: encoder (bidirectional, stub audio frames in) + decoder
+           (causal self-attn + cross-attn).
+
+Params are nested dicts; layer-stacked leaves carry a leading ``L`` dim.
+``init_params`` is pure, so the dry-run can call it under ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import xlstm as xl
+from repro.models.common import (cdtype, constrain_batch, dense_init,
+                                 layer_norm, rms_norm)
+from repro.models.mlp import gelu_mlp, init_gelu_mlp, init_swiglu, swiglu
+from repro.models.moe import init_moe, moe_apply
+
+__all__ = ["init_params", "forward_train", "loss_fn", "init_cache",
+           "prefill", "decode_step"]
+
+
+
+def _remat(cfg, fn):
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _scan(cfg, f, init, xs):
+    """Layer-stack scan; fully unrolled in dry-run cost-variant configs so
+    XLA's cost_analysis sees every layer."""
+    return jax.lax.scan(f, init, xs, unroll=True if cfg.layer_unroll else 1)
+
+
+# --------------------------------------------------------------------- #
+# per-block init / apply
+# --------------------------------------------------------------------- #
+def _init_attn_block(key, cfg: ArchConfig, with_ffn=True):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": attn.init_attention(k1, cfg),
+    }
+    if with_ffn:
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        if cfg.moe is not None:
+            p["ffn"] = init_moe(k2, cfg)
+        elif cfg.d_ff:
+            p["ffn"] = init_swiglu(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _attn_block_train(p, cfg, x):
+    h = x + attn.attention_train(p["attn"], cfg,
+                                 rms_norm(x, p["ln1"], cfg.norm_eps))
+    aux = {}
+    if "ffn" in p:
+        z = rms_norm(h, p["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, aux = moe_apply(p["ffn"], cfg, z)
+        else:
+            y = swiglu(p["ffn"], z)
+        h = h + y
+    return constrain_batch(h, dp=cfg.shard_strategy == "dp"), aux
+
+
+def _attn_block_prefill(p, cfg, x, cache):
+    y, cache = attn.attention_prefill(p["attn"], cfg,
+                                      rms_norm(x, p["ln1"], cfg.norm_eps),
+                                      cache)
+    h = x + y
+    if "ffn" in p:
+        z = rms_norm(h, p["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y2, _ = moe_apply(p["ffn"], cfg, z)
+        else:
+            y2 = swiglu(p["ffn"], z)
+        h = h + y2
+    return constrain_batch(h, dp=cfg.shard_strategy == "dp"), cache
+
+
+def _attn_block_decode(p, cfg, x, cache, pos):
+    y, cache = attn.attention_decode(p["attn"], cfg,
+                                     rms_norm(x, p["ln1"], cfg.norm_eps),
+                                     cache, pos)
+    h = x + y
+    if "ffn" in p:
+        z = rms_norm(h, p["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y2, _ = moe_apply(p["ffn"], cfg, z)
+        else:
+            y2 = swiglu(p["ffn"], z)
+        h = h + y2
+    return constrain_batch(h, dp=cfg.shard_strategy == "dp"), cache
+
+
+# --------------------------------------------------------------------- #
+# family assembly helpers
+# --------------------------------------------------------------------- #
+def _stack_init(key, n: int, init_one):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def _zamba_counts(cfg):
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.block_kind(i) == "attn_shared")
+    n_mamba = cfg.n_layers - n_attn
+    return n_mamba, n_attn
+
+
+def _xlstm_counts(cfg):
+    n_s = sum(1 for i in range(cfg.n_layers) if cfg.block_kind(i) == "slstm")
+    return cfg.n_layers - n_s, n_s
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    keys = jax.random.split(key, 8)
+    d, vp = cfg.d_model, cfg.vocab_padded
+    p: dict[str, Any] = {
+        # fan-in scaled so tied-embedding heads produce O(1) logits
+        "embed": dense_init(keys[0], (vp, d), scale=d ** -0.5),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[1], (d, vp))
+
+    if cfg.is_encdec:
+        p["enc_pos"] = dense_init(keys[2], (cfg.n_audio_frames, d), scale=0.02)
+        p["enc_blocks"] = _stack_init(
+            keys[3], cfg.n_layers, lambda k: _init_whisper_enc_block(k, cfg))
+        p["enc_norm_w"] = jnp.ones((d,), jnp.float32)
+        p["enc_norm_b"] = jnp.zeros((d,), jnp.float32)
+        p["dec_blocks"] = _stack_init(
+            keys[4], cfg.n_layers, lambda k: _init_whisper_dec_block(k, cfg))
+        p["final_norm_b"] = jnp.zeros((d,), jnp.float32)
+        return p
+
+    if cfg.block_pattern == "attn":
+        p["blocks"] = _stack_init(
+            keys[3], cfg.n_layers, lambda k: _init_attn_block(k, cfg))
+    elif cfg.block_pattern == "xlstm":
+        n_m, n_s = _xlstm_counts(cfg)
+        p["mlstm_blocks"] = _stack_init(
+            keys[3], n_m, lambda k: {"ln": jnp.ones((d,), jnp.float32),
+                                     "mix": xl.init_mlstm(k, cfg)})
+        p["slstm_blocks"] = _stack_init(
+            keys[4], n_s, lambda k: {"ln": jnp.ones((d,), jnp.float32),
+                                     "mix": xl.init_slstm(k, cfg)})
+    elif cfg.block_pattern == "zamba":
+        n_m, _ = _zamba_counts(cfg)
+        p["mamba_blocks"] = _stack_init(
+            keys[3], n_m, lambda k: {"ln": jnp.ones((d,), jnp.float32),
+                                     "mix": m2.init_mamba2(k, cfg)})
+        p["shared_attn"] = _init_attn_block(keys[4], cfg, with_ffn=True)
+    else:
+        raise ValueError(cfg.block_pattern)
+    return p
+
+
+# --------------------------------------------------------------------- #
+# whisper blocks (LayerNorm + biases, GELU MLP, no RoPE — sinusoidal-ish
+# learned positions on the encoder, learned positions on the decoder)
+# --------------------------------------------------------------------- #
+def _init_whisper_enc_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1_w": jnp.ones((d,), jnp.float32), "ln1_b": jnp.zeros((d,), jnp.float32),
+        "attn": attn.init_attention(k1, cfg),
+        "ln2_w": jnp.ones((d,), jnp.float32), "ln2_b": jnp.zeros((d,), jnp.float32),
+        "ffn": init_gelu_mlp(k2, d, cfg.d_ff),
+    }
+
+
+def _init_whisper_dec_block(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1_w": jnp.ones((d,), jnp.float32), "ln1_b": jnp.zeros((d,), jnp.float32),
+        "self_attn": attn.init_attention(k1, cfg),
+        "ln2_w": jnp.ones((d,), jnp.float32), "ln2_b": jnp.zeros((d,), jnp.float32),
+        "cross_attn": attn.init_attention(k2, cfg, cross=True),
+        "ln3_w": jnp.ones((d,), jnp.float32), "ln3_b": jnp.zeros((d,), jnp.float32),
+        "ffn": init_gelu_mlp(k3, d, cfg.d_ff),
+    }
+
+
+def _whisper_encode(params, cfg, frames):
+    """frames: (B, n_audio_frames, d) — the conv frontend stub output."""
+    x = frames.astype(cdtype(cfg)) + params["enc_pos"].astype(cdtype(cfg))
+
+    def enc_block(x, bp):
+        h = x + attn.attention_train(
+            bp["attn"], cfg,
+            layer_norm(x, bp["ln1_w"], bp["ln1_b"], cfg.norm_eps),
+            causal=False, use_rope=False)
+        h = h + gelu_mlp(bp["ffn"],
+                         layer_norm(h, bp["ln2_w"], bp["ln2_b"], cfg.norm_eps))
+        return constrain_batch(h, dp=cfg.shard_strategy == "dp"), None
+
+    fn = _remat(cfg, enc_block)
+    x, _ = _scan(cfg, fn, x, params["enc_blocks"])
+    return layer_norm(x, params["enc_norm_w"], params["enc_norm_b"],
+                      cfg.norm_eps)
+
+
+def _whisper_dec_block_train(bp, cfg, x, enc_out):
+    h = x + attn.attention_train(
+        bp["self_attn"], cfg,
+        layer_norm(x, bp["ln1_w"], bp["ln1_b"], cfg.norm_eps), causal=True)
+    h = h + attn.attention_train(
+        bp["cross_attn"], cfg,
+        layer_norm(h, bp["ln2_w"], bp["ln2_b"], cfg.norm_eps),
+        kv_source=enc_out)
+    h = h + gelu_mlp(bp["ffn"],
+                     layer_norm(h, bp["ln3_w"], bp["ln3_b"], cfg.norm_eps))
+    return h
+
+
+# --------------------------------------------------------------------- #
+# training forward
+# --------------------------------------------------------------------- #
+def _embed(params, cfg, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdtype(cfg))
+    x = x * jnp.asarray(cfg.d_model ** 0.5, cdtype(cfg))
+    return constrain_batch(x, dp=cfg.shard_strategy == "dp")
+
+
+def _unembed(params, cfg, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps) \
+        if not cfg.is_encdec else \
+        layer_norm(x, params["final_norm"], params["final_norm_b"],
+                   cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ w.astype(x.dtype)
+
+
+def forward_train(params, cfg: ArchConfig, tokens, frames=None):
+    """tokens: (B, S) int32 -> logits (B, S, vocab_padded); plus moe aux."""
+    x = _embed(params, cfg, tokens)
+    aux_sum = {"load_balance_loss": jnp.float32(0),
+               "router_z_loss": jnp.float32(0)}
+
+    if cfg.is_encdec:
+        enc_out = _whisper_encode(params, cfg, frames)
+
+        def dec_block(x, bp):
+            return _whisper_dec_block_train(bp, cfg, x, enc_out), None
+
+        fn = _remat(cfg, dec_block)
+        x, _ = _scan(cfg, fn, x, params["dec_blocks"])
+        return _unembed(params, cfg, x), aux_sum
+
+    if cfg.block_pattern == "attn":
+        def block(carry, bp):
+            x, lb, rz = carry
+            h, aux = _attn_block_train(bp, cfg, x)
+            if aux:
+                lb = lb + aux["load_balance_loss"]
+                rz = rz + aux["router_z_loss"]
+            return (h, lb, rz), None
+
+        fn = _remat(cfg, block)
+        (x, lb, rz), _ = _scan(cfg, fn, (x, jnp.float32(0), jnp.float32(0)), params["blocks"])
+        aux_sum = {"load_balance_loss": lb / cfg.n_layers,
+                   "router_z_loss": rz / cfg.n_layers}
+
+    elif cfg.block_pattern == "xlstm":
+        x = _xlstm_forward(params, cfg, x, mode="train")
+
+    elif cfg.block_pattern == "zamba":
+        x = _zamba_forward(params, cfg, x, mode="train")
+
+    return _unembed(params, cfg, x), aux_sum
+
+
+def _xlstm_forward(params, cfg, x, mode):
+    n_m, n_s = _xlstm_counts(cfg)
+    per = n_m // max(n_s, 1) if n_s else n_m
+    mb, sb = params["mlstm_blocks"], params.get("slstm_blocks")
+
+    def mlstm_block(x, bp):
+        return constrain_batch(
+            x + xl.mlstm_train(bp["mix"], cfg,
+                               rms_norm(x, bp["ln"], cfg.norm_eps)),
+            dp=cfg.shard_strategy == "dp"), None
+
+    def slstm_block(x, bp):
+        return x + xl.slstm_apply(bp["mix"], cfg,
+                                  rms_norm(x, bp["ln"], cfg.norm_eps)), None
+
+    mfn = _remat(cfg, mlstm_block)
+    sfn = _remat(cfg, slstm_block)
+    if n_s == 0:
+        x, _ = _scan(cfg, mfn, x, mb)
+        return x
+    # periods: (n_s, per, ...) mLSTM stacks then one sLSTM each
+    mb_p = jax.tree.map(lambda a: a.reshape(n_s, per, *a.shape[1:]), mb)
+
+    def period(x, bps):
+        mbp, sbp = bps
+        x, _ = _scan(cfg, mfn, x, mbp)
+        x, _ = sfn(x, sbp)
+        return x, None
+
+    x, _ = _scan(cfg, period, x, (mb_p, sb))
+    return x
+
+
+def _zamba_forward(params, cfg, x, mode):
+    n_m, n_a = _zamba_counts(cfg)
+    per = 5  # 5 mamba + 1 shared attn per period
+    n_periods = n_a
+    tail = n_m - per * n_periods
+    mb = params["mamba_blocks"]
+    shared = params["shared_attn"]
+
+    def mamba_block(x, bp):
+        return constrain_batch(
+            x + m2.mamba2_train(bp["mix"], cfg,
+                                rms_norm(x, bp["ln"], cfg.norm_eps)),
+            dp=cfg.shard_strategy == "dp"), None
+
+    mfn = _remat(cfg, mamba_block)
+    attn_fn = _remat(cfg, lambda x: _attn_block_train(shared, cfg, x)[0])
+
+    mb_head = jax.tree.map(lambda a: a[: per * n_periods]
+                           .reshape(n_periods, per, *a.shape[1:]), mb)
+
+    def period(x, mbp):
+        x, _ = _scan(cfg, mfn, x, mbp)
+        return attn_fn(x), None
+
+    x, _ = _scan(cfg, period, x, mb_head)
+    if tail:
+        mb_tail = jax.tree.map(lambda a: a[per * n_periods:], mb)
+        x, _ = _scan(cfg, mfn, x, mb_tail)
+    return x
+
+
+# --------------------------------------------------------------------- #
+# loss
+# --------------------------------------------------------------------- #
+def loss_fn(params, cfg: ArchConfig, batch, z_loss_coef: float = 1e-4,
+            moe_coef: float = 1e-2):
+    tokens = batch["tokens"]
+    logits, aux = forward_train(params, cfg, tokens,
+                                frames=batch.get("frames"))
+    logits = logits[:, :-1]
+    targets = tokens[:, 1:]
+    # SPMD-friendly cross-entropy: the vocab dim is model-sharded, so the
+    # gold logit is extracted with an iota-compare masked reduction — it
+    # fuses into the (sharded) logits elementwise pipeline and never
+    # materialises an unsharded (B, S, V) tensor (take_along_axis would
+    # all-gather the logits; a float one-hot einsum can materialise too).
+    lmax = jax.lax.stop_gradient(
+        jnp.max(logits.astype(jnp.float32), axis=-1, keepdims=True))
+    shifted = logits.astype(jnp.float32) - lmax
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + lmax[..., 0]
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    gold = jnp.sum(jnp.where(vocab_ids == targets[..., None],
+                             logits.astype(jnp.float32), 0.0), axis=-1)
+    nll = (lse - gold).mean()
+    zl = (lse ** 2).mean()
+    loss = nll + z_loss_coef * zl
+    metrics = {"nll": nll, "z_loss": zl}
+    if cfg.moe is not None:
+        loss = loss + moe_coef * aux["load_balance_loss"] \
+            + z_loss_coef * aux["router_z_loss"]
+        metrics.update(aux)
+    return loss, metrics
+
+
+# --------------------------------------------------------------------- #
+# serving: cache init / prefill / decode
+# --------------------------------------------------------------------- #
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               kv_dtype=jnp.bfloat16) -> dict:
+    def attn_cache(n):
+        return {
+            "k": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, cfg.d_head),
+                           kv_dtype),
+            "v": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, cfg.d_head),
+                           kv_dtype),
+        }
+
+    if cfg.is_encdec:
+        return {
+            "self": attn_cache(cfg.n_layers),
+            "cross_k": jnp.zeros((cfg.n_layers, batch, cfg.n_audio_frames,
+                                  cfg.n_kv_heads, cfg.d_head), kv_dtype),
+            "cross_v": jnp.zeros((cfg.n_layers, batch, cfg.n_audio_frames,
+                                  cfg.n_kv_heads, cfg.d_head), kv_dtype),
+        }
+    if cfg.block_pattern == "attn":
+        return {"kv": attn_cache(cfg.n_layers)}
+    if cfg.block_pattern == "xlstm":
+        n_m, n_s = _xlstm_counts(cfg)
+        return {
+            "mlstm": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_m, *a.shape)).copy(),
+                xl.init_mlstm_state(cfg, batch)),
+            "slstm": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_s, *a.shape)).copy(),
+                xl.init_slstm_state(cfg, batch)),
+        }
+    if cfg.block_pattern == "zamba":
+        n_m, n_a = _zamba_counts(cfg)
+        return {
+            "mamba": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_m, *a.shape)).copy(),
+                m2.init_mamba2_state(cfg, batch)),
+            "attn_kv": attn_cache(n_a),
+        }
+    raise ValueError(cfg.block_pattern)
+
+
+def prefill(params, cfg: ArchConfig, tokens, cache, frames=None):
+    """Run the full prompt, writing caches.  Returns (cache, last_logits)."""
+    x = _embed(params, cfg, tokens)
+
+    if cfg.is_encdec:
+        enc_out = _whisper_encode(params, cfg, frames)
+
+        def block(x, inp):
+            bp, kv = inp
+            y, kv = attn.attention_prefill(
+                bp["self_attn"], cfg,
+                layer_norm(x, bp["ln1_w"], bp["ln1_b"], cfg.norm_eps), kv)
+            h = x + y
+            h = h + attn.attention_train(
+                bp["cross_attn"], cfg,
+                layer_norm(h, bp["ln2_w"], bp["ln2_b"], cfg.norm_eps),
+                kv_source=enc_out)
+            h = h + gelu_mlp(bp["ffn"], layer_norm(
+                h, bp["ln3_w"], bp["ln3_b"], cfg.norm_eps))
+            return h, kv
+
+        # also precompute cross K/V per layer
+        def cross_kv(bp):
+            dt = enc_out.dtype
+            B, Sk, _ = enc_out.shape
+            k = (enc_out @ bp["cross_attn"]["wk"].astype(dt)).reshape(
+                B, Sk, cfg.n_kv_heads, cfg.d_head)
+            v = (enc_out @ bp["cross_attn"]["wv"].astype(dt)).reshape(
+                B, Sk, cfg.n_kv_heads, cfg.d_head)
+            return k, v
+
+        ck, cv = jax.vmap(cross_kv)(params["dec_blocks"])
+        x, self_kv = _scan(cfg, block, x, (params["dec_blocks"], cache["self"]))
+        cache = {"self": self_kv,
+                 "cross_k": ck.astype(cache["cross_k"].dtype),
+                 "cross_v": cv.astype(cache["cross_v"].dtype)}
+        return cache, _unembed(params, cfg, x[:, -1:])
+
+    if cfg.block_pattern == "attn":
+        def block(x, inp):
+            bp, kv = inp
+            h, kv = _attn_block_prefill(bp, cfg, x, kv)
+            return h, kv
+
+        x, kv = _scan(cfg, block, x, (params["blocks"], cache["kv"]))
+        return {"kv": kv}, _unembed(params, cfg, x[:, -1:])
+
+    if cfg.block_pattern == "xlstm":
+        return _xlstm_prefill(params, cfg, x, cache)
+    if cfg.block_pattern == "zamba":
+        return _zamba_prefill(params, cfg, x, cache)
+    raise ValueError(cfg.block_pattern)
+
+
+def _xlstm_prefill(params, cfg, x, cache):
+    n_m, n_s = _xlstm_counts(cfg)
+
+    def mblock(x, inp):
+        bp, _ = inp
+        z = rms_norm(x, bp["ln"], cfg.norm_eps)
+        q, k, v, li, lf, og = xl._qkv_gates(bp["mix"], cfg, z)
+        h, (C, n, m) = xl._mlstm_chunked(
+            q, k, v, li, lf, chunk=cfg.ssm_chunk or z.shape[1])
+        B, S, _, _ = q.shape
+        h = h.reshape(B, S, -1).astype(x.dtype) * og
+        h = rms_norm(h, bp["mix"]["norm_w"], cfg.norm_eps)
+        y = x + h @ bp["mix"]["w_down"].astype(x.dtype)
+        return y, {"C": C, "n": n, "m": m}
+
+    def sblock(x, inp):
+        bp, _ = inp
+        z = rms_norm(x, bp["ln"], cfg.norm_eps)
+        d_in = xl._dims(cfg)[0]
+        xm = z @ bp["mix"]["w_up"].astype(z.dtype)
+        xg = (xm @ bp["mix"]["w_gates"].astype(z.dtype)).astype(jnp.float32)
+        st0 = xl.init_slstm_state(cfg, z.shape[0])
+
+        def step(st, t):
+            st = xl._slstm_cell(bp["mix"], xg[:, t], st)
+            return st, st["h"]
+
+        st, hs = jax.lax.scan(step, st0, jnp.arange(z.shape[1]))
+        h = hs.transpose(1, 0, 2).astype(x.dtype)
+        h = rms_norm(h, bp["mix"]["norm_w"], cfg.norm_eps)
+        return x + h @ bp["mix"]["w_down"].astype(x.dtype), st
+
+    per = n_m // max(n_s, 1) if n_s else n_m
+    mb = params["mlstm_blocks"]
+    if n_s:
+        mb_p = jax.tree.map(lambda a: a.reshape(n_s, per, *a.shape[1:]), mb)
+        mc = jax.tree.map(lambda a: a.reshape(n_s, per, *a.shape[1:]),
+                          cache["mlstm"])
+
+        def period(x, inp):
+            mbp, mcp, sbp, scp = inp
+            x, mst = _scan(cfg, mblock, x, (mbp, mcp))
+            x, sst = sblock(x, (sbp, scp))
+            return x, (mst, sst)
+
+        x, (mst, sst) = _scan(cfg, period, x, (mb_p, mc, params["slstm_blocks"], cache["slstm"]))
+        mst = jax.tree.map(lambda a: a.reshape(n_m, *a.shape[2:]), mst)
+        cache = {"mlstm": mst, "slstm": sst}
+    else:
+        x, mst = _scan(cfg, mblock, x, (mb, cache["mlstm"]))
+        cache = {"mlstm": mst, "slstm": cache["slstm"]}
+    return cache, _unembed(params, cfg, x[:, -1:])
+
+
+def _zamba_prefill(params, cfg, x, cache):
+    n_m, n_a = _zamba_counts(cfg)
+    per, n_periods = 5, n_a
+    tail = n_m - per * n_periods
+
+    def mblock(x, inp):
+        bp, st = inp
+        z = rms_norm(x, bp["ln"], cfg.norm_eps)
+        d_in, nh, ns = m2._dims(cfg)
+        dt_model = z.dtype
+        xz = z @ bp["mix"]["w_in"].astype(dt_model)
+        zz, xbc, dt_raw = m2._split_in(bp["mix"], cfg, xz)
+        xbc, conv_st = m2._causal_conv(xbc, bp["mix"]["conv_w"],
+                                       bp["mix"]["conv_b"])
+        xm, Bm, Cm = jnp.split(xbc, [d_in, d_in + ns], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + bp["mix"]["dt_bias"])
+        a = -jnp.exp(bp["mix"]["a_log"])
+        B, S, _ = z.shape
+        xh = xm.reshape(B, S, nh, m2.HEADDIM)
+        y, h_fin = m2._ssd_chunked(
+            xh, dt, a, Bm, Cm, chunk=cfg.ssm_chunk or S)
+        y = y + xh.astype(jnp.float32) * bp["mix"]["d_skip"][None, None, :, None]
+        y = y.reshape(B, S, d_in).astype(dt_model) * jax.nn.silu(zz)
+        y = rms_norm(y, bp["mix"]["norm_w"], cfg.norm_eps)
+        new_st = {"h": h_fin, "conv": conv_st.astype(st["conv"].dtype)}
+        return x + y @ bp["mix"]["w_out"].astype(dt_model), new_st
+
+    shared = params["shared_attn"]
+    mb = params["mamba_blocks"]
+    mb_head = jax.tree.map(lambda a: a[: per * n_periods]
+                           .reshape(n_periods, per, *a.shape[1:]), mb)
+    mc_head = jax.tree.map(lambda a: a[: per * n_periods]
+                           .reshape(n_periods, per, *a.shape[1:]),
+                           cache["mamba"])
+
+    def period(x, inp):
+        mbp, mcp, kv = inp
+        x, mst = _scan(cfg, mblock, x, (mbp, mcp))
+        x, kv = _attn_block_prefill(shared, cfg, x, kv)
+        return x, (mst, kv)
+
+    x, (mst_h, kvs) = _scan(cfg, period, x, (mb_head, mc_head, cache["attn_kv"]))
+    mst_h = jax.tree.map(lambda a: a.reshape(per * n_periods, *a.shape[2:]),
+                         mst_h)
+    if tail:
+        mb_tail = jax.tree.map(lambda a: a[per * n_periods:], mb)
+        mc_tail = jax.tree.map(lambda a: a[per * n_periods:], cache["mamba"])
+        x, mst_t = _scan(cfg, mblock, x, (mb_tail, mc_tail))
+        mst = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                           mst_h, mst_t)
+    else:
+        mst = mst_h
+    return {"mamba": mst, "attn_kv": kvs}, _unembed(params, cfg, x[:, -1:])
+
+
+def decode_step(params, cfg: ArchConfig, tokens, cache, pos):
+    """One-token step.  tokens: (B,1) int32; pos: (B,) positions to write.
+
+    Returns (logits (B, vocab_padded), new_cache)."""
+    x = _embed(params, cfg, tokens)
+
+    if cfg.is_encdec:
+        def block(x, inp):
+            bp, kv, ck, cv = inp
+            y, kv = attn.attention_decode(
+                bp["self_attn"], cfg,
+                layer_norm(x, bp["ln1_w"], bp["ln1_b"], cfg.norm_eps),
+                kv, pos)
+            h = x + y
+            y2, _ = attn.attention_decode(
+                bp["cross_attn"], cfg,
+                layer_norm(h, bp["ln2_w"], bp["ln2_b"], cfg.norm_eps),
+                None, pos, cross_kv=(ck, cv))
+            h = h + y2
+            h = h + gelu_mlp(bp["ffn"], layer_norm(
+                h, bp["ln3_w"], bp["ln3_b"], cfg.norm_eps))
+            return h, kv
+
+        x, kv = _scan(cfg, block, x, (params["dec_blocks"], cache["self"],
+                               cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache, self=kv)
+        return _unembed(params, cfg, x)[:, 0], new_cache
+
+    if cfg.block_pattern == "attn":
+        # the cache rides in the scan CARRY and is updated in place per
+        # layer — emitting per-layer caches as stacked scan outputs keeps a
+        # second full-cache buffer alive (the decode HBM blowup, §Perf P3)
+        def block(carry, inp):
+            x, kv = carry
+            bp, l = inp
+            layer_kv = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, l, 0,
+                                                       keepdims=False), kv)
+            h, new_kv = _attn_block_decode(bp, cfg, x, layer_kv, pos)
+            kv = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), l, 0), kv, new_kv)
+            return (h, kv), None
+
+        (x, kv), _ = _scan(cfg, block, (x, cache["kv"]),
+                           (params["blocks"],
+                            jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+        return _unembed(params, cfg, x)[:, 0], {"kv": kv}
+
+    if cfg.block_pattern == "xlstm":
+        n_m, n_s = _xlstm_counts(cfg)
+
+        def mblock(x, inp):
+            bp, st = inp
+            y, st = xl.mlstm_decode(bp["mix"], cfg,
+                                    rms_norm(x, bp["ln"], cfg.norm_eps), st)
+            return x + y, st
+
+        def sblock(x, inp):
+            bp, st = inp
+            y, st = xl.slstm_decode(bp["mix"], cfg,
+                                    rms_norm(x, bp["ln"], cfg.norm_eps), st)
+            return x + y, st
+
+        per = n_m // max(n_s, 1) if n_s else n_m
+        mb = params["mlstm_blocks"]
+        if n_s:
+            mb_p = jax.tree.map(lambda a: a.reshape(n_s, per, *a.shape[1:]), mb)
+            mc = jax.tree.map(lambda a: a.reshape(n_s, per, *a.shape[1:]),
+                              cache["mlstm"])
+
+            def period(x, inp):
+                mbp, mcp, sbp, scp = inp
+                x, mst = _scan(cfg, mblock, x, (mbp, mcp))
+                x, sst = sblock(x, (sbp, scp))
+                return x, (mst, sst)
+
+            x, (mst, sst) = _scan(cfg, period, x, (mb_p, mc, params["slstm_blocks"], cache["slstm"]))
+            mst = jax.tree.map(lambda a: a.reshape(n_m, *a.shape[2:]), mst)
+            new_cache = {"mlstm": mst, "slstm": sst}
+        else:
+            x, mst = _scan(cfg, mblock, x, (mb, cache["mlstm"]))
+            new_cache = {"mlstm": mst, "slstm": cache["slstm"]}
+        return _unembed(params, cfg, x)[:, 0], new_cache
+
+    if cfg.block_pattern == "zamba":
+        n_m, n_a = _zamba_counts(cfg)
+        per, n_periods = 5, n_a
+        tail = n_m - per * n_periods
+        shared = params["shared_attn"]
+
+        def mblock(x, inp):
+            bp, st = inp
+            y, st = m2.mamba2_decode(bp["mix"], cfg,
+                                     rms_norm(x, bp["ln"], cfg.norm_eps), st)
+            return x + y, st
+
+        mb = params["mamba_blocks"]
+        mb_head = jax.tree.map(lambda a: a[: per * n_periods]
+                               .reshape(n_periods, per, *a.shape[1:]), mb)
+        mc_head = jax.tree.map(lambda a: a[: per * n_periods]
+                               .reshape(n_periods, per, *a.shape[1:]),
+                               cache["mamba"])
+
+        def period(x, inp):
+            mbp, mcp, kv = inp
+            x, mst = _scan(cfg, mblock, x, (mbp, mcp))
+            x, kv = _attn_block_decode(shared, cfg, x, kv, pos)
+            return x, (mst, kv)
+
+        x, (mst_h, kvs) = _scan(cfg, period, x, (mb_head, mc_head, cache["attn_kv"]))
+        mst_h = jax.tree.map(
+            lambda a: a.reshape(per * n_periods, *a.shape[2:]), mst_h)
+        if tail:
+            mb_tail = jax.tree.map(lambda a: a[per * n_periods:], mb)
+            mc_tail = jax.tree.map(lambda a: a[per * n_periods:],
+                                   cache["mamba"])
+            x, mst_t = _scan(cfg, mblock, x, (mb_tail, mc_tail))
+            mst = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                               mst_h, mst_t)
+        else:
+            mst = mst_h
+        return (_unembed(params, cfg, x)[:, 0],
+                {"mamba": mst, "attn_kv": kvs})
+
+    raise ValueError(cfg.block_pattern)

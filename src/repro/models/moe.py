@@ -1,0 +1,87 @@
+"""Mixture-of-Experts layer: top-k token-choice routing with static capacity
+(GShard-style dispatch einsums — fully static shapes, GSPMD-friendly).
+
+Connection to the paper: expert load balance is the MoE incarnation of the
+thread-level nnz balance of Sec. 2.3 — work units (routed tokens) must be
+spread evenly over workers (experts / `model`-axis shards).  Here balance is
+enforced *online* by the capacity limit + auxiliary load-balancing loss,
+while the SpMV kernel balances *statically* at assembly time; both turn an
+irregular workload into equal static-shaped bins.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+__all__ = ["init_moe", "moe_apply"]
+
+
+def init_moe(key, cfg) -> dict:
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.n_experts, m.d_expert
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, (d, e), scale=0.02),
+        "w_gate": dense_init(k2, (e, d, f)),
+        "w_up": dense_init(k3, (e, d, f)),
+        "w_down": dense_init(k4, (e, f, d), scale=1.0 / f ** 0.5),
+    }
+
+
+def moe_apply(p, cfg, x):
+    """x: (B, S, d) -> (y, aux) with aux = {load_balance_loss, router_z_loss}.
+
+    Dispatch is per-group (group = one batch row) with capacity
+    C = S * top_k / E * capacity_factor; overflow tokens are dropped
+    (contribute zero), standard for capacity-based MoE.
+    """
+    m = cfg.moe
+    B0, S0, d = x.shape
+    # regroup to fixed-size routing groups: dispatch/combine einsum flops
+    # scale with the group length, not the sequence length
+    g = m.group_size or S0
+    if (B0 * S0) % g == 0 and S0 != g:
+        x = x.reshape(B0 * S0 // g, g, d)
+    B, S, _ = x.shape
+    E, K = m.n_experts, m.top_k
+    C = max(1, int(S * K / E * m.capacity_factor))
+    dt = x.dtype
+
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)   # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)               # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert queue, per group
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)     # (B,S,K,E)
+    flat = onehot.reshape(B, S * K, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(B, S, K, E)
+    pos = (pos_in_expert * onehot).sum(-1)                      # (B,S,K)
+    keep = (pos < C) & (gate_vals > 0)
+    gate_vals = jnp.where(keep, gate_vals, 0.0)
+
+    # dispatch/combine tensors: (B, S, E, C)
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32)          # (B,S,K,C)
+    disp = jnp.einsum("bske,bskc->bsec", onehot,
+                      pos_oh * keep[..., None].astype(jnp.float32))
+    comb = jnp.einsum("bske,bskc->bsec", onehot * gate_vals[..., None],
+                      pos_oh)
+
+    xin = jnp.einsum("bsec,bsd->ebcd", disp.astype(dt), x)      # (E,B,C,d)
+    g = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xin,
+                               p["w_gate"].astype(dt)))
+    u = jnp.einsum("ebcd,edf->ebcf", xin, p["w_up"].astype(dt))
+    out = jnp.einsum("ebcf,efd->ebcd", g * u, p["w_down"].astype(dt))
+    y = jnp.einsum("bsec,ebcd->bsd", comb.astype(dt), out)
+
+    # auxiliary losses (Switch-style)
+    density = onehot.sum(2).mean(axis=1)                        # (B,E) frac routed
+    router_prob = probs.mean(axis=1)                            # (B,E)
+    lb_loss = E * jnp.mean(jnp.sum(density * router_prob, axis=-1))
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    if y.shape[:2] != (B0, S0):
+        y = y.reshape(B0, S0, d)
+    return y, {"load_balance_loss": lb_loss, "router_z_loss": z_loss}

@@ -1,0 +1,296 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM (matrix memory) and sequential
+sLSTM (scalar memory), following Beck et al. 2024 (arXiv:2405.04517).
+
+The mLSTM recurrence per head (cell C in R^{dh x dh}, normaliser n in R^dh,
+log-stabiliser m):
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t^T q_t / max(|n_t^T q_t|, 1)
+
+computed here in a chunked form: intra-chunk pairwise decays run as dense
+einsums (MXU work), inter-chunk state is carried by a small scan — the same
+local-compute + small-carried-state structure as the paper's two-phase SpMV
+and the Mamba2 SSD kernel.  All gate math is log-space stabilised.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+__all__ = ["init_mlstm", "mlstm_train", "mlstm_decode", "init_mlstm_state",
+           "mlstm_ref_scan", "init_slstm", "slstm_apply", "init_slstm_state",
+           "slstm_decode"]
+
+PROJ = 2  # block up-projection factor
+
+
+def _dims(cfg):
+    d_in = PROJ * cfg.d_model
+    dh = d_in // cfg.n_heads
+    return d_in, cfg.n_heads, dh
+
+
+# --------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------- #
+def init_mlstm(key, cfg) -> dict:
+    d = cfg.d_model
+    d_in, nh, dh = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, d_in)),
+        "w_og": dense_init(ks[1], (d, d_in)),
+        "wq": dense_init(ks[2], (d_in, d_in)),
+        "wk": dense_init(ks[3], (d_in, d_in)),
+        "wv": dense_init(ks[4], (d_in, d_in)),
+        "w_if": dense_init(ks[5], (d_in, 2 * nh), scale=0.02),
+        "b_i": jnp.zeros((nh,), jnp.float32) - 2.0,
+        "b_f": jnp.zeros((nh,), jnp.float32) + 3.0,
+        "norm_w": jnp.ones((d_in,), jnp.float32),
+        "w_down": dense_init(ks[6], (d_in, d), scale=1.0 / d_in ** 0.5),
+    }
+
+
+def _qkv_gates(p, cfg, x):
+    d_in, nh, dh = _dims(cfg)
+    B, S, _ = x.shape
+    dt = x.dtype
+    xm = x @ p["w_up"].astype(dt)
+    og = jax.nn.silu(x @ p["w_og"].astype(dt))
+    q = (xm @ p["wq"].astype(dt)).reshape(B, S, nh, dh)
+    k = (xm @ p["wk"].astype(dt)).reshape(B, S, nh, dh) * dh ** -0.5
+    v = (xm @ p["wv"].astype(dt)).reshape(B, S, nh, dh)
+    gates = (xm @ p["w_if"].astype(dt)).astype(jnp.float32)
+    log_i = gates[..., :nh] + p["b_i"]                      # pre-act i gate
+    log_f = -jax.nn.softplus(-(gates[..., nh:] + p["b_f"]))  # log sigmoid(f)
+    return q, k, v, log_i, log_f, og
+
+
+def mlstm_ref_scan(q, k, v, log_i, log_f):
+    """Token-by-token stabilised oracle (tests)."""
+    B, S, H, dh = q.shape
+
+    def step(carry, t):
+        C, n, m = carry
+        m_new = jnp.maximum(log_f[:, t] + m, log_i[:, t])    # (B,H)
+        f_ = jnp.exp(log_f[:, t] + m - m_new)
+        i_ = jnp.exp(log_i[:, t] - m_new)
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        C = C * f_[..., None, None] + i_[..., None, None] * \
+            jnp.einsum("bhd,bhe->bhde", kt, vt)
+        n = n * f_[..., None] + i_[..., None] * kt
+        qt = q[:, t].astype(jnp.float32)
+        num = jnp.einsum("bhde,bhd->bhe", C, qt)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt))
+        den = jnp.maximum(den, jnp.exp(jnp.minimum(-m_new, 30.0)))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    _, hs = jax.lax.scan(step, (C0, n0, m0), jnp.arange(S))
+    return hs.transpose(1, 0, 2, 3)                          # (B,S,H,dh)
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk: int, state=None):
+    """Chunkwise-parallel stabilised mLSTM.
+
+    Returns (h (B,S,H,dh), final (C, n, m))."""
+    B, S, H, dh = q.shape
+    Q = min(chunk, S)
+    S0 = S
+    if S % Q:
+        # pad to a chunk multiple; padded steps have i-gate = -inf (no
+        # contribution) and f-gate = 0 (state preserved)
+        pad = Q - S % Q
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, zpad)
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    qf = q.reshape(B, nc, Q, H, dh).astype(jnp.float32)
+    kf = k.reshape(B, nc, Q, H, dh).astype(jnp.float32)
+    vf = v.reshape(B, nc, Q, H, dh).astype(jnp.float32)
+    li = log_i.reshape(B, nc, Q, H)
+    lf = log_f.reshape(B, nc, Q, H)
+
+    F = jnp.cumsum(lf, axis=2)                                # (B,nc,Q,H)
+    Ftot = F[:, :, -1]                                        # (B,nc,H)
+    # log weight of source s surviving to end of chunk: Ftot - F_s + li_s
+    lw_end = Ftot[:, :, None] - F + li                        # (B,nc,Q,H)
+    m_loc = lw_end.max(axis=2)                                # (B,nc,H)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.zeros((B, H), jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        kc, vc, lwe, mloc, ftot = inp
+        m_new = jnp.maximum(m + ftot, mloc)                   # (B,H)
+        w = jnp.exp(lwe - m_new[:, None])                     # (B,Q,H)
+        C_new = C * jnp.exp(m + ftot - m_new)[..., None, None] + \
+            jnp.einsum("bqh,bqhd,bqhe->bhde", w, kc, vc)
+        n_new = n * jnp.exp(m + ftot - m_new)[..., None] + \
+            jnp.einsum("bqh,bqhd->bhd", w, kc)
+        return (C_new, n_new, m_new), (C, n, m)               # emit pre-chunk
+
+    xs = (kf.transpose(1, 0, 2, 3, 4), vf.transpose(1, 0, 2, 3, 4),
+          lw_end.transpose(1, 0, 2, 3), m_loc.transpose(1, 0, 2),
+          Ftot.transpose(1, 0, 2))
+    (Cf, nf, mf), (Cp, np_, mp) = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    Cp = Cp.transpose(1, 0, 2, 3, 4)                          # (B,nc,H,dh,dh)
+    np_ = np_.transpose(1, 0, 2, 3)                           # (B,nc,H,dh)
+    mp = mp.transpose(1, 0, 2)                                # (B,nc,H)
+
+    # intra-chunk pairwise: log decay s->q = F_q - F_s + li_s  (s <= q)
+    seg = F[:, :, :, None, :] - F[:, :, None, :, :] + li[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    seg = jnp.where(tri[None, None, :, :, None], seg, -jnp.inf)
+    # inter-chunk: log decay prev->q = F_q + m_prev
+    l_inter = F + mp[:, :, None]                              # (B,nc,Q,H)
+    m_tot = jnp.maximum(seg.max(axis=3), l_inter)             # (B,nc,Q,H)
+    D = jnp.exp(seg - m_tot[:, :, :, None, :])                # (B,nc,Q,Qs,H)
+    w_inter = jnp.exp(l_inter - m_tot)                        # (B,nc,Q,H)
+
+    scores = jnp.einsum("bcqhd,bcshd->bcqsh", qf, kf)         # (B,nc,Q,Qs,H)
+    num = jnp.einsum("bcqsh,bcqsh,bcshe->bcqhe", scores, D, vf) + \
+        jnp.einsum("bcqh,bchde,bcqhd->bcqhe", w_inter, Cp, qf)
+    # den: sum_s D[q,s] (k_s . q_q) + w_inter * (n_prev . q_q)
+    den = jnp.einsum("bcqsh,bcshd,bcqhd->bcqh", D, kf, qf) + \
+        jnp.einsum("bcqh,bchd,bcqhd->bcqh", w_inter, np_, qf)
+    # cap the stabiliser exponent: for very negative m the true
+    # normaliser max(|n.q|, 1) is 1 and the output is ~0 anyway
+    den = jnp.maximum(jnp.abs(den), jnp.exp(jnp.minimum(-m_tot, 30.0)))
+    h = num / den[..., None]
+    return h.reshape(B, S, H, dh)[:, :S0], (Cf, nf, mf)
+
+
+def mlstm_train(p, cfg, x, chunk: int | None = None):
+    d_in, nh, dh = _dims(cfg)
+    B, S, d = x.shape
+    q, k, v, log_i, log_f, og = _qkv_gates(p, cfg, x)
+    h, _ = _mlstm_chunked(q, k, v, log_i, log_f,
+                          chunk or cfg.ssm_chunk or S)
+    h = h.reshape(B, S, d_in).astype(x.dtype) * og
+    h = rms_norm(h, p["norm_w"], cfg.norm_eps)
+    return h @ p["w_down"].astype(x.dtype)
+
+
+def init_mlstm_state(cfg, batch: int):
+    d_in, nh, dh = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.zeros((batch, nh), jnp.float32),
+    }
+
+
+def mlstm_decode(p, cfg, x, state):
+    """One-token step.  x: (B,1,d)."""
+    d_in, nh, dh = _dims(cfg)
+    B = x.shape[0]
+    q, k, v, log_i, log_f, og = _qkv_gates(p, cfg, x)
+    C, n, m = state["C"], state["n"], state["m"]
+    li, lf = log_i[:, 0], log_f[:, 0]
+    m_new = jnp.maximum(lf + m, li)
+    f_ = jnp.exp(lf + m - m_new)
+    i_ = jnp.exp(li - m_new)
+    kt = k[:, 0].astype(jnp.float32)
+    vt = v[:, 0].astype(jnp.float32)
+    qt = q[:, 0].astype(jnp.float32)
+    C = C * f_[..., None, None] + i_[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", kt, vt)
+    n = n * f_[..., None] + i_[..., None] * kt
+    num = jnp.einsum("bhde,bhd->bhe", C, qt)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)),
+                      jnp.exp(jnp.minimum(-m_new, 30.0)))
+    h = (num / den[..., None]).reshape(B, 1, d_in).astype(x.dtype) * og
+    h = rms_norm(h, p["norm_w"], cfg.norm_eps)
+    return h @ p["w_down"].astype(x.dtype), {"C": C, "n": n, "m": m_new}
+
+
+# --------------------------------------------------------------------- #
+# sLSTM — scalar memory, inherently sequential (no parallel form exists)
+# --------------------------------------------------------------------- #
+def init_slstm(key, cfg) -> dict:
+    d = cfg.d_model
+    d_in, nh, dh = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_up": dense_init(ks[0], (d, d_in)),
+        "w_gates": dense_init(ks[1], (d_in, 4 * d_in), scale=0.02),
+        "r_gates": dense_init(ks[2], (d_in, 4 * d_in), scale=0.02),
+        "b_gates": jnp.concatenate([
+            jnp.zeros((d_in,)) - 2.0,   # i
+            jnp.zeros((d_in,)) + 3.0,   # f
+            jnp.zeros((d_in,)),         # z
+            jnp.zeros((d_in,)),         # o
+        ]).astype(jnp.float32),
+        "norm_w": jnp.ones((d_in,), jnp.float32),
+        "w_down": dense_init(ks[3], (d_in, d), scale=1.0 / d_in ** 0.5),
+    }
+
+
+def init_slstm_state(cfg, batch: int):
+    d_in, _, _ = _dims(cfg)
+    z = jnp.zeros((batch, d_in), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}
+
+
+def _slstm_cell(p, xg, st):
+    """xg: (B, 4*d_in) pre-activation input contribution."""
+    c, n, m, h_prev = st["c"], st["n"], st["m"], st["h"]
+    d_in = c.shape[-1]
+    g = xg + h_prev @ p["r_gates"] + p["b_gates"]
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    log_f = -jax.nn.softplus(-gf)       # log sigmoid
+    m_new = jnp.maximum(log_f + m, gi)
+    i_ = jnp.exp(gi - m_new)
+    f_ = jnp.exp(log_f + m - m_new)
+    z_ = jnp.tanh(gz)
+    o_ = jax.nn.sigmoid(go)
+    c_new = f_ * c + i_ * z_
+    n_new = f_ * n + i_
+    h = o_ * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h}
+
+
+def slstm_apply(p, cfg, x):
+    """Training / prefill: sequential scan over S.  x: (B,S,d)."""
+    d_in, _, _ = _dims(cfg)
+    B, S, d = x.shape
+    xm = (x @ p["w_up"].astype(x.dtype))
+    xg = (xm @ p["w_gates"].astype(x.dtype)).astype(jnp.float32)
+
+    def step(st, t):
+        st = _slstm_cell(p, xg[:, t], st)
+        return st, st["h"]
+
+    st0 = init_slstm_state(cfg, B)
+    _, hs = jax.lax.scan(step, st0, jnp.arange(S))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    h = rms_norm(h, p["norm_w"], cfg.norm_eps)
+    return h @ p["w_down"].astype(x.dtype)
+
+
+def slstm_decode(p, cfg, x, state):
+    B = x.shape[0]
+    xm = x[:, 0] @ p["w_up"].astype(x.dtype)
+    xg = (xm @ p["w_gates"].astype(x.dtype)).astype(jnp.float32)
+    st = _slstm_cell(p, xg, state)
+    h = st["h"][:, None].astype(x.dtype)
+    h = rms_norm(h, p["norm_w"], cfg.norm_eps)
+    return h @ p["w_down"].astype(x.dtype), st

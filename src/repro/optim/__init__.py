@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamWConfig, OptState, apply_updates, init_opt, warmup_cosine

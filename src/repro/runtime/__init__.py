@@ -1,0 +1,3 @@
+from repro.runtime.sharding import (batch_axes, batch_pspecs, cache_pspecs,
+                                    fits, named, param_pspecs)
+from repro.runtime.fault import StepGuard, Watchdog

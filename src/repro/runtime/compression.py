@@ -1,0 +1,70 @@
+"""Gradient / update compression with error feedback.
+
+Two codecs, both with residual (error-feedback) accumulation so compression
+noise doesn't bias training:
+
+  * ``int8``  — per-leaf absmax-scaled int8 quantisation (4x reduction of
+    cross-pod reduce traffic).
+  * ``topk``  — magnitude top-k sparsification (k a fraction of the leaf).
+
+Used by the local-SGD pod synchroniser in ``launch/train.py``: the pod axis
+carries the slowest links (data-centre network vs intra-pod ICI), exactly
+the paper's motivation for making inter-node messages fewer and smaller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_int8", "decompress_int8", "compress_topk",
+           "ef_compress_tree"]
+
+
+def compress_int8(x: jax.Array):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_topk(x: jax.Array, frac: float = 0.05):
+    """Keep the top ``frac`` fraction by |value| (dense mask representation —
+    the traffic saving is modelled; a production fabric would send
+    (indices, values))."""
+    flat = x.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(x) >= thresh
+    return jnp.where(mask, x, 0.0), mask
+
+
+def ef_compress_tree(grads, residual, codec: str = "int8",
+                     topk_frac: float = 0.05):
+    """Error-feedback compression over a pytree.
+
+    Returns (compressed_grads, new_residual).  ``residual`` carries the
+    quantisation error into the next step: g_t' = C(g_t + r_{t-1});
+    r_t = (g_t + r_{t-1}) - g_t'.
+    """
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        if codec == "int8":
+            q, s = compress_int8(g)
+            d = decompress_int8(q, s)
+        elif codec == "topk":
+            d, _ = compress_topk(g, topk_frac)
+        elif codec == "none":
+            d = g
+        else:
+            raise ValueError(codec)
+        return d, g - d
+
+    out = jax.tree.map(one, grads, residual)
+    comp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return comp, res

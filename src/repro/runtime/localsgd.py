@@ -1,0 +1,68 @@
+"""Local-SGD pod synchronisation with error-feedback compression.
+
+The ``pod`` axis carries the slowest links (inter-pod DCN vs intra-pod
+ICI) — the paper's fat-node argument at pod granularity: make inter-pod
+messages *fewer* (every H steps instead of every step) and *smaller*
+(error-feedback int8/top-k on the parameter delta).
+
+Protocol (H-step local SGD / "post-local SGD"):
+  * each pod trains independently for H steps from a common anchor;
+  * at sync time each pod compresses (params - anchor), the deltas are
+    averaged across pods (one all-reduce on the pod axis), and every pod
+    applies the averaged delta to the anchor;
+  * the compression residual is carried into the next round (EF), so the
+    noise does not bias the trajectory.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime.compression import ef_compress_tree
+
+__all__ = ["pod_sync", "make_pod_sync"]
+
+
+def pod_sync(params, anchor, residual, mesh, axis: str = "pod",
+             codec: str = "int8", topk_frac: float = 0.05):
+    """One sync round.  Returns (new_params, new_anchor, new_residual).
+
+    params/anchor/residual: pytrees replicated within each pod (they may be
+    sharded over other axes; only ``axis`` is reduced over).
+    """
+    delta = jax.tree.map(
+        lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32),
+        params, anchor)
+    comp, residual = ef_compress_tree(delta, residual, codec=codec,
+                                      topk_frac=topk_frac)
+
+    n = mesh.shape[axis]
+
+    def mean_over_pods(x):
+        spec = P(*(None,) * x.ndim)
+        return jax.shard_map(
+            lambda v: jax.lax.psum(v, axis) / n, mesh=mesh,
+            in_specs=spec, out_specs=spec, check_vma=False)(x)
+
+    avg = jax.tree.map(mean_over_pods, comp)
+    new_params = jax.tree.map(
+        lambda a, d, p: (a.astype(jnp.float32) + d).astype(p.dtype),
+        anchor, avg, params)
+    return new_params, jax.tree.map(jnp.copy, new_params), residual
+
+
+def make_pod_sync(mesh, axis: str = "pod", codec: str = "int8",
+                  topk_frac: float = 0.05):
+    """Jitted sync closure: (params, anchor, residual) -> same triple."""
+    if axis not in mesh.axis_names:
+        return None
+
+    @jax.jit
+    def sync(params, anchor, residual):
+        return pod_sync(params, anchor, residual, mesh, axis=axis,
+                        codec=codec, topk_frac=topk_frac)
+
+    return sync

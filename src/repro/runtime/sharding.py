@@ -1,0 +1,183 @@
+"""Sharding rules: map every parameter / batch / cache leaf to a
+PartitionSpec for the production mesh.
+
+Strategy (the hybrid hierarchy from the paper, transposed to LM training):
+  * ``model`` axis — tensor parallelism: column-parallel in-projections,
+    row-parallel out-projections, vocab-parallel embedding/head, expert
+    parallelism for MoE (when the expert count divides the axis).
+  * ``data`` axis  — batch data-parallelism + FSDP-style parameter sharding
+    (the second dim of every weight is sharded over ``data`` so optimizer
+    state for 34B-param configs fits per-chip).
+  * ``pod`` axis   — pure data parallelism; parameters are replicated across
+    pods so cross-pod (slow) traffic is only the gradient reduction —
+    mirroring the paper's "fat nodes, fewer+bigger messages" argument.
+
+Every rule degrades gracefully: an axis that does not divide a dim is
+dropped (replicated) rather than failing — head counts like Yi's 56 stay
+correct because projections are stored with heads fused into 2-D dims.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["batch_axes", "param_pspecs", "batch_pspecs", "cache_pspecs",
+           "named", "fits"]
+
+# leaf names -> role
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w_og", "w_in", "router",
+        "w_gates", "r_gates", "w_if", "lm_head"}
+_ROW = {"wo", "w_down", "w_out"}
+_STACKED = {"blocks", "enc_blocks", "dec_blocks", "mlstm_blocks",
+            "slstm_blocks", "mamba_blocks"}
+
+
+def batch_axes(mesh: Mesh, cfg=None):
+    names = ("pod", "data", "model") if (
+        cfg is not None and cfg.shard_strategy == "dp") else ("pod", "data")
+    return tuple(a for a in names if a in mesh.axis_names)
+
+
+def fits(mesh: Mesh, dim: int, *axes) -> bool:
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % n == 0
+
+
+def _maybe(mesh, dim, axis):
+    """axis if it divides dim else None (replicated)."""
+    if axis is None:
+        return None
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    return axis if fits(mesh, dim, *axes) else None
+
+
+def _leaf_rule(cfg, mesh, name: str, shape: tuple[int, ...], stacked: bool):
+    """PartitionSpec for one leaf; ``stacked`` leaves carry a leading L."""
+    body = shape[1:] if stacked else shape
+    lead = (None,) if stacked else ()
+
+    def spec(*parts):
+        return P(*lead, *(_maybe(mesh, d, a) for d, a in zip(body, parts)))
+
+    if cfg.shard_strategy == "dp":
+        # ZeRO-3: weights sharded across both axes for storage only; GSPMD
+        # all-gathers them per layer because activations stay batch-sharded
+        # on data x model.  Vocab-parallel layouts would clash with the
+        # model-axis batch sharding, so embed/head shard non-vocab dims.
+        if name == "embed":
+            return spec(None, ("data", "model"))
+        if name == "lm_head":
+            return spec(("data", "model"), None)
+        if len(body) == 2:
+            return spec("data", "model")
+        if len(body) == 3:
+            return spec(None, "data", "model")
+        if len(body) == 1:
+            return spec(("data", "model")) \
+                if fits(mesh, body[0], "data", "model") else spec(None)
+        return P(*lead, *(None,) * len(body))
+
+    if name == "embed":
+        return spec("model", "data")
+    if name == "enc_pos":
+        return spec(None, "model")
+    if len(body) == 3 and name in ("w_gate", "w_up", "w_down"):
+        # MoE expert weights
+        ep = cfg.moe is not None and cfg.moe.expert_parallel and \
+            fits(mesh, body[0], "model")
+        if name == "w_down":
+            return spec("model", None, "data") if ep else \
+                spec(None, "model", "data")
+        return spec("model", "data", None) if ep else \
+            spec(None, "data", "model")
+    if name in _COL and len(body) == 2:
+        return spec("data", "model")
+    if name in _ROW and len(body) == 2:
+        return spec("model", "data")
+    if name == "conv_w":
+        return spec(None, "model")
+    if len(body) == 1:
+        return spec("model") if body[0] >= 4096 else spec(None)
+    return P(*lead, *(None,) * len(body))
+
+
+def param_pspecs(cfg, mesh: Mesh, params_tree, serving: bool = False):
+    """Tree of PartitionSpec matching ``params_tree`` (arrays or
+    ShapeDtypeStructs).
+
+    ``serving``: inference holds no optimizer state, so the FSDP (`data`)
+    factor is dropped — weights replicate across the batch axes instead of
+    being re-gathered every decode step (§Perf P3)."""
+    def rule(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        stacked = any(n in _STACKED for n in names)
+        spec = _leaf_rule(cfg, mesh, names[-1], leaf.shape, stacked)
+        if serving:
+            spec = P(*(None if p == "data" else
+                       (tuple(a for a in p if a != "data") or None)
+                       if isinstance(p, tuple) else p
+                       for p in spec))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def batch_pspecs(cfg, shape_cfg, mesh: Mesh):
+    """Input specs for {tokens[, frames][, pos]}."""
+    bax = batch_axes(mesh, cfg)
+    b = shape_cfg.global_batch
+    while bax and not fits(mesh, b, *bax):
+        bax = bax[:-1]
+    bspec = bax if bax else None
+    out = {"tokens": P(bspec, None)}
+    if cfg.is_encdec:
+        out["frames"] = P(bspec, None, None)
+    if shape_cfg.kind == "decode":
+        out["pos"] = P()   # scalar (synchronized wave)
+    return out
+
+
+def cache_pspecs(cfg, shape_cfg, mesh: Mesh, cache_tree):
+    """Specs for the serving cache.
+
+    Attention KV caches are *sequence-sharded over the model axis*
+    (distributed flash-decode: each shard computes a partial attention and
+    GSPMD inserts the softmax-stat combine) — the two-phase local-compute +
+    small-combine structure of the paper's SpMV.  When global_batch == 1
+    (long_500k) the sequence is sharded over data x model instead.
+    SSM states shard their largest divisible state dim over ``model``.
+    """
+    bax = batch_axes(mesh)
+    b = shape_cfg.global_batch
+    b_ok = fits(mesh, b, *bax)
+    bspec = bax if b_ok else None
+
+    def rule(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = names[-1]
+        sh = leaf.shape
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # (L, B, S, KV, dh)
+            seq = _maybe(mesh, sh[2], "model") if b_ok else \
+                _maybe(mesh, sh[2], ("data", "model"))
+            return P(None, bspec, seq, None, None)
+        if name == "h" and len(sh) == 5:   # mamba state (L, B, H, dh, N)
+            return P(None, bspec, _maybe(mesh, sh[2], "model"), None, None)
+        if name == "conv" and len(sh) == 4:  # (L, B, W-1, C)
+            return P(None, bspec, None, _maybe(mesh, sh[3], "model"))
+        if name == "C" and len(sh) == 5:   # mlstm cell (L, B, H, dh, dh)
+            return P(None, bspec, None, _maybe(mesh, sh[3], "model"), None)
+        if name == "n" and len(sh) == 4:   # mlstm normaliser (L, B, H, dh)
+            return P(None, bspec, None, _maybe(mesh, sh[3], "model"))
+        if len(sh) == 3:                   # mlstm m / slstm c,n,m,h (L, B, d)
+            return P(None, bspec, _maybe(mesh, sh[2], "model"))
+        return P(*(None,) * len(sh))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def named(mesh: Mesh, tree_of_pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,312 @@
+"""Sparse matrix containers.
+
+Three representations are used throughout the framework:
+
+``CSRMatrix``
+    Host-side (numpy) compressed sparse row storage.  All assembly,
+    partitioning and halo-plan construction happens here, mirroring the
+    paper's observation that "the matrix stencil does not change during the
+    solve" so arbitrarily complex partitioning is a one-off host-side cost
+    cached with the matrix.
+
+``ELLMatrix``
+    Device-side padded row-major (ELLPACK) storage: every row padded to the
+    same width.  TPU/XLA-friendly (static shapes, vectorised gather) and is
+    the "vector-based threading" analogue: work is split by *rows*.
+
+``BalancedCOO``
+    Device-side format for the Pallas kernel and the "thread-balanced" mode:
+    rows are grouped into ``nbins`` contiguous bins holding an approximately
+    equal number of *non-zeros* (greedy + diffusion partition, see
+    ``repro.core.partition``).  Each bin is padded to a common nonzero count,
+    so the nnz balancing directly minimises static-shape padding waste — the
+    TPU-native payoff of the paper's load-balancing idea.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CSRMatrix", "ELLMatrix", "BalancedCOO"]
+
+
+@dataclasses.dataclass
+class CSRMatrix:
+    """Host-side CSR matrix (numpy arrays)."""
+
+    indptr: np.ndarray   # (n_rows + 1,) int64
+    indices: np.ndarray  # (nnz,) int32/int64 column indices
+    data: np.ndarray     # (nnz,) float
+    shape: tuple[int, int]
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    @property
+    def row_nnz(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    # ------------------------------------------------------------------ #
+    # constructors
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_coo(cls, rows, cols, vals, shape) -> "CSRMatrix":
+        rows = np.asarray(rows)
+        cols = np.asarray(cols)
+        vals = np.asarray(vals)
+        order = np.lexsort((cols, rows))
+        rows, cols, vals = rows[order], cols[order], vals[order]
+        # sum duplicates
+        if len(rows):
+            key = rows.astype(np.int64) * shape[1] + cols.astype(np.int64)
+            uniq, inv = np.unique(key, return_inverse=True)
+            sums = np.zeros(len(uniq), dtype=vals.dtype)
+            np.add.at(sums, inv, vals)
+            rows = (uniq // shape[1]).astype(np.int64)
+            cols = (uniq % shape[1]).astype(np.int64)
+            vals = sums
+        indptr = np.zeros(shape[0] + 1, dtype=np.int64)
+        np.add.at(indptr, rows + 1, 1)
+        indptr = np.cumsum(indptr)
+        return cls(indptr=indptr, indices=cols.astype(np.int64), data=vals,
+                   shape=tuple(shape))
+
+    @classmethod
+    def from_dense(cls, dense: np.ndarray) -> "CSRMatrix":
+        rows, cols = np.nonzero(dense)
+        return cls.from_coo(rows, cols, dense[rows, cols], dense.shape)
+
+    @classmethod
+    def from_scipy(cls, m) -> "CSRMatrix":
+        m = m.tocsr()
+        return cls(indptr=np.asarray(m.indptr, dtype=np.int64),
+                   indices=np.asarray(m.indices, dtype=np.int64),
+                   data=np.asarray(m.data),
+                   shape=tuple(m.shape))
+
+    # ------------------------------------------------------------------ #
+    # host-side ops
+    # ------------------------------------------------------------------ #
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=self.data.dtype)
+        for r in range(self.n_rows):
+            lo, hi = self.indptr[r], self.indptr[r + 1]
+            out[r, self.indices[lo:hi]] += self.data[lo:hi]
+        return out
+
+    def matvec(self, x: np.ndarray) -> np.ndarray:
+        """Reference host SpMV (oracle for everything else)."""
+        y = np.zeros(self.n_rows, dtype=np.result_type(self.data, x))
+        for r in range(self.n_rows):
+            lo, hi = self.indptr[r], self.indptr[r + 1]
+            y[r] = np.dot(self.data[lo:hi], x[self.indices[lo:hi]])
+        return y
+
+    def diagonal(self) -> np.ndarray:
+        d = np.zeros(self.n_rows, dtype=self.data.dtype)
+        for r in range(self.n_rows):
+            lo, hi = self.indptr[r], self.indptr[r + 1]
+            hit = np.nonzero(self.indices[lo:hi] == r)[0]
+            if hit.size:
+                d[r] = self.data[lo + hit[0]]
+        return d
+
+    def row_slice(self, lo: int, hi: int) -> "CSRMatrix":
+        """Extract block of rows [lo, hi) (column space unchanged)."""
+        s, e = self.indptr[lo], self.indptr[hi]
+        return CSRMatrix(indptr=self.indptr[lo:hi + 1] - s,
+                         indices=self.indices[s:e].copy(),
+                         data=self.data[s:e].copy(),
+                         shape=(hi - lo, self.n_cols))
+
+    def col_split(self, lo: int, hi: int) -> tuple["CSRMatrix", "CSRMatrix", np.ndarray]:
+        """Split into (inside, outside) by column range [lo, hi).
+
+        ``inside`` has columns renumbered to 0..hi-lo.  ``outside`` keeps a
+        *compressed* column space: its columns are renumbered into
+        0..n_ghost-1 and the returned ``ghost_cols`` array maps them back to
+        global column ids.  This mirrors PETSc's MPIAIJ diagonal /
+        off-diagonal storage with its compressed ghost column map.
+        """
+        inside_mask = (self.indices >= lo) & (self.indices < hi)
+        n = self.n_rows
+
+        def build(mask, col_map):
+            indptr = np.zeros(n + 1, dtype=np.int64)
+            counts = np.add.reduceat(mask.astype(np.int64), self.indptr[:-1]) \
+                if self.nnz else np.zeros(n, dtype=np.int64)
+            # reduceat quirks: rows with empty ranges
+            counts = np.array([mask[self.indptr[r]:self.indptr[r + 1]].sum()
+                               for r in range(n)], dtype=np.int64)
+            indptr[1:] = np.cumsum(counts)
+            idx = np.nonzero(mask)[0]
+            return CSRMatrix(indptr=indptr,
+                             indices=col_map(self.indices[idx]),
+                             data=self.data[idx].copy(),
+                             shape=(n, 0))  # shape fixed below
+
+        inside = build(inside_mask, lambda c: c - lo)
+        inside.shape = (n, hi - lo)
+
+        out_idx = np.nonzero(~inside_mask)[0]
+        ghost_cols = np.unique(self.indices[out_idx]) if out_idx.size else \
+            np.zeros(0, dtype=np.int64)
+        remap = {g: i for i, g in enumerate(ghost_cols)}
+        outside = build(~inside_mask,
+                        lambda c: np.array([remap[g] for g in c], dtype=np.int64)
+                        if c.size else c)
+        outside.shape = (n, max(1, len(ghost_cols)))
+        return inside, outside, ghost_cols
+
+
+# ---------------------------------------------------------------------- #
+# device formats (registered as pytrees)
+# ---------------------------------------------------------------------- #
+def ell_arrays_from_csr(m: CSRMatrix, width: int | None = None,
+                        n_rows_pad: int | None = None
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side ELL packing: returns (cols int32, vals float64) numpy."""
+    rn = m.row_nnz
+    w = int(width if width is not None else (rn.max() if m.n_rows else 1))
+    w = max(w, 1)
+    nr = int(n_rows_pad if n_rows_pad is not None else m.n_rows)
+    cols = np.zeros((nr, w), dtype=np.int32)
+    vals = np.zeros((nr, w), dtype=np.float64)
+    for r in range(m.n_rows):
+        lo, hi = m.indptr[r], m.indptr[r + 1]
+        k = hi - lo
+        if k > w:
+            raise ValueError(f"row {r} has {k} nnz > ELL width {w}")
+        cols[r, :k] = m.indices[lo:hi]
+        vals[r, :k] = m.data[lo:hi]
+    return cols, vals
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["cols", "vals"],
+         meta_fields=["n_rows", "n_cols"])
+@dataclasses.dataclass
+class ELLMatrix:
+    """Padded-row (ELLPACK) storage: ``y[r] = sum_k vals[r,k] * x[cols[r,k]]``.
+
+    Padding entries have ``vals == 0`` and ``cols == 0`` so they contribute
+    nothing.  Equal-*rows* work splitting over this format is the
+    "vector-based threading" analogue from the paper.
+    """
+
+    cols: jax.Array  # (n_rows_pad, width) int32
+    vals: jax.Array  # (n_rows_pad, width) float
+    n_rows: int
+    n_cols: int
+
+    @property
+    def width(self) -> int:
+        return self.cols.shape[1]
+
+    @property
+    def n_rows_pad(self) -> int:
+        return self.cols.shape[0]
+
+    @classmethod
+    def from_csr(cls, m: CSRMatrix, width: int | None = None,
+                 n_rows_pad: int | None = None,
+                 dtype=jnp.float32) -> "ELLMatrix":
+        cols, vals = ell_arrays_from_csr(m, width=width, n_rows_pad=n_rows_pad)
+        return cls(cols=jnp.asarray(cols),
+                   vals=jnp.asarray(vals.astype(np.dtype(dtype))),
+                   n_rows=m.n_rows, n_cols=m.n_cols)
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        """Vectorised jnp SpMV (padding-safe)."""
+        y = jnp.einsum("rk,rk->r", self.vals, x[self.cols].astype(self.vals.dtype))
+        return y[: self.n_rows] if self.n_rows != self.n_rows_pad else y
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["vals", "cols", "lrows", "bin_starts", "out_gather"],
+         meta_fields=["n_rows", "n_cols", "rows_pad"])
+@dataclasses.dataclass
+class BalancedCOO:
+    """nnz-balanced binned COO — input format of the Pallas SpMV kernel.
+
+    Rows are grouped into ``nbins`` contiguous bins with ~equal nonzeros
+    (the paper's greedy + diffusion thread partition).  Each bin is padded to
+    ``nnz_pad`` entries and ``rows_pad`` rows so the kernel grid is static.
+    ``lrows`` holds *bin-local* row ids; ``out_gather`` maps the kernel's
+    (nbins, rows_pad) output back to the flat row vector.
+    """
+
+    vals: jax.Array        # (nbins, nnz_pad) float
+    cols: jax.Array        # (nbins, nnz_pad) int32 — column into x
+    lrows: jax.Array       # (nbins, nnz_pad) int32 — bin-local row id
+    bin_starts: jax.Array  # (nbins,) int32 — first global row of each bin
+    out_gather: jax.Array  # (n_rows,) int32 — flat index into (nbins*rows_pad)
+    n_rows: int
+    n_cols: int
+    rows_pad: int
+
+    @property
+    def nbins(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def nnz_pad(self) -> int:
+        return self.vals.shape[1]
+
+    @classmethod
+    def from_csr(cls, m: CSRMatrix, bounds: np.ndarray,
+                 dtype=jnp.float32,
+                 nnz_align: int = 128, rows_align: int = 8) -> "BalancedCOO":
+        """``bounds``: (nbins+1,) row partition from ``repro.core.partition``."""
+        bounds = np.asarray(bounds, dtype=np.int64)
+        nbins = len(bounds) - 1
+        rn = m.row_nnz
+        bin_nnz = np.array([rn[bounds[t]:bounds[t + 1]].sum() for t in range(nbins)],
+                           dtype=np.int64)
+        bin_rows = np.diff(bounds)
+
+        def _align(v, a):
+            return int(max(a, -(-int(v) // a) * a))
+
+        nnz_pad = _align(bin_nnz.max() if nbins else 1, nnz_align)
+        rows_pad = _align(bin_rows.max() if nbins else 1, rows_align)
+
+        vals = np.zeros((nbins, nnz_pad), dtype=np.float64)
+        cols = np.zeros((nbins, nnz_pad), dtype=np.int32)
+        lrows = np.zeros((nbins, nnz_pad), dtype=np.int32)
+        out_gather = np.zeros(m.n_rows, dtype=np.int32)
+        for t in range(nbins):
+            lo_r, hi_r = bounds[t], bounds[t + 1]
+            s, e = m.indptr[lo_r], m.indptr[hi_r]
+            k = e - s
+            vals[t, :k] = m.data[s:e]
+            cols[t, :k] = m.indices[s:e]
+            # bin-local row ids, repeated per nnz
+            rep = np.repeat(np.arange(hi_r - lo_r), rn[lo_r:hi_r])
+            lrows[t, :k] = rep
+            out_gather[lo_r:hi_r] = t * rows_pad + np.arange(hi_r - lo_r)
+        return cls(vals=jnp.asarray(vals, dtype=dtype),
+                   cols=jnp.asarray(cols),
+                   lrows=jnp.asarray(lrows),
+                   bin_starts=jnp.asarray(bounds[:-1], dtype=jnp.int32),
+                   out_gather=jnp.asarray(out_gather),
+                   n_rows=m.n_rows, n_cols=m.n_cols, rows_pad=rows_pad)
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of stored entries that are padding — the balanced
+        partition minimises this (the TPU meaning of load balance)."""
+        total = self.nbins * self.nnz_pad
+        real = int((np.asarray(self.vals) != 0).sum())
+        return 1.0 - real / max(total, 1)

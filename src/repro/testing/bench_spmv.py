@@ -1,0 +1,91 @@
+"""Measured SpMV / CG timing in a fresh process with N host devices.
+
+Prints one JSON dict.  Used by benchmarks/ratio_sweep.py (paper Fig. 2) and
+benchmarks/strong_scaling.py (Figs. 3-4).
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-node", type=int, required=True)
+    ap.add_argument("--n-core", type=int, required=True)
+    ap.add_argument("--mode", default="balanced")
+    ap.add_argument("--transport", default="a2a")
+    ap.add_argument("--n-surface", type=int, default=2000)
+    ap.add_argument("--layers", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=50)
+    ap.add_argument("--cg", action="store_true")
+    ap.add_argument("--tol", type=float, default=1e-8)
+    args = ap.parse_args()
+
+    ndev = args.n_node * args.n_core
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={ndev}")
+
+    import jax
+    import numpy as np
+
+    from repro.core import build_spmv_plan, make_cg, make_spmv, to_dist
+    from repro.sparse import extruded_mesh_matrix
+
+    t0 = time.time()
+    A = extruded_mesh_matrix(args.n_surface, args.layers, seed=0)
+    t_gen = time.time() - t0
+    mesh = jax.make_mesh((args.n_node, args.n_core), ("node", "core"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    t0 = time.time()
+    plan, layout = build_spmv_plan(A, args.n_node, args.n_core,
+                                   mode=args.mode)
+    t_plan = time.time() - t0
+
+    rng = np.random.default_rng(0)
+    x = to_dist(rng.normal(size=A.n_rows), layout, plan)
+
+    out = {"n_node": args.n_node, "n_core": args.n_core, "mode": args.mode,
+       "transport": args.transport,
+           "n_rows": A.n_rows, "nnz": A.nnz,
+           "t_gen_s": round(t_gen, 2), "t_plan_s": round(t_plan, 3),
+           "halo_bytes_per_node": plan_halo_bytes(layout),
+           }
+
+    if args.cg:
+        solve = make_cg(plan, mesh)
+        b = to_dist(rng.normal(size=A.n_rows), layout, plan)
+        xd, it, rel = solve(b, tol=args.tol, maxiter=200)  # warmup+compile
+        jax.block_until_ready(xd)
+        t0 = time.time()
+        xd, it, rel = solve(b, tol=args.tol, maxiter=args.iters)
+        jax.block_until_ready(xd)
+        dt = time.time() - t0
+        out.update(cg_iters=int(it), cg_rel=float(rel),
+                   us_per_iter=dt / max(int(it), 1) * 1e6)
+    else:
+        spmv = make_spmv(plan, mesh, transport=args.transport,
+                         neighbor_offsets=layout["neighbor_offsets"])
+        y = spmv(x)
+        jax.block_until_ready(y)           # compile + warmup
+        t0 = time.time()
+        for _ in range(args.iters):
+            y = spmv(x)
+        jax.block_until_ready(y)
+        dt = time.time() - t0
+        out["us_per_spmv"] = dt / args.iters * 1e6
+        out["gflops"] = 2.0 * A.nnz / (dt / args.iters) / 1e9
+
+    print(json.dumps(out))
+    return 0
+
+
+def plan_halo_bytes(layout) -> float:
+    halo = layout["halo"]
+    return halo.comm_bytes_per_node(itemsize=4)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

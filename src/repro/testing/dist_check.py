@@ -1,0 +1,76 @@
+"""Multi-device correctness check, run as a subprocess from tests.
+
+Usage:  python -m repro.testing.dist_check --n-node 4 --n-core 2 --mode balanced
+
+Sets XLA_FLAGS *before* importing jax so the host platform exposes
+n_node * n_core fake devices — only inside this process (the main test
+process keeps its single device, per the project rules).
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-node", type=int, default=4)
+    ap.add_argument("--n-core", type=int, default=2)
+    ap.add_argument("--mode", default="balanced")
+    ap.add_argument("--backend", default="jnp")
+    ap.add_argument("--transport", default="a2a")
+    ap.add_argument("--matrix", default="mesh", choices=["mesh", "random"])
+    ap.add_argument("--n-surface", type=int, default=80)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--n", type=int, default=400)
+    ap.add_argument("--cg", action="store_true")
+    args = ap.parse_args()
+
+    ndev = args.n_node * args.n_core
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={ndev}"
+    )
+
+    import jax
+    import numpy as np
+
+    from repro.core import build_spmv_plan, make_spmv, make_cg, to_dist, from_dist
+    from repro.sparse import extruded_mesh_matrix, random_spd_matrix
+
+    assert len(jax.devices()) == ndev, (len(jax.devices()), ndev)
+
+    if args.matrix == "mesh":
+        A = extruded_mesh_matrix(args.n_surface, args.layers, seed=0)
+    else:
+        A = random_spd_matrix(args.n, nnz_per_row=9, seed=0)
+
+    mesh = jax.make_mesh((args.n_node, args.n_core), ("node", "core"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    plan, layout = build_spmv_plan(A, args.n_node, args.n_core, mode=args.mode)
+    spmv = make_spmv(plan, mesh, backend=args.backend,
+                     transport=args.transport,
+                     neighbor_offsets=layout["neighbor_offsets"])
+
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=A.n_rows)
+    y_ref = A.matvec(x)
+    y = from_dist(spmv(to_dist(x, layout, plan)), layout, plan)
+    err = float(np.abs(y - y_ref).max() / np.abs(y_ref).max())
+    print(f"SPMV_REL_ERR {err:.3e}")
+    ok = err < 5e-5
+
+    if args.cg:
+        solve = make_cg(plan, mesh, backend=args.backend)
+        b = rng.normal(size=A.n_rows)
+        xd, iters, rel = solve(to_dist(b, layout, plan), tol=1e-6, maxiter=2000)
+        xs = from_dist(xd, layout, plan)
+        true_rel = float(np.linalg.norm(A.matvec(xs) - b) / np.linalg.norm(b))
+        print(f"CG_ITERS {int(iters)} CG_REL {float(rel):.3e} TRUE_REL {true_rel:.3e}")
+        ok = ok and true_rel < 1e-4 and int(iters) < 2000
+
+    print("OK" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,43 @@
+"""Elastic checkpoint restore: save sharded on a 4-device mesh, restore on
+a 2-device mesh with different shardings (subprocess; two phases in one
+process using two meshes over the same fake devices)."""
+import os
+import sys
+
+
+def main() -> int:
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.checkpoint import load, save
+
+    path = sys.argv[1]
+    mesh4 = jax.make_mesh((4,), ("data",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    mesh2 = jax.make_mesh((2, 2), ("data", "model"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(8, 16)).astype(np.float32)
+    tree = {"w": jax.device_put(jnp.asarray(w),
+                                NamedSharding(mesh4, P("data", None)))}
+    save(path, 7, tree, {"step": 7})
+
+    like = {"w": jax.ShapeDtypeStruct((8, 16), jnp.float32)}
+    shardings = {"w": NamedSharding(mesh2, P("model", "data"))}
+    loaded, extra = load(path, 7, like, shardings=shardings)
+    got = np.asarray(loaded["w"])
+    err = np.abs(got - w).max()
+    same_shard = loaded["w"].sharding == shardings["w"]
+    print(f"ELASTIC_ERR {err:.3e} SHARDING_OK {same_shard}")
+    ok = err == 0.0 and same_shard and extra["step"] == 7
+    print("OK" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

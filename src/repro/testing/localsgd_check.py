@@ -1,0 +1,72 @@
+"""Multi-device local-SGD sync check (subprocess, 2 fake pods).
+
+Verifies: (1) after sync all pods hold identical parameters equal to the
+anchor + mean compressed delta; (2) with codec='none' the sync is an exact
+parameter average; (3) EF residuals stay bounded over rounds.
+"""
+import os
+import sys
+
+
+def main() -> int:
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=2")
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.runtime.localsgd import pod_sync
+
+    mesh = jax.make_mesh((2,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+
+    # per-pod divergent params, replicated layout: emulate with the pod axis
+    # by building pod-varying values via shard_map over 'pod'
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    anchor = {"w": jnp.asarray(rng.normal(size=(16,)), jnp.float32)}
+    # pod-dependent drift: stack per-pod params along a leading axis sharded
+    # over 'pod', then drop it inside shard_map when syncing -> emulate by
+    # computing the expected average on host instead:
+    drift0 = rng.normal(size=(16,)).astype(np.float32) * 0.1
+    drift1 = rng.normal(size=(16,)).astype(np.float32) * 0.1
+
+    def run_pod_step(a):
+        # inside shard_map each pod applies its own drift
+        i = jax.lax.axis_index("pod")
+        d = jnp.where(i == 0, jnp.asarray(drift0), jnp.asarray(drift1))
+        return a + d
+
+    stepped = jax.shard_map(run_pod_step, mesh=mesh,
+                            in_specs=P(*(None,) * 1),
+                            out_specs=P(*(None,) * 1),
+                            check_vma=False)(anchor["w"])
+    # stepped is pod-varying; wrap as params tree
+    params = {"w": stepped}
+    residual = {"w": jnp.zeros((16,), jnp.float32)}
+
+    new_params, new_anchor, residual = pod_sync(
+        params, anchor, residual, mesh, codec="none")
+    want = anchor["w"] + (drift0 + drift1) / 2.0
+    got = np.asarray(new_params["w"])
+    err = np.abs(got - np.asarray(want)).max()
+    print(f"EXACT_AVG_ERR {err:.3e}")
+    ok = err < 1e-6
+
+    # int8 EF: residual bounded over rounds
+    residual = {"w": jnp.zeros((16,), jnp.float32)}
+    p = {"w": anchor["w"]}
+    a = {"w": anchor["w"]}
+    for r in range(10):
+        p = {"w": p["w"] + jnp.asarray(rng.normal(size=(16,)), jnp.float32) * 0.1}
+        p, a, residual = pod_sync(p, a, residual, mesh, codec="int8")
+    rmax = float(jnp.abs(residual["w"]).max())
+    print(f"EF_RESIDUAL_MAX {rmax:.3e}")
+    ok = ok and rmax < 0.1
+
+    print("OK" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

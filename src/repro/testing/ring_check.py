@@ -1,0 +1,31 @@
+"""Multi-device numerics check for the ring collective-matmul (subprocess)."""
+import os
+import sys
+
+
+def main() -> int:
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.runtime.overlap import make_ring_linear
+
+    mesh = jax.make_mesh((4,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    ring = make_ring_linear(mesh, "model")
+    got = np.asarray(jax.jit(ring)(x, w))
+    want = np.asarray(x @ w)
+    err = np.abs(got - want).max() / np.abs(want).max()
+    print(f"RING_REL_ERR {err:.3e}")
+    ok = err < 1e-5
+    print("OK" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,246 @@
+"""Per-architecture smoke tests (reduced configs) + layer-level math checks.
+
+One smoke test per assigned architecture: instantiate the reduced config,
+run one forward/train step on CPU, assert output shapes + no NaNs — per the
+project brief.  Full configs are exercised only through the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.models.common import decode_attention, flash_attention
+from repro.models.model import (decode_step, forward_train, init_cache,
+                                init_params, loss_fn, prefill)
+
+ARCHS = ["yi-34b", "stablelm-1.6b", "qwen2.5-3b", "granite-3-8b",
+         "chameleon-34b", "xlstm-350m", "granite-moe-3b-a800m",
+         "qwen3-moe-30b-a3b", "zamba2-1.2b", "whisper-large-v3"]
+
+
+def _setup(name, B=2, S=64, seed=0):
+    cfg = get_config(name).reduced()
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    return cfg, params, batch
+
+
+def test_all_assigned_archs_registered():
+    assert set(ARCHS) <= set(list_archs())
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_smoke_forward_and_train_step(name):
+    cfg, params, batch = _setup(name)
+    B, S = batch["tokens"].shape
+    logits, _ = jax.jit(lambda p, b: forward_train(
+        p, cfg, b["tokens"], frames=b.get("frames")))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    # one gradient step
+    grad_fn = jax.jit(jax.grad(lambda p, b: loss_fn(p, cfg, b)[0]))
+    grads = grad_fn(params, batch)
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in flat)
+    # no dead gradients on any parameter matrix
+    big = [g for g in flat if g.ndim >= 2]
+    assert all(float(jnp.abs(g).max()) > 0 for g in big)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_smoke_prefill_decode(name):
+    cfg, params, batch = _setup(name)
+    toks = batch["tokens"]
+    B, S = toks.shape
+    frames = batch.get("frames")
+    cache = init_cache(cfg, B, S + 8)
+    cache, logits0 = jax.jit(lambda p, t, c: prefill(
+        p, cfg, t, c, frames=frames))(params, toks, cache)
+    assert logits0.shape == (B, 1, cfg.vocab_padded)
+    nt = jnp.argmax(logits0[:, 0, :cfg.vocab], -1)[:, None]
+    pos = jnp.full((B,), S, jnp.int32)
+    logits1, cache = jax.jit(lambda p, t, c, q: decode_step(
+        p, cfg, t, c, q))(params, nt, cache, pos)
+    assert logits1.shape == (B, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits1, np.float32)).all()
+
+
+@pytest.mark.parametrize("name", ["yi-34b", "zamba2-1.2b", "xlstm-350m",
+                                  "whisper-large-v3"])
+def test_prefill_matches_train_forward(name):
+    """Prefill must be bit-identical to the training forward at the last
+    position (same routing, same attention math)."""
+    cfg, params, batch = _setup(name)
+    toks = batch["tokens"]
+    frames = batch.get("frames")
+    cache = init_cache(cfg, toks.shape[0], toks.shape[1] + 8)
+    _, lp = jax.jit(lambda p, t, c: prefill(p, cfg, t, c, frames=frames))(
+        params, toks, cache)
+    lt, _ = jax.jit(lambda p, t: forward_train(p, cfg, t, frames=frames))(
+        params, toks)
+    np.testing.assert_allclose(np.asarray(lp[:, 0], np.float32),
+                               np.asarray(lt[:, -1], np.float32),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["yi-34b", "qwen2.5-3b", "zamba2-1.2b",
+                                  "xlstm-350m"])
+def test_decode_matches_train_forward(name):
+    """Greedy decode continuation equals running the training forward on the
+    extended sequence (within bf16 tolerance)."""
+    cfg, params, batch = _setup(name)
+    toks = batch["tokens"]
+    B, S = toks.shape
+    cache = init_cache(cfg, B, S + 8)
+    cache, l0 = jax.jit(lambda p, t, c: prefill(p, cfg, t, c))(
+        params, toks, cache)
+    nt = jnp.argmax(l0[:, 0, :cfg.vocab], -1)[:, None]
+    ld, _ = jax.jit(lambda p, t, c, q: decode_step(p, cfg, t, c, q))(
+        params, nt, cache, jnp.full((B,), S, jnp.int32))
+    lt, _ = jax.jit(lambda p, t: forward_train(p, cfg, t))(
+        params, jnp.concatenate([toks, nt], 1))
+    ref = np.asarray(lt[:, -1], np.float32)
+    got = np.asarray(ld, np.float32)
+    assert np.abs(ref - got).max() <= 2e-2 * max(1.0, np.abs(ref).max())
+
+
+def test_moe_decode_matches_with_large_capacity():
+    """With capacity high enough that nothing drops, MoE decode must agree
+    with the training forward too."""
+    import dataclasses
+    cfg = get_config("qwen3-moe-30b-a3b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 32), 0, cfg.vocab)
+    cache = init_cache(cfg, 2, 40)
+    cache, l0 = jax.jit(lambda p, t, c: prefill(p, cfg, t, c))(params, toks, cache)
+    nt = jnp.argmax(l0[:, 0, :cfg.vocab], -1)[:, None]
+    ld, _ = jax.jit(lambda p, t, c, q: decode_step(p, cfg, t, c, q))(
+        params, nt, cache, jnp.full((2,), 32, jnp.int32))
+    lt, _ = jax.jit(lambda p, t: forward_train(p, cfg, t))(
+        params, jnp.concatenate([toks, nt], 1))
+    ref = np.asarray(lt[:, -1], np.float32)
+    got = np.asarray(ld, np.float32)
+    assert np.abs(ref - got).max() <= 2e-2 * max(1.0, np.abs(ref).max())
+
+
+# --------------------------------------------------------------------- #
+# layer-level math
+# --------------------------------------------------------------------- #
+def _naive_attention(q, k, v, causal=True):
+    B, Sq, H, dh = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("Sq,Sk,H,KV,cq,ck", [
+    (64, 64, 4, 4, 16, 16),
+    (128, 128, 8, 2, 32, 64),
+    (64, 64, 6, 3, 64, 64),
+])
+def test_flash_attention_matches_naive(Sq, Sk, H, KV, cq, ck):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    dh = 16
+    q = jax.random.normal(ks[0], (2, Sq, H, dh))
+    k = jax.random.normal(ks[1], (2, Sk, KV, dh))
+    v = jax.random.normal(ks[2], (2, Sk, KV, dh))
+    # flash_attention applies the 1/sqrt(dh) scale internally? No — callers
+    # pass unscaled q; the naive helper scales, so scale q here to match.
+    got = flash_attention(q * dh ** 0.5, k, v, causal=True,
+                          chunk_q=cq, chunk_k=ck)
+    want = _naive_attention(q * dh ** 0.5, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4)
+
+
+def test_decode_attention_matches_naive():
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    B, S, H, KV, dh = 3, 32, 8, 4, 16
+    q = jax.random.normal(ks[0], (B, 1, H, dh))
+    kc = jax.random.normal(ks[1], (B, S, KV, dh))
+    vc = jax.random.normal(ks[2], (B, S, KV, dh))
+    pos = jnp.asarray([5, 17, 32], jnp.int32)
+    got = decode_attention(q, kc, vc, pos)
+    for b in range(B):
+        # _naive_attention applies the 1/sqrt(dh) scale itself, matching
+        # decode_attention's internal scaling — pass q unscaled
+        want = _naive_attention(q[b:b + 1], kc[b:b + 1, :pos[b]],
+                                vc[b:b + 1, :pos[b]], causal=False)
+        np.testing.assert_allclose(np.asarray(got[b:b + 1]),
+                                   np.asarray(want), atol=2e-4)
+
+
+def test_ssd_chunked_matches_scan():
+    from repro.models.mamba2 import _ssd_chunked, mamba2_ref_scan
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    B, S, H, P, N = 2, 96, 3, 8, 5
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    yr, hr = mamba2_ref_scan(xh, dt, a, Bm, Cm)
+    for chunk in (16, 32, 96, 25):
+        y, hf = _ssd_chunked(xh, dt, a, Bm, Cm, chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=5e-4)
+        np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), atol=5e-4)
+
+
+def test_mlstm_chunked_matches_scan():
+    from repro.models.xlstm import _mlstm_chunked, mlstm_ref_scan
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    B, S, H, dh = 2, 80, 3, 8
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh)) * dh ** -0.5
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    li = jax.random.normal(ks[3], (B, S, H)) * 2 - 1
+    lf = -jax.nn.softplus(-(jax.random.normal(ks[4], (B, S, H)) + 2))
+    hr = mlstm_ref_scan(q, k, v, li, lf)
+    for chunk in (16, 40, 80, 23):
+        h, _ = _mlstm_chunked(q, k, v, li, lf, chunk)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=5e-4)
+
+
+def test_moe_balanced_routing_no_drops_uniform():
+    """Load-balance check: with near-uniform routing the aux loss ~ 1 and
+    nothing catastrophic drops."""
+    import dataclasses
+    from repro.models.moe import init_moe, moe_apply
+    cfg = get_config("qwen3-moe-30b-a3b").reduced()
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model),
+                          jnp.float32)
+    y, aux = moe_apply(p, cfg, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert 0.5 < float(aux["load_balance_loss"]) < 4.0
+
+
+def test_shapes_registry():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+    assert SHAPES["long_500k"].global_batch == 1
+    assert SHAPES["train_4k"].kind == "train"

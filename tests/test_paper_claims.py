@@ -1,0 +1,75 @@
+"""Host-side validations of the paper's structural claims (no devices).
+
+These mirror Sec. 2 of the paper: fat hybrid nodes shrink halos and
+replicated data; nnz balance beats row balance; the two-phase split
+separates local from remote work exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import build_spmv_plan
+from repro.core.partition import (imbalance, partition_balanced,
+                                  partition_equal_rows)
+from repro.sparse import extruded_mesh_matrix
+
+
+@pytest.fixture(scope="module")
+def matrix():
+    return extruded_mesh_matrix(600, 10, seed=0)
+
+
+def test_fat_nodes_shrink_total_halo(matrix):
+    """Paper Sec. 2: fewer, fatter MPI ranks => smaller total halo volume
+    (less replicated ghost data) at a fixed device count."""
+    totals = {}
+    for n_node, n_core in [(16, 1), (8, 2), (4, 4), (2, 8)]:
+        _, layout = build_spmv_plan(matrix, n_node, n_core, mode="task")
+        totals[(n_node, n_core)] = layout["halo"].total_ghosts
+    assert totals[(8, 2)] <= totals[(16, 1)]
+    assert totals[(4, 4)] <= totals[(8, 2)]
+    assert totals[(2, 8)] <= totals[(4, 4)]
+
+
+def test_hybrid_reduces_message_count(matrix):
+    """Fewer ranks also means fewer point-to-point pairs (paper: fewer,
+    larger messages)."""
+    pairs = {}
+    for n_node in (16, 4):
+        _, layout = build_spmv_plan(matrix, n_node, 1, mode="task")
+        pairs[n_node] = int((layout["pair_counts"] > 0).sum())
+    assert pairs[4] < pairs[16]
+
+
+def test_banded_matrix_touches_few_neighbors(matrix):
+    """Extrusion-ordered pressure matrices have near-banded structure, so
+    contiguous partitions exchange with O(1) neighbours — the premise of
+    the ring transport."""
+    _, layout = build_spmv_plan(matrix, 8, 1, mode="task")
+    assert len(layout["neighbor_offsets"]) <= 4
+
+
+def test_diag_plus_offdiag_covers_all_nnz(matrix):
+    """Two-phase split exactness: every nonzero lands in exactly one of
+    diag/offdiag across all shards."""
+    plan, layout = build_spmv_plan(matrix, 4, 2, mode="balanced")
+    stored = (np.asarray(plan.diag_vals) != 0).sum() + \
+             (np.asarray(plan.offd_vals) != 0).sum()
+    # allclose on counts: explicit zeros in the matrix would be miscounted,
+    # but the generator never emits exact-zero entries
+    assert int(stored) == matrix.nnz
+
+
+def test_balanced_mode_balances_each_node(matrix):
+    plan, layout = build_spmv_plan(matrix, 4, 4, mode="balanced")
+    for i, cb in enumerate(layout["core_bounds"]):
+        lo, hi = layout["node_bounds"][i], layout["node_bounds"][i + 1]
+        rn = matrix.row_nnz[lo:hi]
+        assert imbalance(rn, cb) < imbalance(
+            rn, partition_equal_rows(len(rn), 4)) + 1e-9
+
+
+def test_vector_mode_uses_equal_rows(matrix):
+    _, layout = build_spmv_plan(matrix, 2, 4, mode="vector")
+    for i, cb in enumerate(layout["core_bounds"]):
+        n = layout["node_bounds"][i + 1] - layout["node_bounds"][i]
+        np.testing.assert_array_equal(cb, partition_equal_rows(int(n), 4))

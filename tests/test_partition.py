@@ -1,0 +1,75 @@
+"""Unit + property tests for the greedy+diffusion nnz partitioner (Sec 2.3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import (diffuse_nnz, imbalance, partition_balanced,
+                                  partition_equal_rows, partition_greedy_nnz)
+
+
+def test_equal_rows_bounds():
+    b = partition_equal_rows(100, 8)
+    assert b[0] == 0 and b[-1] == 100
+    assert np.all(np.diff(b) >= 12)
+
+
+def test_greedy_balances_uniform():
+    rn = np.full(1000, 7)
+    b = partition_greedy_nnz(rn, 8)
+    assert imbalance(rn, b) < 1.01
+
+
+def test_greedy_balances_skewed():
+    rng = np.random.default_rng(0)
+    rn = rng.integers(1, 100, size=500)
+    b_rows = partition_equal_rows(500, 8)
+    b_greedy = partition_greedy_nnz(rn, 8)
+    assert imbalance(rn, b_greedy) <= imbalance(rn, b_rows) + 1e-9
+
+
+def test_diffusion_improves_or_maintains():
+    rng = np.random.default_rng(1)
+    rn = (rng.pareto(1.5, size=800) * 10 + 1).astype(np.int64)
+    b0 = partition_greedy_nnz(rn, 16)
+    b1 = diffuse_nnz(rn, b0)
+    assert imbalance(rn, b1) <= imbalance(rn, b0) + 1e-9
+
+
+def test_balanced_beats_equal_rows_on_extruded_matrix():
+    from repro.sparse import extruded_mesh_matrix
+    A = extruded_mesh_matrix(80, 6, seed=3)
+    rn = A.row_nnz
+    eq = imbalance(rn, partition_equal_rows(A.n_rows, 16))
+    bal = imbalance(rn, partition_balanced(rn, 16))
+    assert bal <= eq + 1e-9
+    assert bal < 1.15  # near-perfect balance on mesh matrices
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    nbins=st.integers(1, 16),
+    seed=st.integers(0, 10_000),
+)
+def test_partition_invariants(n, nbins, seed):
+    """Property: any partition is a monotone cover of [0, n] and diffusion
+    never loses rows or reorders boundaries."""
+    rng = np.random.default_rng(seed)
+    rn = rng.integers(0, 50, size=n)
+    for b in (partition_equal_rows(n, nbins),
+              partition_greedy_nnz(rn, nbins),
+              partition_balanced(rn, nbins)):
+        assert len(b) == nbins + 1
+        assert b[0] == 0 and b[-1] == n
+        assert np.all(np.diff(b) >= 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(8, 400), nbins=st.integers(2, 8),
+       seed=st.integers(0, 1000))
+def test_diffusion_monotone_improvement(n, nbins, seed):
+    rng = np.random.default_rng(seed)
+    rn = rng.integers(1, 30, size=n)
+    b0 = partition_greedy_nnz(rn, nbins)
+    b1 = diffuse_nnz(rn, b0)
+    assert imbalance(rn, b1) <= imbalance(rn, b0) + 1e-9

@@ -1,0 +1,81 @@
+"""Sparse substrate tests: CSR ops, diag/offdiag split, mesh generator."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import CSRMatrix, extruded_mesh_matrix, random_spd_matrix
+from repro.sparse.csr import ELLMatrix
+
+
+def test_csr_roundtrip_dense():
+    rng = np.random.default_rng(0)
+    d = rng.normal(size=(20, 20)) * (rng.random((20, 20)) < 0.2)
+    m = CSRMatrix.from_dense(d)
+    np.testing.assert_allclose(m.to_dense(), d)
+
+
+def test_csr_matvec_matches_dense():
+    rng = np.random.default_rng(1)
+    d = rng.normal(size=(30, 30)) * (rng.random((30, 30)) < 0.3)
+    m = CSRMatrix.from_dense(d)
+    x = rng.normal(size=30)
+    np.testing.assert_allclose(m.matvec(x), d @ x, atol=1e-12)
+
+
+def test_row_slice():
+    A = random_spd_matrix(50, seed=0)
+    B = A.row_slice(10, 30)
+    np.testing.assert_allclose(B.to_dense(), A.to_dense()[10:30])
+
+
+def test_col_split_reassembles():
+    """diag + offdiag (through the ghost map) must reproduce the block."""
+    A = random_spd_matrix(60, seed=2)
+    lo, hi = 20, 40
+    Ai = A.row_slice(lo, hi)
+    diag, offd, ghosts = Ai.col_split(lo, hi)
+    dense = np.zeros((hi - lo, A.n_cols))
+    dense[:, lo:hi] = diag.to_dense()
+    od = offd.to_dense()
+    for g_local, g_global in enumerate(ghosts):
+        dense[:, g_global] += od[:, g_local]
+    np.testing.assert_allclose(dense, Ai.to_dense())
+    assert np.all(ghosts < A.n_cols)
+    assert np.all((ghosts < lo) | (ghosts >= hi))
+
+
+def test_extruded_mesh_is_spd_and_scales_with_layers():
+    A1 = extruded_mesh_matrix(40, 3, seed=0)
+    A2 = extruded_mesh_matrix(40, 6, seed=0)
+    assert A2.n_rows == 2 * A1.n_rows  # quasi-linear workload scaling (Sec. 3)
+    d = A1.to_dense()
+    np.testing.assert_allclose(d, d.T, atol=1e-12)          # symmetric
+    eigs = np.linalg.eigvalsh(d)
+    assert eigs.min() > 0                                     # positive definite
+
+
+def test_extruded_mesh_row_nnz_profile():
+    A = extruded_mesh_matrix(60, 5, seed=1)
+    rn = A.row_nnz
+    assert 5 <= rn.mean() <= 30  # FEM-like stencil width (paper: ~27 nnz/row)
+    assert rn.max() < 80
+
+
+def test_ell_rejects_too_narrow():
+    A = random_spd_matrix(20, seed=3)
+    with pytest.raises(ValueError):
+        ELLMatrix.from_csr(A, width=1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 80), seed=st.integers(0, 100))
+def test_csr_from_coo_sums_duplicates(n, seed):
+    rng = np.random.default_rng(seed)
+    k = rng.integers(1, 4 * n)
+    rows = rng.integers(0, n, size=k)
+    cols = rng.integers(0, n, size=k)
+    vals = rng.normal(size=k)
+    m = CSRMatrix.from_coo(rows, cols, vals, (n, n))
+    dense = np.zeros((n, n))
+    np.add.at(dense, (rows, cols), vals)
+    np.testing.assert_allclose(m.to_dense(), dense, atol=1e-12)
