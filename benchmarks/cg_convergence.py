@@ -1,21 +1,32 @@
 """Paper Sec. 3 benchmark protocol: CG + Jacobi on pressure matrices,
-iteration cap 10,000 — convergence behaviour and per-iteration cost."""
+iteration cap 10,000 — convergence behaviour and per-iteration cost.
+
+Each mode is measured twice: the unfused baseline (``cg_solve`` re-entering
+the sharded SpMV every iteration) and the fully-sharded fused solver (the
+whole ``while_loop`` inside one shard_map; ``repro.core.sharded_cg``).  The
+derived column carries the compiled-HLO collective-op census so the
+"fewer collectives per iteration" claim is recorded alongside the timing.
+"""
 from __future__ import annotations
 
-from common import emit, run_bench_subprocess
+from common import emit, fmt_collectives, run_bench_subprocess
 
 
 def run():
     rows = []
     for mode in ("vector", "task", "balanced"):
-        r = run_bench_subprocess(
-            "repro.testing.bench_spmv",
-            ["--n-node", "4", "--n-core", "2", "--mode", mode,
-             "--n-surface", "1500", "--layers", "12", "--cg",
-             "--tol", "1e-8", "--iters", "10000"])
-        rows.append((f"cg_convergence/{mode}/4x2",
-                     r["us_per_iter"],
-                     f"iters={r['cg_iters']};rel={r['cg_rel']:.2e}"))
+        for fused in (False, True):
+            argv = ["--n-node", "4", "--n-core", "2", "--mode", mode,
+                    "--n-surface", "1500", "--layers", "12", "--cg",
+                    "--tol", "1e-8", "--iters", "10000"]
+            if fused:
+                argv.append("--fused")
+            r = run_bench_subprocess("repro.testing.bench_spmv", argv)
+            tag = "fused" if fused else "unfused"
+            rows.append((f"cg_convergence/{mode}/4x2/{tag}",
+                         r["us_per_iter"],
+                         f"iters={r['cg_iters']};rel={r['cg_rel']:.2e};"
+                         + fmt_collectives(r)))
     return rows
 
 

@@ -25,6 +25,13 @@ def run_bench_subprocess(module: str, argv: list[str],
     return json.loads(line)
 
 
+def fmt_collectives(r: dict) -> str:
+    """Format a bench_spmv ``collectives`` census for a derived column."""
+    c = r.get("collectives", {})
+    return (f"ar={c.get('all-reduce', -1)};ag={c.get('all-gather', -1)};"
+            f"a2a={c.get('all-to-all', -1)}")
+
+
 def emit(rows):
     """Print benchmark rows as the required ``name,us_per_call,derived``."""
     for name, us, derived in rows:

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from common import emit, run_bench_subprocess
+from common import emit, fmt_collectives, run_bench_subprocess
 
 PEAK_FLOPS_F32 = 98.5e12 / 2   # v5e fp32 ~ half bf16 peak; SpMV is VPU-bound anyway
 HBM_BW = 819e9
@@ -60,6 +60,19 @@ def run(iters: int = 30):
          "--n-surface", "2000", "--layers", "32", "--iters", str(iters)])
     rows.append(("fig3_measured/pure_mpi/16dev", r["us_per_spmv"],
                  f"gflops={r['gflops']:.3f}"))
+
+    # fused vs unfused CG at the hybrid 4x2 configuration: the per-iteration
+    # synchronisation cost is what the fully-sharded solver removes
+    for fused in (False, True):
+        argv = ["--n-node", "4", "--n-core", "2", "--mode", "balanced",
+                "--n-surface", "2000", "--layers", "32", "--cg",
+                "--tol", "1e-12", "--iters", str(max(iters, 50))]
+        if fused:
+            argv.append("--fused")
+        r = run_bench_subprocess("repro.testing.bench_spmv", argv)
+        rows.append((f"fig3_measured/cg_{'fused' if fused else 'unfused'}/8dev",
+                     r["us_per_iter"],
+                     f"iters={r['cg_iters']};" + fmt_collectives(r)))
 
     # modelled pod-scale curves, paper-size matrices
     for label, n_rows, nnz in [("fig3_model_13.5M", 13_491_933, 371_102_769),

@@ -3,7 +3,9 @@
 Spawns itself with 8 host devices (4 "MPI ranks" x 2 "threads" — the
 paper's NUMA-aligned hybrid configuration scaled to this container), builds
 the extruded-mesh pressure matrix, and runs the full CG solve with all three
-SpMV algorithm modes, reporting per-iteration times.
+SpMV algorithm modes — both the unfused baseline and the fully-sharded
+fused solver (whole while_loop inside one shard_map; see DESIGN.md) —
+reporting per-iteration times.
 
     PYTHONPATH=src python examples/cg_solve.py
 """
@@ -25,6 +27,7 @@ import numpy as np
 
 from repro.core import build_spmv_plan, from_dist, make_cg, to_dist
 from repro.sparse import extruded_mesh_matrix
+from repro.util import make_mesh_compat
 
 N_NODE, N_CORE = 4, 2
 print(f"devices: {len(jax.devices())} -> hybrid mesh "
@@ -32,27 +35,28 @@ print(f"devices: {len(jax.devices())} -> hybrid mesh "
 
 A = extruded_mesh_matrix(n_surface=1500, layers=12, seed=0)
 print(f"pressure matrix: {A.n_rows} DoF, {A.nnz} nnz")
-mesh = jax.make_mesh((N_NODE, N_CORE), ("node", "core"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh_compat((N_NODE, N_CORE), ("node", "core"))
 b = np.random.default_rng(1).normal(size=A.n_rows)
 
 results = {}
 for mode in ("vector", "task", "balanced"):
     plan, layout = build_spmv_plan(A, N_NODE, N_CORE, mode=mode)
-    solve = make_cg(plan, mesh)
     bd = to_dist(b, layout, plan)
-    xd, it, rel = solve(bd, tol=1e-8, maxiter=10_000)   # compile + solve
-    jax.block_until_ready(xd)
-    t0 = time.perf_counter()
-    xd, it, rel = solve(bd, tol=1e-8, maxiter=10_000)
-    jax.block_until_ready(xd)
-    dt = time.perf_counter() - t0
-    xs = from_dist(xd, layout, plan)
-    true_rel = float(np.linalg.norm(A.matvec(xs) - b) / np.linalg.norm(b))
-    results[mode] = dict(iters=int(it), us_per_iter=dt / int(it) * 1e6,
-                         rel=float(rel), true_rel=true_rel)
-    print(f"{mode:9s}: {int(it):4d} iters, "
-          f"{results[mode]['us_per_iter']:8.1f} us/iter, "
-          f"true rel {true_rel:.2e}")
+    for tag, fused in (("unfused", False), ("fused", True)):
+        solve = make_cg(plan, mesh, fused=fused)
+        xd, it, rel = solve(bd, tol=1e-8, maxiter=10_000)   # compile + solve
+        jax.block_until_ready(xd)
+        t0 = time.perf_counter()
+        xd, it, rel = solve(bd, tol=1e-8, maxiter=10_000)
+        jax.block_until_ready(xd)
+        dt = time.perf_counter() - t0
+        xs = from_dist(xd, layout, plan)
+        true_rel = float(np.linalg.norm(A.matvec(xs) - b) / np.linalg.norm(b))
+        results[f"{mode}/{tag}"] = dict(
+            iters=int(it), us_per_iter=dt / int(it) * 1e6,
+            rel=float(rel), true_rel=true_rel)
+        print(f"{mode:9s} {tag:8s}: {int(it):4d} iters, "
+              f"{results[f'{mode}/{tag}']['us_per_iter']:8.1f} us/iter, "
+              f"true rel {true_rel:.2e}")
 
 print(json.dumps(results))

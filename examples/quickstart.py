@@ -24,8 +24,9 @@ print(f"8-way imbalance (max/mean nnz): equal-rows {eq:.3f} -> balanced {bal:.3f
 
 # 3. hybrid distributed SpMV — on this CPU container the mesh is 1x1;
 #    multi-device runs use the same code (see repro/testing/dist_check.py)
-mesh = jax.make_mesh((1, 1), ("node", "core"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.util import make_mesh_compat
+
+mesh = make_mesh_compat((1, 1), ("node", "core"))
 x = np.random.default_rng(0).normal(size=A.n_rows)
 for mode in ("vector", "task", "balanced"):
     plan, layout = build_spmv_plan(A, 1, 1, mode=mode)

@@ -69,16 +69,34 @@ def cg_solve(spmv: Callable, b: jax.Array, m_inv: jax.Array,
 
 
 def make_cg(plan: SpMVPlan, mesh, axis_names=("node", "core"),
-            backend: str = "jnp", maxiter_static: int = 10_000):
-    """Bundle a plan + mesh into ``solve(b, tol=..., maxiter=...)``."""
-    spmv = make_spmv(plan, mesh, axis_names=axis_names, backend=backend)
+            backend: str = "jnp", maxiter_static: int = 10_000,
+            fused: bool = False, transport: str = "a2a",
+            neighbor_offsets=None):
+    """Bundle a plan + mesh into ``solve(b, tol=..., maxiter=...)``.
+
+    ``fused=True`` returns the fully-sharded solver instead (the whole CG
+    ``while_loop`` inside one shard_map region; see
+    ``repro.core.sharded_cg.make_fused_cg``) — same return contract.
+    """
+    if fused:
+        from repro.core.sharded_cg import make_fused_cg
+        return make_fused_cg(plan, mesh, axis_names=axis_names,
+                             backend=backend, transport=transport,
+                             neighbor_offsets=neighbor_offsets,
+                             maxiter_static=maxiter_static)
+    spmv = make_spmv(plan, mesh, axis_names=axis_names, backend=backend,
+                     transport=transport, neighbor_offsets=neighbor_offsets)
     m_inv = jnp.where(plan.mask > 0, 1.0 / plan.diag_a, 0.0)
 
-    def solve(b: jax.Array, tol: float = 1e-8, maxiter: int = 10_000):
-        return cg_solve(spmv, b, m_inv, plan.mask,
-                        jnp.asarray(tol, jnp.float32),
-                        jnp.asarray(maxiter, jnp.int32),
+    @jax.jit
+    def jitted(b: jax.Array, tol: jax.Array, maxiter: jax.Array):
+        return cg_solve(spmv, b, m_inv, plan.mask, tol, maxiter,
                         maxiter_static=maxiter_static)
 
+    def solve(b: jax.Array, tol: float = 1e-8, maxiter: int = 10_000):
+        return jitted(b, jnp.asarray(tol, jnp.float32),
+                      jnp.asarray(maxiter, jnp.int32))
+
     solve.spmv = spmv
+    solve.jitted = jitted
     return solve

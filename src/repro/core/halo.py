@@ -7,12 +7,16 @@ computed on the host at matrix-assembly time — mirroring the paper's
 observation that the stencil is fixed for the whole solve, so the plan is a
 one-off cost cached with the matrix.
 
-The plan is *hierarchical*: the per-node halo of ``H`` entries per peer is
-split evenly across the ``core`` axis (each "thread" exchanges ``H/n_core``
-entries, then an intra-node ``all_gather`` over ``core`` assembles the full
-ghost buffer).  This is the TPU equivalent of the paper's dedicated
-communication thread: communication is performed once per *node*, not once
-per core, and its cost shrinks as nodes get fatter.
+The plan is *hierarchical* and **owner-split**: each halo element is sent by
+the core whose row bin owns it, indexed directly into that core's
+``(rc_pad,)`` shard of the vector.  The exchange therefore launches straight
+from per-core shard data — it does not wait for the intra-node ``all_gather``
+that assembles the node-local vector slice, which is what lets the XLA
+scheduler overlap the exchange with the diagonal multiply (the paper's
+task-mode comm/compute overlap).  On the receive side every core scatters
+only its own ``(n_node, hs)`` slice into the ghost buffer; the per-core
+partial buffers are combined with one intra-node ``psum`` instead of
+``all_gather``-ing a full per-node receive table.
 """
 from __future__ import annotations
 
@@ -20,38 +24,38 @@ import dataclasses
 
 import numpy as np
 
+from repro.util import align_up
+
 __all__ = ["HaloPlan", "build_halo_plan"]
-
-
-def _align_up(v: int, a: int) -> int:
-    return int(max(a, -(-int(v) // a) * a))
 
 
 @dataclasses.dataclass
 class HaloPlan:
-    """Static (numpy) exchange plan for one matrix + node partition.
+    """Static (numpy) exchange plan for one matrix + node/core partition.
 
     Shapes (host arrays, later stacked / device-put by the SpMV plan):
-      send_idx:     (n_node, n_core, n_node, Hc) int32
-                    [src, core, dst, k] -> src-local row index to send
-      recv_scatter: (n_node, n_core, n_node, Hc) int32
-                    [dst, core, src, k] -> ghost-buffer slot (G_pad = dump)
-      ghost_cols:   list of (G_i,) global column ids per node (diagnostics)
+      send_own:   (n_node, n_core, n_node, Hs) int32
+                  [src, core, dst, k] -> row index *into core's own
+                  (rc_pad,) vector shard* to send (owner split; pad -> 0)
+      recv_own:   (n_node, n_core, n_node, Hs) int32
+                  [dst, core, src, k] -> ghost-buffer slot for the element
+                  owned by ``core`` at ``src`` (G_pad = dump slot)
+      ghost_cols: list of (G_i,) global column ids per node (diagnostics)
     """
 
-    send_idx: np.ndarray
-    recv_scatter: np.ndarray
+    send_own: np.ndarray
+    recv_own: np.ndarray
     ghost_cols: list[np.ndarray]
     g_pad: int
-    h_per_core: int
+    h_own: int
 
     @property
     def n_node(self) -> int:
-        return self.send_idx.shape[0]
+        return self.send_own.shape[0]
 
     @property
     def n_core(self) -> int:
-        return self.send_idx.shape[1]
+        return self.send_own.shape[1]
 
     @property
     def total_ghosts(self) -> int:
@@ -63,47 +67,62 @@ class HaloPlan:
 
 
 def build_halo_plan(ghost_cols: list[np.ndarray], node_bounds: np.ndarray,
-                    n_core: int, h_align: int = 8) -> HaloPlan:
-    """Build the static exchange plan.
+                    n_core: int, core_bounds: list[np.ndarray],
+                    h_align: int = 8) -> HaloPlan:
+    """Build the static owner-split exchange plan.
 
-    ghost_cols[i]: sorted global column ids node ``i`` needs but does not own.
-    node_bounds:   (n_node+1,) row ownership boundaries.
+    ghost_cols[i]:  sorted global column ids node ``i`` needs but does not own.
+    node_bounds:    (n_node+1,) row ownership boundaries.
+    core_bounds[i]: (n_core+1,) node-local row bounds of node ``i``'s core
+                    bins.  Required: ``send_own`` indexes each core's own
+                    vector shard, so the plan is only correct for the exact
+                    core split the vectors are laid out with (an assumed
+                    default would silently read the wrong rows for
+                    nnz-balanced bins).
     """
     n_node = len(node_bounds) - 1
-    # pairwise counts: entries of ghost_cols[dst] owned by src
-    counts = np.zeros((n_node, n_node), dtype=np.int64)
+    if len(core_bounds) != n_node:
+        raise ValueError(f"core_bounds must have one entry per node "
+                         f"({n_node}), got {len(core_bounds)}")
+
+    # per-(dst, src) halo lists: entries of ghost_cols[dst] owned by src,
+    # grouped by the src core whose row bin owns them
     pair_cols: dict[tuple[int, int], np.ndarray] = {}
+    owner_core: dict[tuple[int, int], np.ndarray] = {}
+    bin_local: dict[tuple[int, int], np.ndarray] = {}
+    hs = 1
     for dst in range(n_node):
         g = np.asarray(ghost_cols[dst], dtype=np.int64)
         owner = np.searchsorted(node_bounds, g, side="right") - 1
         for src in range(n_node):
-            sel = g[owner == src]
-            pair_cols[(dst, src)] = sel
-            counts[dst, src] = len(sel)
-
-    h = _align_up(counts.max() if counts.size else 1, h_align * n_core)
-    hc = h // n_core
-    g_pad = _align_up(max((len(g) for g in ghost_cols), default=1), 8)
-
-    send_idx = np.zeros((n_node, n_core, n_node, hc), dtype=np.int32)
-    recv_scatter = np.full((n_node, n_core, n_node, hc), g_pad, dtype=np.int32)
-
-    for dst in range(n_node):
-        g = np.asarray(ghost_cols[dst], dtype=np.int64)
-        for src in range(n_node):
-            sel = pair_cols[(dst, src)]          # global ids, sorted
+            sel = g[owner == src]                 # global ids, sorted
             if len(sel) == 0:
                 continue
-            src_local = (sel - node_bounds[src]).astype(np.int32)
-            ghost_slot = np.searchsorted(g, sel).astype(np.int32)
-            buf_s = np.zeros(h, dtype=np.int32)
-            buf_r = np.full(h, g_pad, dtype=np.int32)
-            buf_s[: len(sel)] = src_local
-            buf_r[: len(sel)] = ghost_slot
-            # split the per-pair buffer across cores
-            send_idx[src, :, dst, :] = buf_s.reshape(n_core, hc)
-            recv_scatter[dst, :, src, :] = buf_r.reshape(n_core, hc)
+            pair_cols[(dst, src)] = sel
+            src_local = sel - node_bounds[src]
+            cb = np.asarray(core_bounds[src], dtype=np.int64)
+            oc = np.searchsorted(cb, src_local, side="right") - 1
+            owner_core[(dst, src)] = oc
+            bin_local[(dst, src)] = src_local - cb[oc]
+            hs = max(hs, int(np.bincount(oc, minlength=n_core).max()))
+    hs = align_up(hs, h_align)
+    g_pad = align_up(max((len(g) for g in ghost_cols), default=1), 8)
 
-    return HaloPlan(send_idx=send_idx, recv_scatter=recv_scatter,
+    send_own = np.zeros((n_node, n_core, n_node, hs), dtype=np.int32)
+    recv_own = np.full((n_node, n_core, n_node, hs), g_pad, dtype=np.int32)
+    for (dst, src), sel in pair_cols.items():
+        g = np.asarray(ghost_cols[dst], dtype=np.int64)
+        oc = owner_core[(dst, src)]
+        bl = bin_local[(dst, src)]
+        slot = np.searchsorted(g, sel).astype(np.int32)
+        for c in range(n_core):
+            mine = oc == c
+            k = int(mine.sum())
+            if k == 0:
+                continue
+            send_own[src, c, dst, :k] = bl[mine]
+            recv_own[dst, c, src, :k] = slot[mine]
+
+    return HaloPlan(send_own=send_own, recv_own=recv_own,
                     ghost_cols=[np.asarray(g) for g in ghost_cols],
-                    g_pad=g_pad, h_per_core=hc)
+                    g_pad=g_pad, h_own=hs)

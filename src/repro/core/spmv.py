@@ -28,9 +28,20 @@ Three algorithm modes, exactly as benchmarked in the paper (Sec. 2, Fig. 2):
                 rows over cores (paper Sec. 2.3).  On TPU this also minimises
                 static-shape padding, so balance == less wasted compute.
 
-The per-(node,core) local multiply runs either as vectorised jnp (``jnp``
-backend) or through the Pallas TPU kernel (``pallas`` backend,
-``repro.kernels.spmv_bcsr``).
+The halo exchange is **owner-split** (see ``repro.core.halo``): every core
+sends the boundary rows its own bin holds, indexed straight into its
+``(rc_pad,)`` vector shard, so the ``all_to_all`` launches without waiting
+for the intra-node ``all_gather``; on receive each core scatters only its own
+slice and one intra-node ``psum`` combines the partial ghost buffers.
+
+The per-shard two-phase multiply is shared between the standalone SpMV
+(``make_spmv``) and the fully-sharded fused CG solver
+(``repro.core.sharded_cg``) via ``make_shard_body``.  The per-(node,core)
+local multiply runs either as vectorised jnp (``jnp`` backend) or through a
+**one-pass** Pallas TPU kernel (``pallas`` backend,
+``repro.kernels.spmv_bcsr.fused_ell_spmv_pallas``) that computes
+diag + offd without materialising the intermediate partial result.
+See DESIGN.md for the full data flow.
 """
 from __future__ import annotations
 
@@ -44,23 +55,25 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.halo import HaloPlan, build_halo_plan
 from repro.core.partition import (partition_balanced, partition_equal_rows)
-from repro.sparse.csr import CSRMatrix
+from repro.sparse.csr import CSRMatrix, ell_arrays_from_csr
+from repro.util import align_up, shard_map_compat
 
-__all__ = ["SpMVPlan", "build_spmv_plan", "make_spmv", "MODES"]
+__all__ = ["SpMVPlan", "build_spmv_plan", "make_spmv", "make_shard_body",
+           "plan_shard_arrays", "SHARD_FIELDS", "MODES"]
 
 MODES = ("vector", "task", "balanced")
 
-
-def _align_up(v: int, a: int) -> int:
-    return int(max(a, -(-int(v) // a) * a))
+#: SpMVPlan data fields consumed by the shard body, in argument order.
+SHARD_FIELDS = ("diag_cols", "diag_vals", "offd_cols", "offd_vals",
+                "send_own", "recv_own", "x_gather")
 
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["diag_cols", "diag_vals", "offd_cols", "offd_vals",
-                      "send_idx", "recv_scatter", "x_gather", "y_local_rows",
+                      "send_own", "recv_own", "x_gather", "y_local_rows",
                       "diag_a", "mask"],
          meta_fields=["n", "n_node", "n_core", "rc_pad", "nl_pad", "g_pad",
-                      "hc", "mode"])
+                      "hs", "mode"])
 @dataclasses.dataclass
 class SpMVPlan:
     """Device-ready distributed matrix + halo plan (a pytree).
@@ -75,9 +88,9 @@ class SpMVPlan:
     diag_vals: jax.Array   # (n_node, n_core, rc_pad, wd)
     offd_cols: jax.Array   # (n_node, n_core, rc_pad, wo) int32 -> ghost-local col
     offd_vals: jax.Array   # (n_node, n_core, rc_pad, wo)
-    # halo plan
-    send_idx: jax.Array     # (n_node, n_core, n_node, hc) int32
-    recv_scatter: jax.Array  # (n_node, n_core, n_node, hc) int32
+    # owner-split halo plan (indices into the core's own (rc_pad,) shard)
+    send_own: jax.Array    # (n_node, n_core, n_node, hs) int32
+    recv_own: jax.Array    # (n_node, n_core, n_node, hs) int32 -> ghost slot
     # vector layout maps
     x_gather: jax.Array     # (n_node, n_core, nl_pad) int32 (replicated on core)
     y_local_rows: jax.Array  # (n_node, n_core, rc_pad) int32 first-row offsets (diag extraction)
@@ -90,7 +103,7 @@ class SpMVPlan:
     rc_pad: int
     nl_pad: int
     g_pad: int
-    hc: int
+    hs: int
     mode: str
 
     # ------------------------------------------------------------------ #
@@ -102,6 +115,11 @@ class SpMVPlan:
         return int(self.diag_cols.size + self.offd_cols.size)
 
 
+def plan_shard_arrays(plan: SpMVPlan) -> tuple[jax.Array, ...]:
+    """The plan's shard-body inputs in ``SHARD_FIELDS`` order."""
+    return tuple(getattr(plan, f) for f in SHARD_FIELDS)
+
+
 # ---------------------------------------------------------------------- #
 # host-side plan construction (one-off, cached with the matrix)
 # ---------------------------------------------------------------------- #
@@ -111,15 +129,16 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
     """Partition ``A``, split diag/offdiag, build ELL blocks + halo plan.
 
     Returns (plan, layout) where ``layout`` carries the host-side index
-    arrays needed by ``to_dist`` / ``from_dist``.
+    arrays needed by ``to_dist`` / ``from_dist``.  All packing is vectorised
+    per node — no per-(node, core) or per-row interpreted loops.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     n = A.n_rows
     node_bounds = partition_equal_rows(n, n_node)
 
-    diag_blocks: list[list[CSRMatrix]] = []
-    offd_blocks: list[list[CSRMatrix]] = []
+    diag_nodes: list[CSRMatrix] = []
+    offd_nodes: list[CSRMatrix] = []
     ghost_cols: list[np.ndarray] = []
     core_bounds_all: list[np.ndarray] = []
 
@@ -132,42 +151,27 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
             cb = partition_balanced(Ai.row_nnz, n_core)
         else:
             cb = partition_equal_rows(Ai.n_rows, n_core)
-        core_bounds_all.append(cb)
-        diag_blocks.append([diag_i.row_slice(int(cb[c]), int(cb[c + 1]))
-                            for c in range(n_core)])
-        offd_blocks.append([offd_i.row_slice(int(cb[c]), int(cb[c + 1]))
-                            for c in range(n_core)])
+        core_bounds_all.append(np.asarray(cb, dtype=np.int64))
+        diag_nodes.append(diag_i)
+        offd_nodes.append(offd_i)
 
     # uniform static shapes across every (node, core) shard
-    rc_pad = _align_up(max(int(cb[c + 1] - cb[c])
-                           for cb in core_bounds_all for c in range(n_core)),
-                       rows_align)
-    nl_pad = _align_up(max(int(node_bounds[i + 1] - node_bounds[i])
-                           for i in range(n_node)), rows_align)
-    wd = _align_up(max((int(b.row_nnz.max()) if b.n_rows and b.nnz else 1
-                        for row in diag_blocks for b in row), default=1),
-                   width_align)
-    wo = _align_up(max((int(b.row_nnz.max()) if b.n_rows and b.nnz else 1
-                        for row in offd_blocks for b in row), default=1),
-                   width_align)
+    rc_pad = align_up(max(int(np.diff(cb).max()) for cb in core_bounds_all),
+                      rows_align)
+    nl_pad = align_up(max(int(node_bounds[i + 1] - node_bounds[i])
+                          for i in range(n_node)), rows_align)
 
-    from repro.sparse.csr import ell_arrays_from_csr
+    def _max_width(blocks):
+        return align_up(max((int(b.row_nnz.max()) if b.nnz else 1
+                             for b in blocks), default=1), width_align)
 
-    def stack_ell(blocks, width):
-        cols = np.zeros((n_node, n_core, rc_pad, width), dtype=np.int32)
-        vals = np.zeros((n_node, n_core, rc_pad, width), dtype=np.float64)
-        for i in range(n_node):
-            for c in range(n_core):
-                cols[i, c], vals[i, c] = ell_arrays_from_csr(
-                    blocks[i][c], width=width, n_rows_pad=rc_pad)
-        return cols, vals
+    wd = _max_width(diag_nodes)
+    wo = _max_width(offd_nodes)
 
-    diag_cols, diag_vals = stack_ell(diag_blocks, wd)
-    offd_cols, offd_vals = stack_ell(offd_blocks, wo)
-
-    halo: HaloPlan = build_halo_plan(ghost_cols, node_bounds, n_core)
-
-    # x_gather: node-local row r -> flat index into (n_core * rc_pad)
+    diag_cols = np.zeros((n_node, n_core, rc_pad, wd), dtype=np.int32)
+    diag_vals = np.zeros((n_node, n_core, rc_pad, wd), dtype=np.float64)
+    offd_cols = np.zeros((n_node, n_core, rc_pad, wo), dtype=np.int32)
+    offd_vals = np.zeros((n_node, n_core, rc_pad, wo), dtype=np.float64)
     x_gather = np.zeros((n_node, n_core, nl_pad), dtype=np.int32)
     mask = np.zeros((n_node, n_core, rc_pad), dtype=np.float64)
     diag_a = np.ones((n_node, n_core, rc_pad), dtype=np.float64)
@@ -178,17 +182,25 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
     diag_full = A.diagonal()
     for i in range(n_node):
         lo = int(node_bounds[i])
+        nl = diag_nodes[i].n_rows
         cb = core_bounds_all[i]
-        gather_i = np.zeros(nl_pad, dtype=np.int32)
-        for c in range(n_core):
-            blo, bhi = int(cb[c]), int(cb[c + 1])
-            nrows = bhi - blo
-            gather_i[blo:bhi] = c * rc_pad + np.arange(nrows)
-            mask[i, c, :nrows] = 1.0
-            diag_a[i, c, :nrows] = diag_full[lo + blo: lo + bhi]
-            y_rows[i, c, :nrows] = np.arange(blo, bhi)
-            global_row_of[i, c, :nrows] = lo + blo + np.arange(nrows)
-        x_gather[i, :] = gather_i[None, :]
+        ar = np.arange(nl, dtype=np.int64)
+        c_of = np.searchsorted(cb, ar, side="right") - 1   # owning core per row
+        lr = ar - cb[c_of]                                 # row inside the bin
+        dc, dv = ell_arrays_from_csr(diag_nodes[i], width=wd)
+        oc_, ov = ell_arrays_from_csr(offd_nodes[i], width=wo)
+        diag_cols[i, c_of, lr] = dc
+        diag_vals[i, c_of, lr] = dv
+        offd_cols[i, c_of, lr] = oc_
+        offd_vals[i, c_of, lr] = ov
+        x_gather[i, :, :nl] = (c_of * rc_pad + lr)[None, :]
+        mask[i, c_of, lr] = 1.0
+        diag_a[i, c_of, lr] = diag_full[lo:lo + nl]
+        y_rows[i, c_of, lr] = ar
+        global_row_of[i, c_of, lr] = lo + ar
+
+    halo: HaloPlan = build_halo_plan(ghost_cols, node_bounds, n_core,
+                                     core_bounds=core_bounds_all)
 
     # neighbour structure (for the ring transport): which (dst - src) mod n
     # offsets actually carry halo traffic.  Contiguous partitions of banded
@@ -198,8 +210,7 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
         g = np.asarray(ghost_cols[dst], dtype=np.int64)
         if g.size:
             owner = np.searchsorted(node_bounds, g, side="right") - 1
-            for src in owner:
-                pair_counts[dst, src] += 1
+            pair_counts[dst] = np.bincount(owner, minlength=n_node)
     offsets = sorted({int((dst - src) % n_node)
                       for dst in range(n_node) for src in range(n_node)
                       if pair_counts[dst, src] > 0})
@@ -209,14 +220,14 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
         diag_vals=jnp.asarray(diag_vals, dtype=dtype),
         offd_cols=jnp.asarray(offd_cols),
         offd_vals=jnp.asarray(offd_vals, dtype=dtype),
-        send_idx=jnp.asarray(halo.send_idx),
-        recv_scatter=jnp.asarray(halo.recv_scatter),
+        send_own=jnp.asarray(halo.send_own),
+        recv_own=jnp.asarray(halo.recv_own),
         x_gather=jnp.asarray(x_gather),
         y_local_rows=jnp.asarray(y_rows),
         diag_a=jnp.asarray(diag_a, dtype=dtype),
         mask=jnp.asarray(mask, dtype=dtype),
         n=n, n_node=n_node, n_core=n_core,
-        rc_pad=rc_pad, nl_pad=nl_pad, g_pad=halo.g_pad, hc=halo.h_per_core,
+        rc_pad=rc_pad, nl_pad=nl_pad, g_pad=halo.g_pad, hs=halo.h_own,
         mode=mode,
     )
     layout = {
@@ -252,21 +263,114 @@ def from_dist(vd: jax.Array, layout: dict, plan: SpMVPlan) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------- #
-# the distributed SpMV itself
+# the distributed SpMV shard body (shared by make_spmv and the fused CG)
 # ---------------------------------------------------------------------- #
 def _ell_matvec(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
     """Local padded-row SpMV: (R, W) x (N,) -> (R,)."""
     return jnp.einsum("rk,rk->r", vals, x[cols].astype(vals.dtype))
 
 
+def make_shard_body(plan: SpMVPlan,
+                    axis_names: tuple[str, str] = ("node", "core"),
+                    backend: str = "jnp", transport: str = "a2a",
+                    neighbor_offsets: list[int] | None = None):
+    """Build the per-shard two-phase SpMV body: ``body(F, x_mine) -> y_mine``.
+
+    ``F`` maps ``SHARD_FIELDS`` names to per-shard arrays (leading (1, 1)
+    shard dims already stripped); ``x_mine`` is this core's (rc_pad,) bin of
+    the distributed vector.  Meant to run *inside* a ``shard_map`` over
+    ``axis_names`` — ``make_spmv`` wraps it directly and
+    ``repro.core.sharded_cg`` calls it from the fused CG ``while_loop``.
+
+    Per call the body issues exactly:
+      1 ``all_to_all``  (node axis, owner-split halo — launches straight from
+                         ``x_mine``, so it overlaps the intra-node gather and
+                         the diagonal multiply in task/balanced mode),
+      1 ``all_gather``  (core axis, (rc_pad,) per core — assembles the
+                         node-local slice for the diagonal multiply),
+      1 ``psum``        (core axis, (g_pad+1,) — combines the per-core
+                         partial ghost buffers; each core scatters only its
+                         own (n_node, hs) recv slice).
+
+    ``transport='ring'`` replaces the all_to_all with one ``ppermute`` per
+    populated neighbour offset (finer-grained overlap; see ``make_spmv``).
+
+    ``backend``: 'jnp' (vectorised gather ELL) or 'pallas' (one-pass
+    diag+offd TPU kernel; interpret-mode on CPU).
+    """
+    node_ax, core_ax = axis_names
+    mode = plan.mode
+    n_node, g_pad = plan.n_node, plan.g_pad
+    if transport == "ring" and not neighbor_offsets:
+        raise ValueError("ring transport needs layout['neighbor_offsets']")
+    if transport not in ("a2a", "ring"):
+        raise ValueError(f"unknown transport {transport!r}")
+
+    if backend == "pallas":
+        from repro.kernels.ops import fused_ell_spmv
+
+        def local_matvec(F, x_local, x_ghost):
+            return fused_ell_spmv(F["diag_vals"], F["diag_cols"],
+                                  F["offd_vals"], F["offd_cols"],
+                                  x_local, x_ghost)
+    elif backend == "jnp":
+        def local_matvec(F, x_local, x_ghost):
+            # phase 1: diagonal block x local vector; phase 2: off-diagonal
+            # block x ghost elements
+            return (_ell_matvec(F["diag_vals"], F["diag_cols"], x_local)
+                    + _ell_matvec(F["offd_vals"], F["offd_cols"], x_ghost))
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    def body(F: dict, x_mine: jax.Array) -> jax.Array:
+        send_own, recv_own = F["send_own"], F["recv_own"]  # (n_node, hs)
+        # -- VecScatter analogue: owner-split halo exchange straight from
+        #    this core's shard (no dependence on the intra-node gather) --
+        part = jnp.zeros(g_pad + 1, dtype=x_mine.dtype)
+        if transport == "a2a":
+            recv = jax.lax.all_to_all(x_mine[send_own], node_ax,
+                                      split_axis=0, concat_axis=0)
+            part = part.at[recv_own.reshape(-1)].set(recv.reshape(-1))
+        else:  # ring: one independent ppermute per populated offset
+            me = jax.lax.axis_index(node_ax)
+            for d in neighbor_offsets:
+                # I am src for dst = me + d; I receive from src = me - d
+                dst_row = (me + d) % n_node
+                send = jnp.take(send_own, dst_row, axis=0)      # (hs,)
+                perm = [(i, (i + d) % n_node) for i in range(n_node)]
+                got = jax.lax.ppermute(x_mine[send], node_ax, perm)
+                src_row = (me - d) % n_node
+                part = part.at[jnp.take(recv_own, src_row, axis=0)].set(got)
+        # every ghost slot is written by exactly one core; slot g_pad dumps
+        # the padding, so summing the per-core partial buffers assembles the
+        # full ghost vector without gathering the whole recv table
+        x_ghost = jax.lax.psum(part, core_ax)
+
+        # -- shared-memory read analogue: assemble the node-local x slice --
+        x_bins = jax.lax.all_gather(x_mine, core_ax, axis=0)  # (n_core, rc_pad)
+        x_local = x_bins.reshape(-1)[F["x_gather"]]           # (nl_pad,)
+
+        if mode == "vector":
+            # master-only comm: no asynchronous progress — the diagonal
+            # multiply must wait for the exchange to finish.
+            x_local, x_ghost = jax.lax.optimization_barrier((x_local, x_ghost))
+
+        return local_matvec(F, x_local, x_ghost)
+
+    return body
+
+
+# ---------------------------------------------------------------------- #
+# standalone jitted SpMV
+# ---------------------------------------------------------------------- #
 def make_spmv(plan: SpMVPlan, mesh: jax.sharding.Mesh,
               axis_names: tuple[str, str] = ("node", "core"),
               backend: str = "jnp", transport: str = "a2a",
               neighbor_offsets: list[int] | None = None):
     """Build the jitted distributed SpMV: (n_node, n_core, rc_pad) -> same.
 
-    ``backend``: 'jnp' (vectorised gather ELL) or 'pallas' (TPU kernel via
-    ``repro.kernels``; interpret-mode on CPU).
+    ``backend``: 'jnp' (vectorised gather ELL) or 'pallas' (one-pass TPU
+    kernel via ``repro.kernels``; interpret-mode on CPU).
 
     ``transport``: 'a2a' — one fused all_to_all (PETSc VecScatter analogue);
     'ring' — one ppermute per populated neighbour offset (beyond-paper:
@@ -276,92 +380,23 @@ def make_spmv(plan: SpMVPlan, mesh: jax.sharding.Mesh,
     banded extrusion-ordered matrices with contiguous partitions).
     """
     node_ax, core_ax = axis_names
-    mode = plan.mode
-    if transport == "ring" and not neighbor_offsets:
-        raise ValueError("ring transport needs layout['neighbor_offsets']")
+    body = make_shard_body(plan, axis_names=axis_names, backend=backend,
+                           transport=transport,
+                           neighbor_offsets=neighbor_offsets)
 
-    if backend == "pallas":
-        from repro.kernels.ops import ell_spmv as _kernel_matvec
-    elif backend != "jnp":
-        raise ValueError(f"unknown backend {backend!r}")
-
-    def local_matvec(vals, cols, x):
-        if backend == "pallas":
-            return _kernel_matvec(vals, cols, x)
-        return _ell_matvec(vals, cols, x)
-
-    def shard_fn(diag_cols, diag_vals, offd_cols, offd_vals,
-                 send_idx, recv_scatter, x_gather, xd):
+    def shard_fn(*args):
+        *consts, xd = args
         # strip the leading (1, 1, ...) shard dims
-        diag_cols, diag_vals = diag_cols[0, 0], diag_vals[0, 0]
-        offd_cols, offd_vals = offd_cols[0, 0], offd_vals[0, 0]
-        send_idx = send_idx[0, 0]
-        recv_scatter = recv_scatter[0]          # (n_core, n_node, hc) full table
-        x_gather = x_gather[0, 0]
-        x_mine = xd[0, 0]                       # (rc_pad,) my row bin of x
-
-        # -- shared-memory read analogue: assemble the node-local x slice --
-        x_bins = jax.lax.all_gather(x_mine, core_ax, axis=0)  # (n_core, rc_pad)
-        x_local = x_bins.reshape(-1)[x_gather]                # (nl_pad,)
-
-        # -- VecScatter analogue: halo exchange over the node axis --
-        x_ghost = jnp.zeros(plan.g_pad + 1, dtype=x_local.dtype)
-        if transport == "a2a":
-            send_buf = x_local[send_idx]                      # (n_node, hc)
-            recv = jax.lax.all_to_all(send_buf, node_ax,
-                                      split_axis=0, concat_axis=0)
-            # cores exchanged 1/n_core of the halo each; assemble in-node
-            recv_all = jax.lax.all_gather(recv, core_ax, axis=0)
-            x_ghost = x_ghost.at[recv_scatter.reshape(-1)].set(
-                recv_all.reshape(-1))
-        else:  # ring: one independent ppermute per populated offset
-            n = plan.n_node
-            me = jax.lax.axis_index(node_ax)
-            for d in neighbor_offsets:
-                # I am src for dst = me + d; I receive from src = me - d
-                dst_row = (me + d) % n
-                send = jnp.take(send_idx, dst_row, axis=0)     # (hc,)
-                perm = [(i, (i + d) % n) for i in range(n)]
-                got = jax.lax.ppermute(x_local[send], node_ax, perm)
-                got_all = jax.lax.all_gather(got, core_ax, axis=0)
-                src_row = (me - d) % n
-                scat = jnp.take(recv_scatter, src_row, axis=1)  # (n_core, hc)
-                x_ghost = x_ghost.at[scat.reshape(-1)].set(
-                    got_all.reshape(-1))
-
-        if mode == "vector":
-            # master-only comm: no asynchronous progress — the diagonal
-            # multiply must wait for the exchange to finish.
-            x_local, x_ghost = jax.lax.optimization_barrier((x_local, x_ghost))
-
-        # -- phase 1: diagonal block x local vector (overlaps the exchange
-        #    in task/balanced mode: no data dependence on x_ghost) --
-        y = local_matvec(diag_vals, diag_cols, x_local)
-        # -- phase 2: off-diagonal block x ghost elements --
-        y = y + local_matvec(offd_vals, offd_cols, x_ghost)
-        return y[None, None]                   # (1, 1, rc_pad)
+        F = {k: v[0, 0] for k, v in zip(SHARD_FIELDS, consts)}
+        return body(F, xd[0, 0])[None, None]    # (1, 1, rc_pad)
 
     spec = P(node_ax, core_ax)
-    node_spec = P(node_ax)
-    try:
-        fn = jax.shard_map(
-            shard_fn, mesh=mesh,
-            in_specs=(spec, spec, spec, spec, spec, node_spec, spec, spec),
-            out_specs=spec,
-            check_vma=False,
-        )
-    except TypeError:  # older shard_map spelling
-        fn = jax.shard_map(
-            shard_fn, mesh=mesh,
-            in_specs=(spec, spec, spec, spec, spec, node_spec, spec, spec),
-            out_specs=spec,
-            check_rep=False,
-        )
+    fn = shard_map_compat(shard_fn, mesh=mesh,
+                          in_specs=(spec,) * (len(SHARD_FIELDS) + 1),
+                          out_specs=spec)
 
     @jax.jit
     def spmv(xd: jax.Array) -> jax.Array:
-        return fn(plan.diag_cols, plan.diag_vals, plan.offd_cols,
-                  plan.offd_vals, plan.send_idx, plan.recv_scatter,
-                  plan.x_gather, xd)
+        return fn(*plan_shard_arrays(plan), xd)
 
     return spmv

@@ -1,4 +1,4 @@
-from repro.kernels.ops import ell_spmv, balanced_spmv
+from repro.kernels.ops import ell_spmv, balanced_spmv, fused_ell_spmv
 from repro.kernels import ref
 
-__all__ = ["ell_spmv", "balanced_spmv", "ref"]
+__all__ = ["ell_spmv", "balanced_spmv", "fused_ell_spmv", "ref"]

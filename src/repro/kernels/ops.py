@@ -11,18 +11,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.spmv_bcsr import balanced_spmv_pallas, ell_spmv_pallas
+from repro.kernels.spmv_bcsr import (balanced_spmv_pallas, ell_spmv_pallas,
+                                     fused_ell_spmv_pallas)
+from repro.util import align_up as _align_up
 
-__all__ = ["ell_spmv", "balanced_spmv", "default_interpret"]
+__all__ = ["ell_spmv", "balanced_spmv", "fused_ell_spmv", "default_interpret"]
 
 
 @functools.cache
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
-
-
-def _align_up(v: int, a: int) -> int:
-    return int(max(a, -(-int(v) // a) * a))
 
 
 def ell_spmv(vals: jax.Array, cols: jax.Array, x: jax.Array,
@@ -38,6 +36,31 @@ def ell_spmv(vals: jax.Array, cols: jax.Array, x: jax.Array,
     y = ell_spmv_pallas(vals, cols, x, row_tile=row_tile,
                         interpret=default_interpret() if interpret is None
                         else interpret)
+    return y[:rows]
+
+
+def fused_ell_spmv(dvals: jax.Array, dcols: jax.Array,
+                   ovals: jax.Array, ocols: jax.Array,
+                   x_local: jax.Array, x_ghost: jax.Array,
+                   row_tile: int = 256,
+                   interpret: bool | None = None) -> jax.Array:
+    """One-pass two-phase SpMV: diag ELL x x_local + offd ELL x x_ghost.
+
+    Row-tiled like ``ell_spmv`` but a single ``pallas_call`` covers both
+    phases, so the diagonal partial result never round-trips through HBM.
+    Pads the row count to the tile size.
+    """
+    rows = dvals.shape[0]
+    row_tile = min(row_tile, _align_up(rows, 8))
+    rows_pad = _align_up(rows, row_tile)
+    if rows_pad != rows:
+        pad = ((0, rows_pad - rows), (0, 0))
+        dvals, dcols = jnp.pad(dvals, pad), jnp.pad(dcols, pad)
+        ovals, ocols = jnp.pad(ovals, pad), jnp.pad(ocols, pad)
+    y = fused_ell_spmv_pallas(dvals, dcols, ovals, ocols, x_local, x_ghost,
+                              row_tile=row_tile,
+                              interpret=default_interpret() if interpret is None
+                              else interpret)
     return y[:rows]
 
 

@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["ell_spmv_pallas", "balanced_spmv_pallas"]
+__all__ = ["ell_spmv_pallas", "balanced_spmv_pallas", "fused_ell_spmv_pallas"]
 
 
 # --------------------------------------------------------------------- #
@@ -75,6 +75,61 @@ def ell_spmv_pallas(vals: jax.Array, cols: jax.Array, x: jax.Array,
         out_shape=jax.ShapeDtypeStruct((rows_pad,), jnp.float32),
         interpret=interpret,
     )(cols, vals, x)
+
+
+# --------------------------------------------------------------------- #
+# one-pass two-phase kernel: diag ELL + offd ELL in a single pallas_call
+# --------------------------------------------------------------------- #
+def _fused_ell_kernel(dcols_ref, dvals_ref, ocols_ref, ovals_ref,
+                      xl_ref, xg_ref, y_ref):
+    """PETSc's two SpMV phases fused per row tile: the off-diagonal
+    accumulation reads the diagonal partial sum straight from registers/VMEM —
+    the intermediate y is never materialised in HBM."""
+    dvals = dvals_ref[...]                     # (rt, wd)
+    dcols = dcols_ref[...]                     # (rt, wd) int32 -> x_local
+    ovals = ovals_ref[...]                     # (rt, wo)
+    ocols = ocols_ref[...]                     # (rt, wo) int32 -> x_ghost
+    xl = xl_ref[...]                           # (nl,)
+    xg = xg_ref[...]                           # (g_pad + 1,)
+    gd = jnp.take(xl, dcols.reshape(-1), axis=0).reshape(dcols.shape)
+    go = jnp.take(xg, ocols.reshape(-1), axis=0).reshape(ocols.shape)
+    y = jnp.sum(dvals.astype(jnp.float32) * gd.astype(jnp.float32), axis=1)
+    y_ref[...] = y + jnp.sum(ovals.astype(jnp.float32)
+                             * go.astype(jnp.float32), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
+def fused_ell_spmv_pallas(dvals: jax.Array, dcols: jax.Array,
+                          ovals: jax.Array, ocols: jax.Array,
+                          x_local: jax.Array, x_ghost: jax.Array,
+                          row_tile: int = 256,
+                          interpret: bool = True) -> jax.Array:
+    """y = A_diag @ x_local + A_offd @ x_ghost in one pass.
+
+    dvals/dcols: (rows_pad, wd) diag ELL block (cols index x_local);
+    ovals/ocols: (rows_pad, wo) offd ELL block (cols index x_ghost).
+    rows_pad must be a multiple of ``row_tile`` (the wrapper in ops.py pads).
+    """
+    rows_pad, wd = dvals.shape
+    wo = ovals.shape[1]
+    assert rows_pad % row_tile == 0, (rows_pad, row_tile)
+    assert ocols.shape[0] == rows_pad, (ocols.shape, rows_pad)
+    grid = (rows_pad // row_tile,)
+    return pl.pallas_call(
+        _fused_ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, wd), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, wd), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, wo), lambda i: (i, 0)),
+            pl.BlockSpec((row_tile, wo), lambda i: (i, 0)),
+            pl.BlockSpec(x_local.shape, lambda i: (0,)),   # full x_local
+            pl.BlockSpec(x_ghost.shape, lambda i: (0,)),   # full x_ghost
+        ],
+        out_specs=pl.BlockSpec((row_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad,), jnp.float32),
+        interpret=interpret,
+    )(dcols, dvals, ocols, ovals, x_local, x_ghost)
 
 
 # --------------------------------------------------------------------- #

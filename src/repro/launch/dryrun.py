@@ -217,6 +217,15 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool, cfg=None,
     return cfg, shape, mesh, fn, args
 
 
+def _cost_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` across jax versions: newer jax returns a
+    dict, older releases a one-element list of dicts (or None)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _cell_costs(arch, shape_name, multi_pod, cfg, strategy=None,
                 remat_policy=None):
     # accum=1: the microbatch scan body would be cost-counted once
@@ -225,7 +234,7 @@ def _cell_costs(arch, shape_name, multi_pod, cfg, strategy=None,
                                       remat_policy=remat_policy)
     with mesh:
         compiled = fn.lower(*args).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     coll = parse_collectives(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),
@@ -253,7 +262,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     coll = parse_collectives(compiled.as_text())
 
     # scan-body extrapolation: compile two shallow variants to recover

@@ -11,13 +11,13 @@ from __future__ import annotations
 
 import jax
 
+from repro.util import make_mesh_compat
+
 __all__ = ["make_production_mesh", "make_cg_mesh", "make_host_mesh"]
 
 
 def _mk(shape, axes):
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -43,9 +43,10 @@ def pod_sync(params, anchor, residual, mesh, axis: str = "pod",
 
     def mean_over_pods(x):
         spec = P(*(None,) * x.ndim)
-        return jax.shard_map(
+        from repro.util import shard_map_compat
+        return shard_map_compat(
             lambda v: jax.lax.psum(v, axis) / n, mesh=mesh,
-            in_specs=spec, out_specs=spec, check_vma=False)(x)
+            in_specs=spec, out_specs=spec)(x)
 
     avg = jax.tree.map(mean_over_pods, comp)
     new_params = jax.tree.map(

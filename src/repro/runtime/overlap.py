@@ -32,7 +32,7 @@ def ring_linear_ag(x_shard, w_shard, axis: str):
     At ring step s, the shard multiplies the chunk that arrived at step s-1
     while forwarding it — compute hides the permute latency.
     """
-    n = jax.lax.axis_size(axis)
+    n = jax.lax.psum(1, axis)  # axis size (jax.lax.axis_size needs newer jax)
     perm = [(i, (i + 1) % n) for i in range(n)]
 
     # step 0: multiply the locally-resident chunk against local W rows
@@ -69,10 +69,10 @@ def make_ring_linear(mesh, axis: str = "model"):
     def fn(x, w):
         spec_x = P(*(None,) * (x.ndim - 1), axis)
         spec_w = P(axis, None)
-        return jax.shard_map(
+        from repro.util import shard_map_compat
+        return shard_map_compat(
             partial(ring_linear_ag, axis=axis), mesh=mesh,
             in_specs=(spec_x, spec_w), out_specs=P(*(None,) * x.ndim),
-            check_vma=False,
         )(x, w)
 
     return fn

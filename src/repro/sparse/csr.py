@@ -107,21 +107,32 @@ class CSRMatrix:
             out[r, self.indices[lo:hi]] += self.data[lo:hi]
         return out
 
+    def _row_of_nnz(self) -> np.ndarray:
+        """(nnz,) row id of every stored entry."""
+        return np.repeat(np.arange(self.n_rows, dtype=np.int64), self.row_nnz)
+
     def matvec(self, x: np.ndarray) -> np.ndarray:
         """Reference host SpMV (oracle for everything else)."""
-        y = np.zeros(self.n_rows, dtype=np.result_type(self.data, x))
-        for r in range(self.n_rows):
-            lo, hi = self.indptr[r], self.indptr[r + 1]
-            y[r] = np.dot(self.data[lo:hi], x[self.indices[lo:hi]])
+        out_dtype = np.result_type(self.data, x)
+        y = np.zeros(self.n_rows, dtype=out_dtype)
+        if self.nnz == 0:
+            return y
+        prod = self.data * np.asarray(x)[self.indices]
+        if np.issubdtype(out_dtype, np.floating):
+            return np.bincount(self._row_of_nnz(),
+                               weights=prod.astype(np.float64),
+                               minlength=self.n_rows).astype(out_dtype)
+        # exact (if slower) path for complex/other dtypes bincount can't hold
+        np.add.at(y, self._row_of_nnz(), prod.astype(out_dtype))
         return y
 
     def diagonal(self) -> np.ndarray:
         d = np.zeros(self.n_rows, dtype=self.data.dtype)
-        for r in range(self.n_rows):
-            lo, hi = self.indptr[r], self.indptr[r + 1]
-            hit = np.nonzero(self.indices[lo:hi] == r)[0]
-            if hit.size:
-                d[r] = self.data[lo + hit[0]]
+        if self.nnz:
+            hit = self.indices == self._row_of_nnz()
+            # reversed so the FIRST stored duplicate wins, matching the
+            # historical per-row scan
+            d[self.indices[hit][::-1]] = self.data[hit][::-1]
         return d
 
     def row_slice(self, lo: int, hi: int) -> "CSRMatrix":
@@ -143,32 +154,26 @@ class CSRMatrix:
         """
         inside_mask = (self.indices >= lo) & (self.indices < hi)
         n = self.n_rows
+        rows = self._row_of_nnz()
 
-        def build(mask, col_map):
+        def build(mask, new_indices, n_cols):
+            # boolean masking preserves the within-row entry order
+            counts = np.bincount(rows[mask], minlength=n) if self.nnz else \
+                np.zeros(n, dtype=np.int64)
             indptr = np.zeros(n + 1, dtype=np.int64)
-            counts = np.add.reduceat(mask.astype(np.int64), self.indptr[:-1]) \
-                if self.nnz else np.zeros(n, dtype=np.int64)
-            # reduceat quirks: rows with empty ranges
-            counts = np.array([mask[self.indptr[r]:self.indptr[r + 1]].sum()
-                               for r in range(n)], dtype=np.int64)
-            indptr[1:] = np.cumsum(counts)
-            idx = np.nonzero(mask)[0]
+            indptr[1:] = np.cumsum(counts[:n])
             return CSRMatrix(indptr=indptr,
-                             indices=col_map(self.indices[idx]),
-                             data=self.data[idx].copy(),
-                             shape=(n, 0))  # shape fixed below
+                             indices=np.asarray(new_indices, dtype=np.int64),
+                             data=self.data[mask].copy(),
+                             shape=(n, n_cols))
 
-        inside = build(inside_mask, lambda c: c - lo)
-        inside.shape = (n, hi - lo)
+        inside = build(inside_mask, self.indices[inside_mask] - lo, hi - lo)
 
-        out_idx = np.nonzero(~inside_mask)[0]
-        ghost_cols = np.unique(self.indices[out_idx]) if out_idx.size else \
+        out_cols = self.indices[~inside_mask]
+        ghost_cols = np.unique(out_cols) if out_cols.size else \
             np.zeros(0, dtype=np.int64)
-        remap = {g: i for i, g in enumerate(ghost_cols)}
-        outside = build(~inside_mask,
-                        lambda c: np.array([remap[g] for g in c], dtype=np.int64)
-                        if c.size else c)
-        outside.shape = (n, max(1, len(ghost_cols)))
+        outside = build(~inside_mask, np.searchsorted(ghost_cols, out_cols),
+                        max(1, len(ghost_cols)))
         return inside, outside, ghost_cols
 
 
@@ -185,13 +190,13 @@ def ell_arrays_from_csr(m: CSRMatrix, width: int | None = None,
     nr = int(n_rows_pad if n_rows_pad is not None else m.n_rows)
     cols = np.zeros((nr, w), dtype=np.int32)
     vals = np.zeros((nr, w), dtype=np.float64)
-    for r in range(m.n_rows):
-        lo, hi = m.indptr[r], m.indptr[r + 1]
-        k = hi - lo
-        if k > w:
-            raise ValueError(f"row {r} has {k} nnz > ELL width {w}")
-        cols[r, :k] = m.indices[lo:hi]
-        vals[r, :k] = m.data[lo:hi]
+    if m.nnz:
+        if int(rn.max()) > w:
+            raise ValueError(f"max row nnz {int(rn.max())} > ELL width {w}")
+        r = m._row_of_nnz()
+        k = np.arange(m.nnz, dtype=np.int64) - np.repeat(m.indptr[:-1], rn)
+        cols[r, k] = m.indices
+        vals[r, k] = m.data
     return cols, vals
 @partial(jax.tree_util.register_dataclass,
          data_fields=["cols", "vals"],

@@ -20,7 +20,11 @@ def main() -> int:
     ap.add_argument("--layers", type=int, default=16)
     ap.add_argument("--iters", type=int, default=50)
     ap.add_argument("--cg", action="store_true")
+    ap.add_argument("--fused", action="store_true",
+                    help="with --cg: time the fully-sharded fused CG solver")
     ap.add_argument("--tol", type=float, default=1e-8)
+    ap.add_argument("--no-collectives", action="store_true",
+                    help="skip the compiled-HLO collective-op census")
     args = ap.parse_args()
 
     ndev = args.n_node * args.n_core
@@ -37,8 +41,8 @@ def main() -> int:
     t0 = time.time()
     A = extruded_mesh_matrix(args.n_surface, args.layers, seed=0)
     t_gen = time.time() - t0
-    mesh = jax.make_mesh((args.n_node, args.n_core), ("node", "core"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.util import make_mesh_compat
+    mesh = make_mesh_compat((args.n_node, args.n_core), ("node", "core"))
     t0 = time.time()
     plan, layout = build_spmv_plan(A, args.n_node, args.n_core,
                                    mode=args.mode)
@@ -55,7 +59,13 @@ def main() -> int:
            }
 
     if args.cg:
-        solve = make_cg(plan, mesh)
+        import jax.numpy as jnp
+
+        from repro.util import collective_counts
+
+        solve = make_cg(plan, mesh, fused=args.fused,
+                        transport=args.transport,
+                        neighbor_offsets=layout["neighbor_offsets"])
         b = to_dist(rng.normal(size=A.n_rows), layout, plan)
         xd, it, rel = solve(b, tol=args.tol, maxiter=200)  # warmup+compile
         jax.block_until_ready(xd)
@@ -63,8 +73,13 @@ def main() -> int:
         xd, it, rel = solve(b, tol=args.tol, maxiter=args.iters)
         jax.block_until_ready(xd)
         dt = time.time() - t0
-        out.update(cg_iters=int(it), cg_rel=float(rel),
+        out.update(cg_iters=int(it), cg_rel=float(rel), fused=args.fused,
                    us_per_iter=dt / max(int(it), 1) * 1e6)
+        if not args.no_collectives:
+            # one `while` body per module text -> counts ~ per-iteration
+            out["collectives"] = collective_counts(
+                solve.jitted, b, jnp.asarray(args.tol, jnp.float32),
+                jnp.asarray(args.iters, jnp.int32))
     else:
         spmv = make_spmv(plan, mesh, transport=args.transport,
                          neighbor_offsets=layout["neighbor_offsets"])

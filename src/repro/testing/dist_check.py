@@ -23,6 +23,9 @@ def main() -> int:
     ap.add_argument("--layers", type=int, default=6)
     ap.add_argument("--n", type=int, default=400)
     ap.add_argument("--cg", action="store_true")
+    ap.add_argument("--fused", action="store_true",
+                    help="also run the fully-sharded fused CG and compare "
+                         "it against the baseline cg_solve")
     args = ap.parse_args()
 
     ndev = args.n_node * args.n_core
@@ -34,8 +37,10 @@ def main() -> int:
     import jax
     import numpy as np
 
-    from repro.core import build_spmv_plan, make_spmv, make_cg, to_dist, from_dist
+    from repro.core import (build_spmv_plan, make_spmv, make_cg, make_fused_cg,
+                            to_dist, from_dist)
     from repro.sparse import extruded_mesh_matrix, random_spd_matrix
+    from repro.util import make_mesh_compat
 
     assert len(jax.devices()) == ndev, (len(jax.devices()), ndev)
 
@@ -44,8 +49,7 @@ def main() -> int:
     else:
         A = random_spd_matrix(args.n, nnz_per_row=9, seed=0)
 
-    mesh = jax.make_mesh((args.n_node, args.n_core), ("node", "core"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((args.n_node, args.n_core), ("node", "core"))
     plan, layout = build_spmv_plan(A, args.n_node, args.n_core, mode=args.mode)
     spmv = make_spmv(plan, mesh, backend=args.backend,
                      transport=args.transport,
@@ -59,14 +63,28 @@ def main() -> int:
     print(f"SPMV_REL_ERR {err:.3e}")
     ok = err < 5e-5
 
-    if args.cg:
+    if args.cg or args.fused:
         solve = make_cg(plan, mesh, backend=args.backend)
         b = rng.normal(size=A.n_rows)
-        xd, iters, rel = solve(to_dist(b, layout, plan), tol=1e-6, maxiter=2000)
+        bd = to_dist(b, layout, plan)
+        xd, iters, rel = solve(bd, tol=1e-6, maxiter=2000)
         xs = from_dist(xd, layout, plan)
         true_rel = float(np.linalg.norm(A.matvec(xs) - b) / np.linalg.norm(b))
         print(f"CG_ITERS {int(iters)} CG_REL {float(rel):.3e} TRUE_REL {true_rel:.3e}")
         ok = ok and true_rel < 1e-4 and int(iters) < 2000
+
+    if args.fused:
+        fsolve = make_fused_cg(plan, mesh, backend=args.backend,
+                               transport=args.transport,
+                               neighbor_offsets=layout["neighbor_offsets"])
+        xf, itf, relf = fsolve(bd, tol=1e-6, maxiter=2000)
+        xfs = from_dist(xf, layout, plan)
+        f_rel = float(np.linalg.norm(A.matvec(xfs) - b) / np.linalg.norm(b))
+        dx = float(np.abs(xfs - xs).max() / max(np.abs(xs).max(), 1e-30))
+        diters = abs(int(itf) - int(iters))
+        print(f"FUSED_ITERS {int(itf)} FUSED_REL {float(relf):.3e} "
+              f"FUSED_TRUE_REL {f_rel:.3e} DX {dx:.3e} DITERS {diters}")
+        ok = ok and f_rel < 1e-4 and diters <= 1 and dx < 1e-3
 
     print("OK" if ok else "FAIL")
     return 0 if ok else 1

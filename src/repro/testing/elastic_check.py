@@ -16,10 +16,9 @@ def main() -> int:
     from repro.checkpoint import load, save
 
     path = sys.argv[1]
-    mesh4 = jax.make_mesh((4,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
-    mesh2 = jax.make_mesh((2, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.util import make_mesh_compat
+    mesh4 = make_mesh_compat((4,), ("data",))
+    mesh2 = make_mesh_compat((2, 2), ("data", "model"))
 
     rng = np.random.default_rng(0)
     w = rng.normal(size=(8, 16)).astype(np.float32)

@@ -17,8 +17,8 @@ def main() -> int:
 
     from repro.runtime.localsgd import pod_sync
 
-    mesh = jax.make_mesh((2,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.util import make_mesh_compat
+    mesh = make_mesh_compat((2,), ("pod",))
     rng = np.random.default_rng(0)
 
     # per-pod divergent params, replicated layout: emulate with the pod axis
@@ -37,10 +37,10 @@ def main() -> int:
         d = jnp.where(i == 0, jnp.asarray(drift0), jnp.asarray(drift1))
         return a + d
 
-    stepped = jax.shard_map(run_pod_step, mesh=mesh,
-                            in_specs=P(*(None,) * 1),
-                            out_specs=P(*(None,) * 1),
-                            check_vma=False)(anchor["w"])
+    from repro.util import shard_map_compat
+    stepped = shard_map_compat(run_pod_step, mesh=mesh,
+                               in_specs=P(*(None,) * 1),
+                               out_specs=P(*(None,) * 1))(anchor["w"])
     # stepped is pod-varying; wrap as params tree
     params = {"w": stepped}
     residual = {"w": jnp.zeros((16,), jnp.float32)}

@@ -12,8 +12,8 @@ def main() -> int:
 
     from repro.runtime.overlap import make_ring_linear
 
-    mesh = jax.make_mesh((4,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.util import make_mesh_compat
+    mesh = make_mesh_compat((4,), ("model",))
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)

@@ -1,0 +1,66 @@
+"""Small shared helpers used across core/, kernels/ and sparse/."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["align_up", "shard_map_compat", "make_mesh_compat",
+           "collective_counts"]
+
+
+def collective_counts(jitted, *args) -> dict:
+    """Count collective ops in the compiled (post-SPMD) HLO of ``jitted``.
+
+    Lowers with the given example args, compiles, and greps the HLO module
+    text.  Counting the *compiled* module matters: the baseline CG's dot
+    products are auto-sharded, so their all-reduces only exist after GSPMD
+    partitioning.  A ``while`` body appears exactly once in the module text,
+    so the counts reflect one loop iteration plus setup.
+    """
+    import re
+    txt = jitted.lower(*args).compile().as_text()
+    # async collectives lower to start/done pairs (e.g. all-reduce-start on
+    # TPU); count the start as the op and ignore the matching done
+    return {name: len(re.findall(rf"{name}(-start)?\(", txt))
+            for name in ("all-reduce", "all-gather", "all-to-all",
+                         "collective-permute")}
+
+
+def make_mesh_compat(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the API supports them.
+
+    Newer jax wants explicit ``axis_types=(AxisType.Auto, ...)`` for meshes
+    whose axes are used by both ``shard_map`` and auto-sharded ops; older
+    releases (e.g. 0.4.x) have neither the kwarg nor ``AxisType``.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=(axis_type.Auto,) * len(axis_names))
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def align_up(v: int, a: int) -> int:
+    """Round ``v`` up to the next multiple of ``a`` (at least ``a``)."""
+    return int(max(a, -(-int(v) // a) * a))
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map(..., check_vma=...)``; older releases
+    only have ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
+    Replication checking is disabled either way: the SpMV/CG shard bodies mix
+    per-shard data with collectives in ways the static checker cannot verify.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    except TypeError:  # older spelling of the "don't check replication" knob
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)

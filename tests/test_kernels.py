@@ -5,7 +5,7 @@ Sweeps shapes and dtypes per the project brief.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.partition import partition_balanced, partition_equal_rows
 from repro.kernels import balanced_spmv, ell_spmv

@@ -1,7 +1,7 @@
 """Unit + property tests for the greedy+diffusion nnz partitioner (Sec 2.3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.partition import (diffuse_nnz, imbalance, partition_balanced,
                                   partition_equal_rows, partition_greedy_nnz)

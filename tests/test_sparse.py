@@ -1,7 +1,7 @@
 """Sparse substrate tests: CSR ops, diag/offdiag split, mesh generator."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.sparse import CSRMatrix, extruded_mesh_matrix, random_spd_matrix
 from repro.sparse.csr import ELLMatrix

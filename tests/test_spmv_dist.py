@@ -12,11 +12,11 @@ from conftest import run_subprocess
 from repro.core import (build_spmv_plan, from_dist, make_cg, make_spmv,
                         to_dist)
 from repro.sparse import extruded_mesh_matrix, random_spd_matrix
+from repro.util import make_mesh_compat
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("node", "core"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((1, 1), ("node", "core"))
 
 
 @pytest.mark.parametrize("mode", ["vector", "task", "balanced"])
