@@ -21,8 +21,13 @@ def run_bench_subprocess(module: str, argv: list[str],
                        timeout=timeout)
     if r.returncode != 0:
         raise RuntimeError(f"{module} {argv} failed:\n{r.stderr[-2000:]}")
-    line = [ln for ln in r.stdout.splitlines() if ln.startswith("{")][-1]
-    return json.loads(line)
+    lines = [ln for ln in r.stdout.splitlines() if ln.startswith("{")]
+    if not lines:
+        raise RuntimeError(
+            f"{module} {argv} exited 0 but printed no JSON result line.\n"
+            f"--- stdout tail ---\n{r.stdout[-2000:]}\n"
+            f"--- stderr tail ---\n{r.stderr[-2000:]}")
+    return json.loads(lines[-1])
 
 
 def fmt_collectives(r: dict) -> str:

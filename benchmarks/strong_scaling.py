@@ -74,6 +74,23 @@ def run(iters: int = 30):
                      r["us_per_iter"],
                      f"iters={r['cg_iters']};" + fmt_collectives(r)))
 
+    # skewed-matrix scenario (adapted-mesh analogue): on exponentially
+    # varying row nnz at 8 nodes, the equal-rows node split mis-sizes every
+    # shard's static shapes while the two-level nnz partition stays
+    # balanced on both axes — the per-axis imbalance and padding-waste
+    # columns are the headline comparison
+    for node_part, label in (("rows", "equal_rows"), ("nnz", "two_level")):
+        r = run_bench_subprocess(
+            "repro.testing.bench_spmv",
+            ["--n-node", "8", "--n-core", "2", "--mode", "balanced",
+             "--node-partition", node_part, "--matrix", "graded",
+             "--n-surface", "400", "--layers", "32", "--iters", str(iters)])
+        rows.append((f"fig3_skewed/{label}/8x2", r["us_per_spmv"],
+                     f"node_imb={r['node_imbalance']:.3f};"
+                     f"core_imb={r['core_imbalance']:.3f};"
+                     f"waste={r['padding_waste']:.3f};"
+                     f"gflops={r['gflops']:.3f}"))
+
     # modelled pod-scale curves, paper-size matrices
     for label, n_rows, nnz in [("fig3_model_13.5M", 13_491_933, 371_102_769),
                                ("fig4_model_52M", 52_040_313, 1_462_610_289)]:

@@ -3,19 +3,23 @@ from repro.core.partition import (
     partition_greedy_nnz,
     diffuse_nnz,
     partition_balanced,
+    partition_two_level,
+    partition_stats,
     imbalance,
+    NODE_PARTITIONS,
 )
 from repro.core.halo import HaloPlan, build_halo_plan
 from repro.core.spmv import (SpMVPlan, build_spmv_plan, make_spmv,
                              make_shard_body, to_dist, from_dist, MODES)
-from repro.core.cg import cg_solve, make_cg
+from repro.core.cg import cg_solve, jacobi_inverse, make_cg
 from repro.core.sharded_cg import make_fused_cg
 
 __all__ = [
     "partition_equal_rows", "partition_greedy_nnz", "diffuse_nnz",
-    "partition_balanced", "imbalance",
+    "partition_balanced", "partition_two_level", "partition_stats",
+    "imbalance", "NODE_PARTITIONS",
     "HaloPlan", "build_halo_plan",
     "SpMVPlan", "build_spmv_plan", "make_spmv", "make_shard_body",
     "to_dist", "from_dist", "MODES",
-    "cg_solve", "make_cg", "make_fused_cg",
+    "cg_solve", "jacobi_inverse", "make_cg", "make_fused_cg",
 ]

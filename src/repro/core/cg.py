@@ -18,7 +18,20 @@ import jax.numpy as jnp
 
 from repro.core.spmv import SpMVPlan, make_spmv
 
-__all__ = ["cg_solve", "make_cg"]
+__all__ = ["cg_solve", "make_cg", "jacobi_inverse"]
+
+
+def jacobi_inverse(diag_a: jax.Array, mask: jax.Array) -> jax.Array:
+    """Safe 1/diag(A) on valid rows, 0 on padding.
+
+    A zero diagonal entry under the mask would make ``jnp.where(mask > 0,
+    1/diag, 0)`` evaluate ``1/0 = inf`` on the taken branch (``where`` does
+    not short-circuit), silently NaN-ing the whole solve.
+    ``build_spmv_plan`` rejects such matrices up front; this guard keeps the
+    preconditioner finite even for hand-built plans.
+    """
+    valid = (mask > 0) & (diag_a != 0)
+    return jnp.where(valid, 1.0 / jnp.where(valid, diag_a, 1.0), 0.0)
 
 
 def _dot(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -86,7 +99,7 @@ def make_cg(plan: SpMVPlan, mesh, axis_names=("node", "core"),
                              maxiter_static=maxiter_static)
     spmv = make_spmv(plan, mesh, axis_names=axis_names, backend=backend,
                      transport=transport, neighbor_offsets=neighbor_offsets)
-    m_inv = jnp.where(plan.mask > 0, 1.0 / plan.diag_a, 0.0)
+    m_inv = jacobi_inverse(plan.diag_a, plan.mask)
 
     @jax.jit
     def jitted(b: jax.Array, tol: jax.Array, maxiter: jax.Array):

@@ -72,7 +72,10 @@ def build_halo_plan(ghost_cols: list[np.ndarray], node_bounds: np.ndarray,
     """Build the static owner-split exchange plan.
 
     ghost_cols[i]:  sorted global column ids node ``i`` needs but does not own.
-    node_bounds:    (n_node+1,) row ownership boundaries.
+    node_bounds:    (n_node+1,) row ownership boundaries.  May be
+                    **non-uniform** (two-level nnz-balanced node splits);
+                    ownership is always resolved by ``searchsorted`` against
+                    these bounds, never by dividing row ids by a block size.
     core_bounds[i]: (n_core+1,) node-local row bounds of node ``i``'s core
                     bins.  Required: ``send_own`` indexes each core's own
                     vector shard, so the plan is only correct for the exact
@@ -80,10 +83,19 @@ def build_halo_plan(ghost_cols: list[np.ndarray], node_bounds: np.ndarray,
                     default would silently read the wrong rows for
                     nnz-balanced bins).
     """
+    node_bounds = np.asarray(node_bounds, dtype=np.int64)
     n_node = len(node_bounds) - 1
+    if np.any(np.diff(node_bounds) < 0):
+        raise ValueError("node_bounds must be non-decreasing")
     if len(core_bounds) != n_node:
         raise ValueError(f"core_bounds must have one entry per node "
                          f"({n_node}), got {len(core_bounds)}")
+    for i, cb in enumerate(core_bounds):
+        cb = np.asarray(cb)
+        nl = int(node_bounds[i + 1] - node_bounds[i])
+        if int(cb[0]) != 0 or int(cb[-1]) != nl:
+            raise ValueError(f"core_bounds[{i}] must cover [0, {nl}], got "
+                             f"[{int(cb[0])}, {int(cb[-1])}]")
 
     # per-(dst, src) halo lists: entries of ghost_cols[dst] owned by src,
     # grouped by the src core whose row bin owns them

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.cg import jacobi_inverse
 from repro.core.spmv import (SHARD_FIELDS, SpMVPlan, make_shard_body,
                              plan_shard_arrays)
 from repro.util import shard_map_compat
@@ -56,7 +57,7 @@ def make_fused_cg(plan: SpMVPlan, mesh: jax.sharding.Mesh,
     body = make_shard_body(plan, axis_names=axis_names, backend=backend,
                            transport=transport,
                            neighbor_offsets=neighbor_offsets)
-    m_inv_full = jnp.where(plan.mask > 0, 1.0 / plan.diag_a, 0.0)
+    m_inv_full = jacobi_inverse(plan.diag_a, plan.mask)
 
     def shard_solve(*args):
         *consts, m_inv, mask, b, tol, maxiter = args

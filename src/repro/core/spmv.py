@@ -24,9 +24,13 @@ Three algorithm modes, exactly as benchmarked in the paper (Sec. 2, Fig. 2):
   ``task``      same row split, but the exchange and the diagonal multiply
                 are data-independent in the HLO, so the XLA latency-hiding
                 scheduler overlaps them — the task-based comm/compute overlap.
-  ``balanced``  ``task`` + the greedy+diffusion **nnz-balanced** partition of
-                rows over cores (paper Sec. 2.3).  On TPU this also minimises
-                static-shape padding, so balance == less wasted compute.
+  ``balanced``  ``task`` + the greedy+diffusion **nnz-balanced** partition on
+                *both* mesh axes (paper Sec. 2.3, applied hierarchically:
+                nodes get nnz-balanced global row blocks, then each node's
+                rows get nnz-balanced core bins — ``partition_two_level``).
+                On TPU this also minimises static-shape padding, so balance
+                == less wasted compute.  ``node_partition="rows"`` restores
+                the equal-rows node split (the pure-MPI row distribution).
 
 The halo exchange is **owner-split** (see ``repro.core.halo``): every core
 sends the boundary rows its own bin holds, indexed straight into its
@@ -54,7 +58,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.halo import HaloPlan, build_halo_plan
-from repro.core.partition import (partition_balanced, partition_equal_rows)
+from repro.core.partition import (NODE_PARTITIONS, partition_stats,
+                                  partition_two_level)
 from repro.sparse.csr import CSRMatrix, ell_arrays_from_csr
 from repro.util import align_up, shard_map_compat
 
@@ -125,33 +130,46 @@ def plan_shard_arrays(plan: SpMVPlan) -> tuple[jax.Array, ...]:
 # ---------------------------------------------------------------------- #
 def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
                     mode: str = "balanced", dtype=jnp.float32,
-                    rows_align: int = 8, width_align: int = 1) -> tuple[SpMVPlan, dict]:
+                    rows_align: int = 8, width_align: int = 1,
+                    node_partition: str | None = None) -> tuple[SpMVPlan, dict]:
     """Partition ``A``, split diag/offdiag, build ELL blocks + halo plan.
 
+    ``mode="balanced"`` balances non-zeros on **both** mesh axes
+    (``partition_two_level``): nodes get nnz-balanced global row blocks and
+    each node's rows get nnz-balanced core bins.  ``vector``/``task`` use
+    equal rows on both axes — the paper's pure-MPI row distribution.
+    ``node_partition`` ("rows" | "nnz") overrides the node-axis strategy
+    independently of ``mode`` (e.g. ``"rows"`` reproduces the old
+    equal-rows node split under balanced core bins).
+
     Returns (plan, layout) where ``layout`` carries the host-side index
-    arrays needed by ``to_dist`` / ``from_dist``.  All packing is vectorised
-    per node — no per-(node, core) or per-row interpreted loops.
+    arrays needed by ``to_dist`` / ``from_dist`` plus a ``stats`` dict with
+    per-axis ``imbalance()`` and the plan's ELL ``padding_waste``.  All
+    packing is vectorised per node — no per-(node, core) or per-row
+    interpreted loops.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if node_partition is None:
+        node_partition = "nnz" if mode == "balanced" else "rows"
+    if node_partition not in NODE_PARTITIONS:
+        raise ValueError(f"node_partition must be one of {NODE_PARTITIONS}, "
+                         f"got {node_partition!r}")
     n = A.n_rows
-    node_bounds = partition_equal_rows(n, n_node)
+    node_bounds, core_bounds_all = partition_two_level(
+        A.row_nnz, n_node, n_core,
+        node_partition=node_partition,
+        core_partition="nnz" if mode == "balanced" else "rows")
 
     diag_nodes: list[CSRMatrix] = []
     offd_nodes: list[CSRMatrix] = []
     ghost_cols: list[np.ndarray] = []
-    core_bounds_all: list[np.ndarray] = []
 
     for i in range(n_node):
         lo, hi = int(node_bounds[i]), int(node_bounds[i + 1])
         Ai = A.row_slice(lo, hi)
         diag_i, offd_i, ghosts = Ai.col_split(lo, hi)
         ghost_cols.append(ghosts)
-        if mode == "balanced":
-            cb = partition_balanced(Ai.row_nnz, n_core)
-        else:
-            cb = partition_equal_rows(Ai.n_rows, n_core)
-        core_bounds_all.append(np.asarray(cb, dtype=np.int64))
         diag_nodes.append(diag_i)
         offd_nodes.append(offd_i)
 
@@ -180,6 +198,13 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
     global_row_of = np.full((n_node, n_core, rc_pad), -1, dtype=np.int64)
 
     diag_full = A.diagonal()
+    zero_diag = np.flatnonzero(diag_full == 0)
+    if zero_diag.size:
+        raise ValueError(
+            f"A has a zero or missing diagonal entry on {zero_diag.size} "
+            f"owned row(s) (first: row {int(zero_diag[0])}); the Jacobi "
+            "preconditioner 1/diag(A) would be infinite there.  Add a "
+            "diagonal shift or fix the assembly.")
     for i in range(n_node):
         lo = int(node_bounds[i])
         nl = diag_nodes[i].n_rows
@@ -230,13 +255,20 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
         rc_pad=rc_pad, nl_pad=nl_pad, g_pad=halo.g_pad, hs=halo.h_own,
         mode=mode,
     )
+    stats = partition_stats(A.row_nnz, node_bounds, core_bounds_all)
+    # fraction of ELL slots (diag + offd, all shards) holding no real entry;
+    # both axes' imbalance inflate this, since every static shape is sized
+    # by the heaviest node/shard
+    stats["padding_waste"] = 1.0 - A.nnz / max(plan.nnz_stored(), 1)
     layout = {
         "node_bounds": node_bounds,
         "core_bounds": core_bounds_all,
+        "node_partition": node_partition,
         "global_row_of": global_row_of,
         "halo": halo,
         "neighbor_offsets": offsets,
         "pair_counts": pair_counts,
+        "stats": stats,
     }
     return plan, layout
 
@@ -246,6 +278,9 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
 # ---------------------------------------------------------------------- #
 def to_dist(v: np.ndarray, layout: dict, plan: SpMVPlan,
             dtype=None) -> jax.Array:
+    """Global (n,) vector -> CG layout.  Driven entirely by the layout's
+    ``global_row_of`` table, so it is exact for non-uniform ``node_bounds``
+    (two-level nnz partitions) as well as equal splits."""
     g = layout["global_row_of"]
     out = np.zeros(plan.cg_shape, dtype=np.asarray(v).dtype)
     valid = g >= 0

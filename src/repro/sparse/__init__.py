@@ -1,10 +1,13 @@
 from repro.sparse.csr import CSRMatrix, ELLMatrix, BalancedCOO
-from repro.sparse.mesh_gen import extruded_mesh_matrix, random_spd_matrix
+from repro.sparse.mesh_gen import (extruded_mesh_matrix,
+                                   graded_extruded_mesh_matrix,
+                                   random_spd_matrix)
 
 __all__ = [
     "CSRMatrix",
     "ELLMatrix",
     "BalancedCOO",
     "extruded_mesh_matrix",
+    "graded_extruded_mesh_matrix",
     "random_spd_matrix",
 ]

@@ -240,7 +240,7 @@ class ELLMatrix:
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["vals", "cols", "lrows", "bin_starts", "out_gather"],
-         meta_fields=["n_rows", "n_cols", "rows_pad"])
+         meta_fields=["n_rows", "n_cols", "rows_pad", "bin_nnz"])
 @dataclasses.dataclass
 class BalancedCOO:
     """nnz-balanced binned COO — input format of the Pallas SpMV kernel.
@@ -260,6 +260,7 @@ class BalancedCOO:
     n_rows: int
     n_cols: int
     rows_pad: int
+    bin_nnz: tuple       # true stored-entry count per bin (from indptr)
 
     @property
     def nbins(self) -> int:
@@ -306,12 +307,21 @@ class BalancedCOO:
                    lrows=jnp.asarray(lrows),
                    bin_starts=jnp.asarray(bounds[:-1], dtype=jnp.int32),
                    out_gather=jnp.asarray(out_gather),
-                   n_rows=m.n_rows, n_cols=m.n_cols, rows_pad=rows_pad)
+                   n_rows=m.n_rows, n_cols=m.n_cols, rows_pad=rows_pad,
+                   bin_nnz=tuple(int(k) for k in bin_nnz))
 
     @property
     def padding_waste(self) -> float:
         """Fraction of stored entries that are padding — the balanced
-        partition minimises this (the TPU meaning of load balance)."""
+        partition minimises this (the TPU meaning of load balance).
+
+        Computed from the true per-bin stored-entry counts (``bin_nnz``,
+        taken from the CSR ``indptr`` at construction), *not* from
+        ``vals != 0`` — an explicitly stored zero value is a real entry the
+        kernel streams, not padding."""
+        if len(self.bin_nnz) != self.nbins:
+            raise ValueError(f"bin_nnz has {len(self.bin_nnz)} entries for "
+                             f"{self.nbins} bins")
         total = self.nbins * self.nnz_pad
-        real = int((np.asarray(self.vals) != 0).sum())
+        real = int(sum(self.bin_nnz))
         return 1.0 - real / max(total, 1)

@@ -17,7 +17,8 @@ import numpy as np
 
 from repro.sparse.csr import CSRMatrix
 
-__all__ = ["extruded_mesh_matrix", "random_spd_matrix", "surface_mesh_edges"]
+__all__ = ["extruded_mesh_matrix", "graded_extruded_mesh_matrix",
+           "random_spd_matrix", "surface_mesh_edges"]
 
 
 def _coastline_points(n_surface: int, seed: int) -> np.ndarray:
@@ -72,6 +73,18 @@ def surface_mesh_edges(n_surface: int, seed: int = 0) -> tuple[np.ndarray, int]:
     return e, n
 
 
+def _laplacian_spd(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                   n: int, shift: float) -> CSRMatrix:
+    """Graph Laplacian from symmetric off-diagonal COO entries: diagonal =
+    -sum of off-diagonals per row, plus an SPD shift."""
+    diag = np.zeros(n)
+    np.add.at(diag, rows, -vals)
+    rows = np.concatenate([rows, np.arange(n)])
+    cols = np.concatenate([cols, np.arange(n)])
+    vals = np.concatenate([vals, diag + shift])
+    return CSRMatrix.from_coo(rows, cols, vals, (n, n))
+
+
 def extruded_mesh_matrix(n_surface: int, layers: int, seed: int = 0,
                          shift: float = 1e-3) -> CSRMatrix:
     """SPD pressure-matrix analogue on an extruded unstructured mesh.
@@ -105,17 +118,75 @@ def extruded_mesh_matrix(n_surface: int, layers: int, seed: int = 0,
         for ell in range(L - 1):
             add_edge(v * L + ell, v * L + ell + 1, 1.0)
 
-    rows = np.asarray(rows)
-    cols = np.asarray(cols)
-    vals = np.asarray(vals, dtype=np.float64)
+    return _laplacian_spd(np.asarray(rows), np.asarray(cols),
+                          np.asarray(vals, dtype=np.float64), n, shift)
 
-    # Laplacian diagonal = -sum of off-diagonals (+ SPD shift)
-    diag = np.zeros(n)
-    np.add.at(diag, rows, -vals)
-    rows = np.concatenate([rows, np.arange(n)])
-    cols = np.concatenate([cols, np.arange(n)])
-    vals = np.concatenate([vals, diag + shift])
-    return CSRMatrix.from_coo(rows, cols, vals, (n, n))
+
+def graded_extruded_mesh_matrix(n_surface: int, layers: int, seed: int = 0,
+                                shift: float = 1e-3,
+                                max_span: int | None = None) -> CSRMatrix:
+    """Skewed pressure-matrix analogue: graded/refined vertical extrusion.
+
+    The adapted-mesh Fluidity scenario the paper alludes to: mesh adaptivity
+    concentrates resolution, so row density varies wildly across the domain
+    instead of being near-uniform.  We model it with a *graded vertical
+    stencil*: surface column ``v`` couples layer ``ell`` to layers
+    ``ell +- 1 .. ell +- s_v`` where the span ``s_v`` grows **exponentially**
+    across the (RCM-ordered, hence spatially coherent) surface index —
+    ``s_v = round(max_span ** (v / (n2d-1)))`` — the wide-stencil /
+    refined-column end of the domain.  Row nnz therefore varies
+    exponentially from ``deg + 3`` to ``deg + 2*max_span + 1`` and the heavy
+    rows are *contiguous in row index*, which is exactly the case where an
+    equal-rows node split mis-sizes every shard's static shapes while the
+    two-level nnz partition stays balanced.
+
+    Same SPD graph-Laplacian construction, extrusion-major ordering and
+    banded structure as ``extruded_mesh_matrix`` (``max_span`` defaults to
+    ``min(layers - 1, 32)``); vertical weights fall off as ``1/d`` like a
+    graded finite-difference stencil.
+    """
+    edges2d, n2d = surface_mesh_edges(n_surface, seed)
+    L = layers
+    n = n2d * L
+    if max_span is None:
+        max_span = min(max(L - 1, 1), 32)
+    max_span = int(max(1, min(max_span, max(L - 1, 1))))
+
+    # exponentially graded per-column span in [1, max_span]
+    u = np.arange(n2d, dtype=np.float64) / max(n2d - 1, 1)
+    span = np.clip(np.round(max_span ** u).astype(np.int64), 1,
+                   max(L - 1, 1))
+
+    rows_l: list[np.ndarray] = []
+    cols_l: list[np.ndarray] = []
+    vals_l: list[np.ndarray] = []
+
+    def add_edges(i: np.ndarray, j: np.ndarray, w: np.ndarray):
+        rows_l.append(np.concatenate([i, j]))
+        cols_l.append(np.concatenate([j, i]))
+        vals_l.append(np.concatenate([-w, -w]))
+
+    rng = np.random.default_rng(seed + 1)
+    # horizontal (in-layer) edges, replicated per layer
+    w_h = rng.uniform(0.5, 1.5, size=len(edges2d))
+    if len(edges2d):
+        ells = np.arange(L, dtype=np.int64)
+        a = (edges2d[:, 0, None] * L + ells[None, :]).ravel()
+        b = (edges2d[:, 1, None] * L + ells[None, :]).ravel()
+        add_edges(a, b, np.repeat(w_h, L))
+    # graded vertical stencil: column v couples (ell, ell+d) for d <= s_v
+    for d in range(1, max_span + 1):
+        vs = np.flatnonzero(span >= d)
+        if vs.size == 0 or L - d <= 0:
+            continue
+        ells = np.arange(L - d, dtype=np.int64)
+        i = (vs[:, None] * L + ells[None, :]).ravel()
+        add_edges(i, i + d, np.full(i.size, 1.0 / d))
+
+    rows = np.concatenate(rows_l) if rows_l else np.zeros(0, np.int64)
+    cols = np.concatenate(cols_l) if cols_l else np.zeros(0, np.int64)
+    vals = np.concatenate(vals_l) if vals_l else np.zeros(0, np.float64)
+    return _laplacian_spd(rows, cols, vals, n, shift)
 
 
 def random_spd_matrix(n: int, nnz_per_row: int = 9, seed: int = 0,

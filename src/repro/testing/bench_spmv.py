@@ -15,7 +15,14 @@ def main() -> int:
     ap.add_argument("--n-node", type=int, required=True)
     ap.add_argument("--n-core", type=int, required=True)
     ap.add_argument("--mode", default="balanced")
+    ap.add_argument("--node-partition", default=None,
+                    choices=["rows", "nnz"],
+                    help="node-axis row split (default: nnz for balanced "
+                         "mode, rows otherwise)")
     ap.add_argument("--transport", default="a2a")
+    ap.add_argument("--matrix", default="mesh", choices=["mesh", "graded"],
+                    help="'graded' = skewed adapted-mesh analogue with "
+                         "exponentially varying row nnz")
     ap.add_argument("--n-surface", type=int, default=2000)
     ap.add_argument("--layers", type=int, default=16)
     ap.add_argument("--iters", type=int, default=50)
@@ -36,26 +43,34 @@ def main() -> int:
     import numpy as np
 
     from repro.core import build_spmv_plan, make_cg, make_spmv, to_dist
-    from repro.sparse import extruded_mesh_matrix
+    from repro.sparse import extruded_mesh_matrix, graded_extruded_mesh_matrix
 
     t0 = time.time()
-    A = extruded_mesh_matrix(args.n_surface, args.layers, seed=0)
+    gen = (graded_extruded_mesh_matrix if args.matrix == "graded"
+           else extruded_mesh_matrix)
+    A = gen(args.n_surface, args.layers, seed=0)
     t_gen = time.time() - t0
     from repro.util import make_mesh_compat
     mesh = make_mesh_compat((args.n_node, args.n_core), ("node", "core"))
     t0 = time.time()
     plan, layout = build_spmv_plan(A, args.n_node, args.n_core,
-                                   mode=args.mode)
+                                   mode=args.mode,
+                                   node_partition=args.node_partition)
     t_plan = time.time() - t0
 
     rng = np.random.default_rng(0)
     x = to_dist(rng.normal(size=A.n_rows), layout, plan)
 
+    stats = layout["stats"]
     out = {"n_node": args.n_node, "n_core": args.n_core, "mode": args.mode,
-       "transport": args.transport,
+           "node_partition": layout["node_partition"],
+           "transport": args.transport, "matrix": args.matrix,
            "n_rows": A.n_rows, "nnz": A.nnz,
            "t_gen_s": round(t_gen, 2), "t_plan_s": round(t_plan, 3),
            "halo_bytes_per_node": plan_halo_bytes(layout),
+           "node_imbalance": round(stats["node_imbalance"], 4),
+           "core_imbalance": round(stats["core_imbalance"], 4),
+           "padding_waste": round(stats["padding_waste"], 4),
            }
 
     if args.cg:

@@ -16,9 +16,12 @@ def main() -> int:
     ap.add_argument("--n-node", type=int, default=4)
     ap.add_argument("--n-core", type=int, default=2)
     ap.add_argument("--mode", default="balanced")
+    ap.add_argument("--node-partition", default=None,
+                    choices=["rows", "nnz"])
     ap.add_argument("--backend", default="jnp")
     ap.add_argument("--transport", default="a2a")
-    ap.add_argument("--matrix", default="mesh", choices=["mesh", "random"])
+    ap.add_argument("--matrix", default="mesh",
+                    choices=["mesh", "graded", "random"])
     ap.add_argument("--n-surface", type=int, default=80)
     ap.add_argument("--layers", type=int, default=6)
     ap.add_argument("--n", type=int, default=400)
@@ -39,18 +42,26 @@ def main() -> int:
 
     from repro.core import (build_spmv_plan, make_spmv, make_cg, make_fused_cg,
                             to_dist, from_dist)
-    from repro.sparse import extruded_mesh_matrix, random_spd_matrix
+    from repro.sparse import (extruded_mesh_matrix,
+                              graded_extruded_mesh_matrix, random_spd_matrix)
     from repro.util import make_mesh_compat
 
     assert len(jax.devices()) == ndev, (len(jax.devices()), ndev)
 
     if args.matrix == "mesh":
         A = extruded_mesh_matrix(args.n_surface, args.layers, seed=0)
+    elif args.matrix == "graded":
+        A = graded_extruded_mesh_matrix(args.n_surface, args.layers, seed=0)
     else:
         A = random_spd_matrix(args.n, nnz_per_row=9, seed=0)
 
     mesh = make_mesh_compat((args.n_node, args.n_core), ("node", "core"))
-    plan, layout = build_spmv_plan(A, args.n_node, args.n_core, mode=args.mode)
+    plan, layout = build_spmv_plan(A, args.n_node, args.n_core, mode=args.mode,
+                                   node_partition=args.node_partition)
+    nb = layout["node_bounds"]
+    print(f"NODE_SIZES {np.diff(nb).tolist()} "
+          f"NODE_IMB {layout['stats']['node_imbalance']:.3f} "
+          f"CORE_IMB {layout['stats']['core_imbalance']:.3f}")
     spmv = make_spmv(plan, mesh, backend=args.backend,
                      transport=args.transport,
                      neighbor_offsets=layout["neighbor_offsets"])
@@ -64,30 +75,68 @@ def main() -> int:
     ok = err < 5e-5
 
     if args.cg or args.fused:
+        # tol must sit above the float32 attainable-accuracy floor for these
+        # small matrices (~1e-4 true residual): below it the recurrence
+        # residual hovers around the stopping threshold and iteration counts
+        # become reduction-order noise (see DESIGN.md §4 caveat)
+        cg_tol = 1e-5
         solve = make_cg(plan, mesh, backend=args.backend)
         b = rng.normal(size=A.n_rows)
         bd = to_dist(b, layout, plan)
-        xd, iters, rel = solve(bd, tol=1e-6, maxiter=2000)
+        xd, iters, rel = solve(bd, tol=cg_tol, maxiter=2000)
         xs = from_dist(xd, layout, plan)
         true_rel = float(np.linalg.norm(A.matvec(xs) - b) / np.linalg.norm(b))
         print(f"CG_ITERS {int(iters)} CG_REL {float(rel):.3e} TRUE_REL {true_rel:.3e}")
-        ok = ok and true_rel < 1e-4 and int(iters) < 2000
+        ok = ok and true_rel < 2e-4 and int(iters) < 2000
 
     if args.fused:
         fsolve = make_fused_cg(plan, mesh, backend=args.backend,
                                transport=args.transport,
                                neighbor_offsets=layout["neighbor_offsets"])
-        xf, itf, relf = fsolve(bd, tol=1e-6, maxiter=2000)
+        xf, itf, relf = fsolve(bd, tol=cg_tol, maxiter=2000)
         xfs = from_dist(xf, layout, plan)
         f_rel = float(np.linalg.norm(A.matvec(xfs) - b) / np.linalg.norm(b))
         dx = float(np.abs(xfs - xs).max() / max(np.abs(xs).max(), 1e-30))
         diters = abs(int(itf) - int(iters))
+        # host-oracle CG (numpy f64 Jacobi-PCG): the fused solution must
+        # agree with a solve that never touches the distributed layout
+        xh = host_cg(A, b, tol=1e-8, maxiter=4000)
+        dx_host = float(np.linalg.norm(xfs - xh)
+                        / max(np.linalg.norm(xh), 1e-30))
         print(f"FUSED_ITERS {int(itf)} FUSED_REL {float(relf):.3e} "
-              f"FUSED_TRUE_REL {f_rel:.3e} DX {dx:.3e} DITERS {diters}")
-        ok = ok and f_rel < 1e-4 and diters <= 1 and dx < 1e-3
+              f"FUSED_TRUE_REL {f_rel:.3e} DX {dx:.3e} DITERS {diters} "
+              f"DX_HOST {dx_host:.3e}")
+        ok = (ok and f_rel < 2e-4 and diters <= 1 and dx < 1e-3
+              and dx_host < 1e-2)
 
     print("OK" if ok else "FAIL")
     return 0 if ok else 1
+
+
+def host_cg(A, b, tol: float = 1e-8, maxiter: int = 4000):
+    """Reference numpy (float64) Jacobi-preconditioned CG."""
+    import numpy as np
+
+    d = A.diagonal()
+    m_inv = np.where(d != 0, 1.0 / np.where(d != 0, d, 1.0), 0.0)
+    x = np.zeros(A.n_rows)
+    r = b.astype(np.float64).copy()
+    z = m_inv * r
+    p = z.copy()
+    rz = float(r @ z)
+    bnorm = max(float(np.linalg.norm(b)), 1e-30)
+    for _ in range(maxiter):
+        if np.linalg.norm(r) / bnorm <= tol:
+            break
+        ap = A.matvec(p)
+        alpha = rz / float(p @ ap)
+        x += alpha * p
+        r -= alpha * ap
+        z = m_inv * r
+        rz_new = float(r @ z)
+        p = z + (rz_new / rz) * p
+        rz = rz_new
+    return x
 
 
 if __name__ == "__main__":

@@ -1,0 +1,209 @@
+"""Two-level (node x core) nnz-balanced partitioning, end to end.
+
+Host-side: the graded (skewed) generator, plan construction with non-uniform
+``node_bounds``, layout round-trips, the Jacobi zero-diagonal guard and the
+bench-harness fixes.  Multi-device: all three modes x both transports on the
+skewed generator, via ``repro.testing.dist_check`` subprocesses.
+"""
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import REPO, run_subprocess
+from repro.core import (build_spmv_plan, from_dist, imbalance, jacobi_inverse,
+                        make_spmv, partition_equal_rows, to_dist)
+from repro.sparse import CSRMatrix, graded_extruded_mesh_matrix
+from repro.util import make_mesh_compat
+
+sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+from common import run_bench_subprocess  # noqa: E402
+
+
+def _mesh11():
+    return make_mesh_compat((1, 1), ("node", "core"))
+
+
+# --------------------------------------------------------------------- #
+# the skewed generator
+# --------------------------------------------------------------------- #
+def test_graded_generator_structure():
+    A = graded_extruded_mesh_matrix(60, 16, seed=0)
+    assert A.n_rows == A.n_cols
+    # symmetric, SPD-shifted Laplacian: diagonal strictly positive
+    d = A.to_dense()
+    np.testing.assert_allclose(d, d.T, atol=0)
+    assert np.all(A.diagonal() > 0)
+    # row nnz must vary strongly (the whole point): heavy tail well above
+    # the light end
+    rn = A.row_nnz
+    assert rn.max() >= 2 * rn.min()
+    assert rn.max() > rn.mean() * 1.3
+
+
+def test_graded_generator_skews_equal_rows_split():
+    A = graded_extruded_mesh_matrix(150, 24, seed=1)
+    eq = imbalance(A.row_nnz, partition_equal_rows(A.n_rows, 8))
+    assert eq > 1.15
+
+
+# --------------------------------------------------------------------- #
+# plan construction with non-uniform node bounds
+# --------------------------------------------------------------------- #
+def test_balanced_plan_has_nonuniform_node_bounds_and_stats():
+    A = graded_extruded_mesh_matrix(100, 16, seed=0)
+    plan, layout = build_spmv_plan(A, 8, 2, mode="balanced")
+    assert layout["node_partition"] == "nnz"
+    sizes = np.diff(layout["node_bounds"])
+    assert len(set(sizes.tolist())) > 1          # genuinely non-uniform
+    stats = layout["stats"]
+    assert stats["node_imbalance"] <= 1.15
+    assert stats["core_imbalance"] <= 1.15
+    assert 0.0 <= stats["padding_waste"] < 1.0
+    # escape hatch reproduces the old equal-rows node split
+    _, layout_rows = build_spmv_plan(A, 8, 2, mode="balanced",
+                                     node_partition="rows")
+    np.testing.assert_array_equal(np.diff(layout_rows["node_bounds"]),
+                                  np.diff(partition_equal_rows(A.n_rows, 8)))
+    assert layout_rows["stats"]["node_imbalance"] > stats["node_imbalance"]
+
+
+def test_vector_and_task_modes_keep_equal_rows_node_split():
+    """Paper fidelity: the pure-MPI baseline modes keep PETSc's equal-rows
+    row distribution unless explicitly overridden."""
+    A = graded_extruded_mesh_matrix(60, 8, seed=0)
+    for mode in ("vector", "task"):
+        _, layout = build_spmv_plan(A, 4, 2, mode=mode)
+        assert layout["node_partition"] == "rows"
+        np.testing.assert_array_equal(
+            layout["node_bounds"], partition_equal_rows(A.n_rows, 4))
+
+
+def test_to_from_dist_roundtrip_nonuniform_bounds():
+    A = graded_extruded_mesh_matrix(80, 12, seed=2)
+    plan, layout = build_spmv_plan(A, 8, 2, mode="balanced")
+    v = np.random.default_rng(0).normal(size=A.n_rows).astype(np.float32)
+    vd = to_dist(v, layout, plan)
+    # scatter + gather through the non-uniform layout is a pure permutation:
+    # bit-exact round trip
+    np.testing.assert_array_equal(from_dist(vd, layout, plan), v)
+
+
+@pytest.mark.parametrize("mode", ["vector", "task", "balanced"])
+def test_single_device_spmv_matches_host_on_graded(mode):
+    A = graded_extruded_mesh_matrix(50, 8, seed=3)
+    x = np.random.default_rng(3).normal(size=A.n_rows)
+    plan, layout = build_spmv_plan(A, 1, 1, mode=mode)
+    y = from_dist(make_spmv(plan, _mesh11())(to_dist(x, layout, plan)),
+                  layout, plan)
+    np.testing.assert_allclose(y, A.matvec(x), rtol=2e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------- #
+# Jacobi zero-diagonal guard
+# --------------------------------------------------------------------- #
+def test_build_plan_rejects_zero_diagonal():
+    # valid rows but one structurally-missing diagonal entry
+    A = CSRMatrix.from_coo([0, 0, 1, 1, 2], [0, 1, 0, 1, 0],
+                           [2.0, -1.0, -1.0, 2.0, 1.0], (3, 3))
+    with pytest.raises(ValueError, match="diagonal"):
+        build_spmv_plan(A, 1, 1, mode="balanced")
+
+
+def test_jacobi_inverse_is_safe_on_zero_diagonal():
+    """Even for hand-built plans, 1/diag must never leak inf through the
+    mask (jnp.where evaluates both branches)."""
+    diag = jnp.asarray([2.0, 0.0, 4.0, 1.0])
+    mask = jnp.asarray([1.0, 1.0, 1.0, 0.0])
+    m_inv = jacobi_inverse(diag, mask)
+    assert np.all(np.isfinite(np.asarray(m_inv)))
+    np.testing.assert_allclose(np.asarray(m_inv), [0.5, 0.0, 0.25, 0.0])
+
+
+# --------------------------------------------------------------------- #
+# padding-waste accounting with explicitly stored zeros
+# --------------------------------------------------------------------- #
+def test_balanced_coo_padding_waste_counts_stored_zeros_as_real():
+    from repro.sparse import BalancedCOO
+    # 4 rows, 2 nnz each, one entry an explicitly stored 0.0
+    A = CSRMatrix.from_coo([0, 0, 1, 1, 2, 2, 3, 3],
+                           [0, 1, 1, 2, 2, 3, 3, 0],
+                           [1.0, 0.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0], (4, 4))
+    assert A.nnz == 8
+    b = BalancedCOO.from_csr(A, np.array([0, 2, 4]), nnz_align=4,
+                             rows_align=2)
+    assert sum(b.bin_nnz) == 8
+    # 2 bins x 4-slot pad = 8 slots, all real -> zero waste even though one
+    # stored value is exactly 0.0
+    assert b.padding_waste == 0.0
+
+
+# --------------------------------------------------------------------- #
+# bench harness
+# --------------------------------------------------------------------- #
+def test_run_bench_subprocess_reports_missing_json():
+    """A child that exits 0 without printing a JSON line must raise a
+    RuntimeError carrying the output tail, not a bare IndexError."""
+    with pytest.raises(RuntimeError, match="no JSON"):
+        run_bench_subprocess("platform", [])
+
+
+@pytest.mark.slow
+def test_bench_spmv_emits_imbalance_and_waste_fields():
+    r = run_bench_subprocess(
+        "repro.testing.bench_spmv",
+        ["--n-node", "2", "--n-core", "2", "--mode", "balanced",
+         "--matrix", "graded", "--n-surface", "30", "--layers", "6",
+         "--iters", "2"])
+    for key in ("node_imbalance", "core_imbalance", "padding_waste",
+                "node_partition", "us_per_spmv"):
+        assert key in r, key
+    assert r["node_partition"] == "nnz"
+    assert r["node_imbalance"] >= 1.0
+
+
+# --------------------------------------------------------------------- #
+# multi-device: all modes x transports on the skewed generator
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("mode,transport", [
+    ("vector", "a2a"),
+    ("task", "a2a"),
+    ("balanced", "a2a"),
+    ("vector", "ring"),
+    ("task", "ring"),
+    ("balanced", "ring"),
+])
+def test_multidevice_graded_spmv(mode, transport):
+    r = run_subprocess(["-m", "repro.testing.dist_check",
+                        "--n-node", "4", "--n-core", "2",
+                        "--mode", mode, "--transport", transport,
+                        "--matrix", "graded",
+                        "--n-surface", "40", "--layers", "8"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_multidevice_graded_fused_cg_vs_host():
+    """Fused CG on non-uniform node bounds agrees with the unfused solver
+    AND with a pure-numpy host CG oracle (checked inside dist_check)."""
+    r = run_subprocess(["-m", "repro.testing.dist_check",
+                        "--n-node", "4", "--n-core", "2",
+                        "--mode", "balanced", "--matrix", "graded",
+                        "--n-surface", "40", "--layers", "8", "--fused"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+    assert "DX_HOST" in r.stdout
+
+
+def test_multidevice_graded_nnz_node_split_with_single_core():
+    """Pure-'MPI' shape (n_core=1) with the nnz node split: the halo plan and
+    ring offsets must follow the non-uniform bounds."""
+    r = run_subprocess(["-m", "repro.testing.dist_check",
+                        "--n-node", "8", "--n-core", "1",
+                        "--mode", "task", "--node-partition", "nnz",
+                        "--matrix", "graded",
+                        "--n-surface", "60", "--layers", "8"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
