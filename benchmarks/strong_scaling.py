@@ -74,22 +74,26 @@ def run(iters: int = 30):
                      r["us_per_iter"],
                      f"iters={r['cg_iters']};" + fmt_collectives(r)))
 
-    # skewed-matrix scenario (adapted-mesh analogue): on exponentially
-    # varying row nnz at 8 nodes, the equal-rows node split mis-sizes every
-    # shard's static shapes while the two-level nnz partition stays
-    # balanced on both axes — the per-axis imbalance and padding-waste
-    # columns are the headline comparison
-    for node_part, label in (("rows", "equal_rows"), ("nnz", "two_level")):
-        r = run_bench_subprocess(
-            "repro.testing.bench_spmv",
-            ["--n-node", "8", "--n-core", "2", "--mode", "balanced",
-             "--node-partition", node_part, "--matrix", "graded",
-             "--n-surface", "400", "--layers", "32", "--iters", str(iters)])
-        rows.append((f"fig3_skewed/{label}/8x2", r["us_per_spmv"],
-                     f"node_imb={r['node_imbalance']:.3f};"
-                     f"core_imb={r['core_imbalance']:.3f};"
-                     f"waste={r['padding_waste']:.3f};"
-                     f"gflops={r['gflops']:.3f}"))
+    # skewed-matrix scenario (adapted-mesh analogue), crossed with the
+    # shard-storage format: row-padded ELL vs sliced ELL (SELL-C-σ) under
+    # the equal-rows and two-level nnz node splits.  The ell rows are the
+    # former fig3_skewed scenario (node-split imbalance mis-sizes every
+    # static shape); the sell rows show that nnz-proportional storage
+    # makes the balanced split also the *cheap* one — the per-axis
+    # imbalance and waste columns are the headline comparison
+    for fmt in ("ell", "sell"):
+        for node_part, label in (("rows", "equal_rows"), ("nnz", "two_level")):
+            r = run_bench_subprocess(
+                "repro.testing.bench_spmv",
+                ["--n-node", "8", "--n-core", "2", "--mode", "balanced",
+                 "--format", fmt, "--node-partition", node_part,
+                 "--matrix", "graded", "--n-surface", "400", "--layers", "32",
+                 "--iters", str(iters)])
+            rows.append((f"fig3_formats/{fmt}/{label}/8x2", r["us_per_spmv"],
+                         f"waste={r['padding_waste']:.3f};"
+                         f"node_imb={r['node_imbalance']:.3f};"
+                         f"core_imb={r['core_imbalance']:.3f};"
+                         f"gflops={r['gflops']:.3f}"))
 
     # modelled pod-scale curves, paper-size matrices
     for label, n_rows, nnz in [("fig3_model_13.5M", 13_491_933, 371_102_769),

@@ -10,7 +10,8 @@ from repro.core.partition import (
 )
 from repro.core.halo import HaloPlan, build_halo_plan
 from repro.core.spmv import (SpMVPlan, build_spmv_plan, make_spmv,
-                             make_shard_body, to_dist, from_dist, MODES)
+                             make_shard_body, plan_fields, plan_shard_arrays,
+                             to_dist, from_dist, MODES)
 from repro.core.cg import cg_solve, jacobi_inverse, make_cg
 from repro.core.sharded_cg import make_fused_cg
 
@@ -20,6 +21,7 @@ __all__ = [
     "imbalance", "NODE_PARTITIONS",
     "HaloPlan", "build_halo_plan",
     "SpMVPlan", "build_spmv_plan", "make_spmv", "make_shard_body",
+    "plan_fields", "plan_shard_arrays",
     "to_dist", "from_dist", "MODES",
     "cg_solve", "jacobi_inverse", "make_cg", "make_fused_cg",
 ]

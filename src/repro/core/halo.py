@@ -102,7 +102,7 @@ def build_halo_plan(ghost_cols: list[np.ndarray], node_bounds: np.ndarray,
     pair_cols: dict[tuple[int, int], np.ndarray] = {}
     owner_core: dict[tuple[int, int], np.ndarray] = {}
     bin_local: dict[tuple[int, int], np.ndarray] = {}
-    hs = 1
+    hs = 0
     for dst in range(n_node):
         g = np.asarray(ghost_cols[dst], dtype=np.int64)
         owner = np.searchsorted(node_bounds, g, side="right") - 1
@@ -117,8 +117,13 @@ def build_halo_plan(ghost_cols: list[np.ndarray], node_bounds: np.ndarray,
             owner_core[(dst, src)] = oc
             bin_local[(dst, src)] = src_local - cb[oc]
             hs = max(hs, int(np.bincount(oc, minlength=n_core).max()))
-    hs = align_up(hs, h_align)
-    g_pad = align_up(max((len(g) for g in ghost_cols), default=1), 8)
+    # a matrix with no halo traffic at all (single node, or block-diagonal
+    # under this partition) gets hs == g_pad == 0: the shard body skips the
+    # exchange and the ghost phase entirely rather than shuttling dead
+    # padding through the collectives
+    hs = align_up(hs, h_align) if hs else 0
+    n_ghost = max((len(g) for g in ghost_cols), default=0)
+    g_pad = align_up(n_ghost, 8) if n_ghost else 0
 
     send_own = np.zeros((n_node, n_core, n_node, hs), dtype=np.int32)
     recv_own = np.full((n_node, n_core, n_node, hs), g_pad, dtype=np.int32)

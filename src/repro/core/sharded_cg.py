@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.cg import jacobi_inverse
-from repro.core.spmv import (SHARD_FIELDS, SpMVPlan, make_shard_body,
+from repro.core.spmv import (SpMVPlan, make_shard_body, plan_fields,
                              plan_shard_arrays)
 from repro.util import shard_map_compat
 
@@ -54,6 +54,7 @@ def make_fused_cg(plan: SpMVPlan, mesh: jax.sharding.Mesh,
     """
     node_ax, core_ax = axis_names
     axes = (node_ax, core_ax)
+    fields = plan_fields(plan)
     body = make_shard_body(plan, axis_names=axis_names, backend=backend,
                            transport=transport,
                            neighbor_offsets=neighbor_offsets)
@@ -61,7 +62,7 @@ def make_fused_cg(plan: SpMVPlan, mesh: jax.sharding.Mesh,
 
     def shard_solve(*args):
         *consts, m_inv, mask, b, tol, maxiter = args
-        F = {k: v[0, 0] for k, v in zip(SHARD_FIELDS, consts)}
+        F = {k: v[0, 0] for k, v in zip(fields, consts)}
         m_inv, mask, b = m_inv[0, 0], mask[0, 0], b[0, 0]   # (rc_pad,)
 
         def pdot(a, c):
@@ -106,7 +107,7 @@ def make_fused_cg(plan: SpMVPlan, mesh: jax.sharding.Mesh,
         return x[None, None], k, rel            # k/rel replicated on all shards
 
     spec = P(node_ax, core_ax)
-    n_consts = len(SHARD_FIELDS) + 2            # + m_inv, mask
+    n_consts = len(fields) + 2                  # + m_inv, mask
     fn = shard_map_compat(
         shard_solve, mesh=mesh,
         in_specs=(spec,) * n_consts + (spec, P(), P()),

@@ -38,13 +38,20 @@ sends the boundary rows its own bin holds, indexed straight into its
 for the intra-node ``all_gather``; on receive each core scatters only its own
 slice and one intra-node ``psum`` combines the partial ghost buffers.
 
+Shard-local matrix **storage is pluggable** (``repro.sparse.formats``): the
+plan carries a format name plus the format-owned device arrays
+(``fmt_data``), and the per-shard two-phase multiply dispatches to the
+format's jnp or Pallas matvec.  ``format="ell"`` is the historical
+row-padded layout; ``format="sell"`` is sliced ELL (SELL-C-σ) whose
+σ-window row sorting is folded into the plan's slot maps
+(``x_gather``/``global_row_of``/halo plan), so every downstream layer is
+format-agnostic.  Plans with no halo traffic (single-node or
+block-diagonal matrices) have ``hs == 0`` and the shard body skips the
+ghost exchange and the off-diagonal phase entirely.
+
 The per-shard two-phase multiply is shared between the standalone SpMV
 (``make_spmv``) and the fully-sharded fused CG solver
-(``repro.core.sharded_cg``) via ``make_shard_body``.  The per-(node,core)
-local multiply runs either as vectorised jnp (``jnp`` backend) or through a
-**one-pass** Pallas TPU kernel (``pallas`` backend,
-``repro.kernels.spmv_bcsr.fused_ell_spmv_pallas``) that computes
-diag + offd without materialising the intermediate partial result.
+(``repro.core.sharded_cg``) via ``make_shard_body``.
 See DESIGN.md for the full data flow.
 """
 from __future__ import annotations
@@ -60,25 +67,31 @@ from jax.sharding import PartitionSpec as P
 from repro.core.halo import HaloPlan, build_halo_plan
 from repro.core.partition import (NODE_PARTITIONS, partition_stats,
                                   partition_two_level)
-from repro.sparse.csr import CSRMatrix, ell_arrays_from_csr
+from repro.sparse.csr import CSRMatrix
+from repro.sparse.formats import ShardFormat, get_format
 from repro.util import align_up, shard_map_compat
 
 __all__ = ["SpMVPlan", "build_spmv_plan", "make_spmv", "make_shard_body",
-           "plan_shard_arrays", "SHARD_FIELDS", "MODES"]
+           "plan_shard_arrays", "plan_fields", "COMMON_FIELDS",
+           "SHARD_FIELDS", "MODES"]
 
 MODES = ("vector", "task", "balanced")
 
-#: SpMVPlan data fields consumed by the shard body, in argument order.
+#: format-independent plan fields consumed by the shard body, in argument
+#: order (the format's own ``fields`` come first).
+COMMON_FIELDS = ("send_own", "recv_own", "x_gather")
+
+#: legacy alias: the shard-body argument order of the historical ELL-only
+#: plan.  Prefer ``plan_fields(plan)``, which is format-aware.
 SHARD_FIELDS = ("diag_cols", "diag_vals", "offd_cols", "offd_vals",
                 "send_own", "recv_own", "x_gather")
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["diag_cols", "diag_vals", "offd_cols", "offd_vals",
-                      "send_own", "recv_own", "x_gather", "y_local_rows",
+         data_fields=["fmt_data", "send_own", "recv_own", "x_gather",
                       "diag_a", "mask"],
          meta_fields=["n", "n_node", "n_core", "rc_pad", "nl_pad", "g_pad",
-                      "hs", "mode"])
+                      "hs", "mode", "format"])
 @dataclasses.dataclass
 class SpMVPlan:
     """Device-ready distributed matrix + halo plan (a pytree).
@@ -88,17 +101,15 @@ class SpMVPlan:
     Vectors in "CG layout" are (n_node, n_core, rc_pad).
     """
 
-    # local ELL blocks, one per (node, core) shard
-    diag_cols: jax.Array   # (n_node, n_core, rc_pad, wd) int32 -> node-local col
-    diag_vals: jax.Array   # (n_node, n_core, rc_pad, wd)
-    offd_cols: jax.Array   # (n_node, n_core, rc_pad, wo) int32 -> ghost-local col
-    offd_vals: jax.Array   # (n_node, n_core, rc_pad, wo)
+    # format-owned local matrix blocks, one entry per format field
+    # (e.g. ELL: diag/offd cols+vals (n_node, n_core, rc_pad, w);
+    #  SELL: flat slice-major streams (n_node, n_core, nnz_pad))
+    fmt_data: dict[str, jax.Array]
     # owner-split halo plan (indices into the core's own (rc_pad,) shard)
     send_own: jax.Array    # (n_node, n_core, n_node, hs) int32
     recv_own: jax.Array    # (n_node, n_core, n_node, hs) int32 -> ghost slot
     # vector layout maps
     x_gather: jax.Array     # (n_node, n_core, nl_pad) int32 (replicated on core)
-    y_local_rows: jax.Array  # (n_node, n_core, rc_pad) int32 first-row offsets (diag extraction)
     diag_a: jax.Array       # (n_node, n_core, rc_pad) diag(A) in CG layout (1 at pad)
     mask: jax.Array         # (n_node, n_core, rc_pad) 1.0 valid / 0.0 padding
     # static meta
@@ -110,6 +121,7 @@ class SpMVPlan:
     g_pad: int
     hs: int
     mode: str
+    format: str
 
     # ------------------------------------------------------------------ #
     @property
@@ -117,12 +129,36 @@ class SpMVPlan:
         return (self.n_node, self.n_core, self.rc_pad)
 
     def nnz_stored(self) -> int:
-        return int(self.diag_cols.size + self.offd_cols.size)
+        return get_format(self.format).nnz_stored(self.fmt_data)
+
+    # legacy ELL accessors (KeyError for other formats)
+    @property
+    def diag_cols(self) -> jax.Array:
+        return self.fmt_data["diag_cols"]
+
+    @property
+    def diag_vals(self) -> jax.Array:
+        return self.fmt_data["diag_vals"]
+
+    @property
+    def offd_cols(self) -> jax.Array:
+        return self.fmt_data["offd_cols"]
+
+    @property
+    def offd_vals(self) -> jax.Array:
+        return self.fmt_data["offd_vals"]
+
+
+def plan_fields(plan: SpMVPlan) -> tuple[str, ...]:
+    """Shard-body argument names: the format's fields, then the common ones."""
+    return get_format(plan.format).fields + COMMON_FIELDS
 
 
 def plan_shard_arrays(plan: SpMVPlan) -> tuple[jax.Array, ...]:
-    """The plan's shard-body inputs in ``SHARD_FIELDS`` order."""
-    return tuple(getattr(plan, f) for f in SHARD_FIELDS)
+    """The plan's shard-body inputs in ``plan_fields`` order."""
+    fmt = get_format(plan.format)
+    return tuple(plan.fmt_data[f] for f in fmt.fields) + (
+        plan.send_own, plan.recv_own, plan.x_gather)
 
 
 # ---------------------------------------------------------------------- #
@@ -131,8 +167,10 @@ def plan_shard_arrays(plan: SpMVPlan) -> tuple[jax.Array, ...]:
 def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
                     mode: str = "balanced", dtype=jnp.float32,
                     rows_align: int = 8, width_align: int = 1,
-                    node_partition: str | None = None) -> tuple[SpMVPlan, dict]:
-    """Partition ``A``, split diag/offdiag, build ELL blocks + halo plan.
+                    node_partition: str | None = None,
+                    format: str | ShardFormat = "ell"
+                    ) -> tuple[SpMVPlan, dict]:
+    """Partition ``A``, split diag/offdiag, pack shard blocks + halo plan.
 
     ``mode="balanced"`` balances non-zeros on **both** mesh axes
     (``partition_two_level``): nodes get nnz-balanced global row blocks and
@@ -142,11 +180,16 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
     independently of ``mode`` (e.g. ``"rows"`` reproduces the old
     equal-rows node split under balanced core bins).
 
+    ``format`` selects the shard-local storage (``repro.sparse.formats``):
+    ``"ell"`` (row-padded, the historical layout) or ``"sell"`` (sliced
+    ELL with σ-window row sorting, whose storage tracks true nnz — the
+    cheap companion of the two-level balanced partition).  The format's
+    row permutation is folded into every layout map, so ``to_dist`` /
+    ``from_dist`` / the halo plan are format-agnostic.
+
     Returns (plan, layout) where ``layout`` carries the host-side index
     arrays needed by ``to_dist`` / ``from_dist`` plus a ``stats`` dict with
-    per-axis ``imbalance()`` and the plan's ELL ``padding_waste``.  All
-    packing is vectorised per node — no per-(node, core) or per-row
-    interpreted loops.
+    per-axis ``imbalance()`` and the format-computed ``padding_waste``.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -155,6 +198,7 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
     if node_partition not in NODE_PARTITIONS:
         raise ValueError(f"node_partition must be one of {NODE_PARTITIONS}, "
                          f"got {node_partition!r}")
+    fmt = get_format(format)
     n = A.n_rows
     node_bounds, core_bounds_all = partition_two_level(
         A.row_nnz, n_node, n_core,
@@ -179,23 +223,13 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
     nl_pad = align_up(max(int(node_bounds[i + 1] - node_bounds[i])
                           for i in range(n_node)), rows_align)
 
-    def _max_width(blocks):
-        return align_up(max((int(b.row_nnz.max()) if b.nnz else 1
-                             for b in blocks), default=1), width_align)
-
-    wd = _max_width(diag_nodes)
-    wo = _max_width(offd_nodes)
-
-    diag_cols = np.zeros((n_node, n_core, rc_pad, wd), dtype=np.int32)
-    diag_vals = np.zeros((n_node, n_core, rc_pad, wd), dtype=np.float64)
-    offd_cols = np.zeros((n_node, n_core, rc_pad, wo), dtype=np.int32)
-    offd_vals = np.zeros((n_node, n_core, rc_pad, wo), dtype=np.float64)
     x_gather = np.zeros((n_node, n_core, nl_pad), dtype=np.int32)
     mask = np.zeros((n_node, n_core, rc_pad), dtype=np.float64)
     diag_a = np.ones((n_node, n_core, rc_pad), dtype=np.float64)
-    y_rows = np.zeros((n_node, n_core, rc_pad), dtype=np.int32)
     # host layout maps for to_dist / from_dist
     global_row_of = np.full((n_node, n_core, rc_pad), -1, dtype=np.int64)
+    # bin-local row id -> vector-layout slot, per shard (for the halo remap)
+    slot_of = np.zeros((n_node, n_core, rc_pad), dtype=np.int32)
 
     diag_full = A.diagonal()
     zero_diag = np.flatnonzero(diag_full == 0)
@@ -205,27 +239,34 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
             f"owned row(s) (first: row {int(zero_diag[0])}); the Jacobi "
             "preconditioner 1/diag(A) would be infinite there.  Add a "
             "diagonal shift or fix the assembly.")
+    c_of_all: list[np.ndarray] = []
+    lr_all: list[np.ndarray] = []
     for i in range(n_node):
         lo = int(node_bounds[i])
         nl = diag_nodes[i].n_rows
         cb = core_bounds_all[i]
         ar = np.arange(nl, dtype=np.int64)
         c_of = np.searchsorted(cb, ar, side="right") - 1   # owning core per row
-        lr = ar - cb[c_of]                                 # row inside the bin
-        dc, dv = ell_arrays_from_csr(diag_nodes[i], width=wd)
-        oc_, ov = ell_arrays_from_csr(offd_nodes[i], width=wo)
-        diag_cols[i, c_of, lr] = dc
-        diag_vals[i, c_of, lr] = dv
-        offd_cols[i, c_of, lr] = oc_
-        offd_vals[i, c_of, lr] = ov
+        lr = fmt.slot_order(A.row_nnz[lo:lo + nl], cb)     # slot inside the bin
+        c_of_all.append(c_of)
+        lr_all.append(lr)
         x_gather[i, :, :nl] = (c_of * rc_pad + lr)[None, :]
         mask[i, c_of, lr] = 1.0
         diag_a[i, c_of, lr] = diag_full[lo:lo + nl]
-        y_rows[i, c_of, lr] = ar
         global_row_of[i, c_of, lr] = lo + ar
+        slot_of[i, c_of, ar - cb[c_of]] = lr
+
+    fmt_data = fmt.pack(diag_nodes, offd_nodes, core_bounds_all,
+                        c_of_all, lr_all, rc_pad, width_align, dtype)
 
     halo: HaloPlan = build_halo_plan(ghost_cols, node_bounds, n_core,
                                      core_bounds=core_bounds_all)
+    # halo send indices are bin-local row ids; route them through the
+    # format's slot assignment (identity for ELL) so the exchange reads the
+    # permuted vector shards correctly with no format special case
+    send_own = slot_of[np.arange(n_node)[:, None, None, None],
+                       np.arange(n_core)[None, :, None, None],
+                       halo.send_own]
 
     # neighbour structure (for the ring transport): which (dst - src) mod n
     # offsets actually carry halo traffic.  Contiguous partitions of banded
@@ -241,29 +282,25 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
                       if pair_counts[dst, src] > 0})
 
     plan = SpMVPlan(
-        diag_cols=jnp.asarray(diag_cols),
-        diag_vals=jnp.asarray(diag_vals, dtype=dtype),
-        offd_cols=jnp.asarray(offd_cols),
-        offd_vals=jnp.asarray(offd_vals, dtype=dtype),
-        send_own=jnp.asarray(halo.send_own),
+        fmt_data=fmt_data,
+        send_own=jnp.asarray(send_own),
         recv_own=jnp.asarray(halo.recv_own),
         x_gather=jnp.asarray(x_gather),
-        y_local_rows=jnp.asarray(y_rows),
         diag_a=jnp.asarray(diag_a, dtype=dtype),
         mask=jnp.asarray(mask, dtype=dtype),
         n=n, n_node=n_node, n_core=n_core,
         rc_pad=rc_pad, nl_pad=nl_pad, g_pad=halo.g_pad, hs=halo.h_own,
-        mode=mode,
+        mode=mode, format=fmt.name,
     )
     stats = partition_stats(A.row_nnz, node_bounds, core_bounds_all)
-    # fraction of ELL slots (diag + offd, all shards) holding no real entry;
-    # both axes' imbalance inflate this, since every static shape is sized
-    # by the heaviest node/shard
-    stats["padding_waste"] = 1.0 - A.nnz / max(plan.nnz_stored(), 1)
+    # fraction of stored slots (diag + offd, all shards) holding no real
+    # entry — computed by the format, since only it knows what it pads
+    stats["padding_waste"] = fmt.padding_waste(fmt_data, A.nnz)
     layout = {
         "node_bounds": node_bounds,
         "core_bounds": core_bounds_all,
         "node_partition": node_partition,
+        "format": fmt.name,
         "global_row_of": global_row_of,
         "halo": halo,
         "neighbor_offsets": offsets,
@@ -280,12 +317,12 @@ def to_dist(v: np.ndarray, layout: dict, plan: SpMVPlan,
             dtype=None) -> jax.Array:
     """Global (n,) vector -> CG layout.  Driven entirely by the layout's
     ``global_row_of`` table, so it is exact for non-uniform ``node_bounds``
-    (two-level nnz partitions) as well as equal splits."""
+    (two-level nnz partitions) and format row permutations alike."""
     g = layout["global_row_of"]
     out = np.zeros(plan.cg_shape, dtype=np.asarray(v).dtype)
     valid = g >= 0
     out[valid] = np.asarray(v)[g[valid]]
-    return jnp.asarray(out, dtype=dtype or plan.diag_vals.dtype)
+    return jnp.asarray(out, dtype=dtype or plan.mask.dtype)
 
 
 def from_dist(vd: jax.Array, layout: dict, plan: SpMVPlan) -> np.ndarray:
@@ -300,21 +337,16 @@ def from_dist(vd: jax.Array, layout: dict, plan: SpMVPlan) -> np.ndarray:
 # ---------------------------------------------------------------------- #
 # the distributed SpMV shard body (shared by make_spmv and the fused CG)
 # ---------------------------------------------------------------------- #
-def _ell_matvec(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
-    """Local padded-row SpMV: (R, W) x (N,) -> (R,)."""
-    return jnp.einsum("rk,rk->r", vals, x[cols].astype(vals.dtype))
-
-
 def make_shard_body(plan: SpMVPlan,
                     axis_names: tuple[str, str] = ("node", "core"),
                     backend: str = "jnp", transport: str = "a2a",
                     neighbor_offsets: list[int] | None = None):
     """Build the per-shard two-phase SpMV body: ``body(F, x_mine) -> y_mine``.
 
-    ``F`` maps ``SHARD_FIELDS`` names to per-shard arrays (leading (1, 1)
-    shard dims already stripped); ``x_mine`` is this core's (rc_pad,) bin of
-    the distributed vector.  Meant to run *inside* a ``shard_map`` over
-    ``axis_names`` — ``make_spmv`` wraps it directly and
+    ``F`` maps ``plan_fields(plan)`` names to per-shard arrays (leading
+    (1, 1) shard dims already stripped); ``x_mine`` is this core's
+    (rc_pad,) bin of the distributed vector.  Meant to run *inside* a
+    ``shard_map`` over ``axis_names`` — ``make_spmv`` wraps it directly and
     ``repro.core.sharded_cg`` calls it from the fused CG ``while_loop``.
 
     Per call the body issues exactly:
@@ -327,59 +359,61 @@ def make_shard_body(plan: SpMVPlan,
                          partial ghost buffers; each core scatters only its
                          own (n_node, hs) recv slice).
 
+    Plans with **no halo traffic** (``plan.hs == 0`` — single-node or
+    block-diagonal matrices) skip the exchange and the ghost-assembly psum
+    entirely and run the diagonal phase alone.
+
     ``transport='ring'`` replaces the all_to_all with one ``ppermute`` per
     populated neighbour offset (finer-grained overlap; see ``make_spmv``).
 
-    ``backend``: 'jnp' (vectorised gather ELL) or 'pallas' (one-pass
-    diag+offd TPU kernel; interpret-mode on CPU).
+    ``backend``: 'jnp' or 'pallas' — dispatched to the plan format's local
+    matvec (``repro.sparse.formats``; Pallas kernels run interpret-mode on
+    CPU).
     """
     node_ax, core_ax = axis_names
     mode = plan.mode
-    n_node, g_pad = plan.n_node, plan.g_pad
-    if transport == "ring" and not neighbor_offsets:
+    n_node, g_pad, rc_pad = plan.n_node, plan.g_pad, plan.rc_pad
+    has_halo = plan.hs > 0
+    if transport == "ring" and has_halo and not neighbor_offsets:
         raise ValueError("ring transport needs layout['neighbor_offsets']")
     if transport not in ("a2a", "ring"):
         raise ValueError(f"unknown transport {transport!r}")
 
+    fmt = get_format(plan.format)
     if backend == "pallas":
-        from repro.kernels.ops import fused_ell_spmv
-
-        def local_matvec(F, x_local, x_ghost):
-            return fused_ell_spmv(F["diag_vals"], F["diag_cols"],
-                                  F["offd_vals"], F["offd_cols"],
-                                  x_local, x_ghost)
+        local_matvec = fmt.matvec_pallas
     elif backend == "jnp":
-        def local_matvec(F, x_local, x_ghost):
-            # phase 1: diagonal block x local vector; phase 2: off-diagonal
-            # block x ghost elements
-            return (_ell_matvec(F["diag_vals"], F["diag_cols"], x_local)
-                    + _ell_matvec(F["offd_vals"], F["offd_cols"], x_ghost))
+        local_matvec = fmt.matvec_jnp
     else:
         raise ValueError(f"unknown backend {backend!r}")
 
     def body(F: dict, x_mine: jax.Array) -> jax.Array:
-        send_own, recv_own = F["send_own"], F["recv_own"]  # (n_node, hs)
-        # -- VecScatter analogue: owner-split halo exchange straight from
-        #    this core's shard (no dependence on the intra-node gather) --
-        part = jnp.zeros(g_pad + 1, dtype=x_mine.dtype)
-        if transport == "a2a":
-            recv = jax.lax.all_to_all(x_mine[send_own], node_ax,
-                                      split_axis=0, concat_axis=0)
-            part = part.at[recv_own.reshape(-1)].set(recv.reshape(-1))
-        else:  # ring: one independent ppermute per populated offset
-            me = jax.lax.axis_index(node_ax)
-            for d in neighbor_offsets:
-                # I am src for dst = me + d; I receive from src = me - d
-                dst_row = (me + d) % n_node
-                send = jnp.take(send_own, dst_row, axis=0)      # (hs,)
-                perm = [(i, (i + d) % n_node) for i in range(n_node)]
-                got = jax.lax.ppermute(x_mine[send], node_ax, perm)
-                src_row = (me - d) % n_node
-                part = part.at[jnp.take(recv_own, src_row, axis=0)].set(got)
-        # every ghost slot is written by exactly one core; slot g_pad dumps
-        # the padding, so summing the per-core partial buffers assembles the
-        # full ghost vector without gathering the whole recv table
-        x_ghost = jax.lax.psum(part, core_ax)
+        if has_halo:
+            send_own, recv_own = F["send_own"], F["recv_own"]  # (n_node, hs)
+            # -- VecScatter analogue: owner-split halo exchange straight from
+            #    this core's shard (no dependence on the intra-node gather) --
+            part = jnp.zeros(g_pad + 1, dtype=x_mine.dtype)
+            if transport == "a2a":
+                recv = jax.lax.all_to_all(x_mine[send_own], node_ax,
+                                          split_axis=0, concat_axis=0)
+                part = part.at[recv_own.reshape(-1)].set(recv.reshape(-1))
+            else:  # ring: one independent ppermute per populated offset
+                me = jax.lax.axis_index(node_ax)
+                for d in neighbor_offsets:
+                    # I am src for dst = me + d; I receive from src = me - d
+                    dst_row = (me + d) % n_node
+                    send = jnp.take(send_own, dst_row, axis=0)      # (hs,)
+                    perm = [(i, (i + d) % n_node) for i in range(n_node)]
+                    got = jax.lax.ppermute(x_mine[send], node_ax, perm)
+                    src_row = (me - d) % n_node
+                    part = part.at[jnp.take(recv_own, src_row, axis=0)].set(got)
+            # every ghost slot is written by exactly one core; slot g_pad
+            # dumps the padding, so summing the per-core partial buffers
+            # assembles the full ghost vector without gathering the whole
+            # recv table
+            x_ghost = jax.lax.psum(part, core_ax)
+        else:
+            x_ghost = None      # halo-free plan: no exchange, no ghost phase
 
         # -- shared-memory read analogue: assemble the node-local x slice --
         x_bins = jax.lax.all_gather(x_mine, core_ax, axis=0)  # (n_core, rc_pad)
@@ -388,9 +422,13 @@ def make_shard_body(plan: SpMVPlan,
         if mode == "vector":
             # master-only comm: no asynchronous progress — the diagonal
             # multiply must wait for the exchange to finish.
-            x_local, x_ghost = jax.lax.optimization_barrier((x_local, x_ghost))
+            if x_ghost is None:
+                x_local = jax.lax.optimization_barrier(x_local)
+            else:
+                x_local, x_ghost = jax.lax.optimization_barrier(
+                    (x_local, x_ghost))
 
-        return local_matvec(F, x_local, x_ghost)
+        return local_matvec(F, x_local, x_ghost, rc_pad)
 
     return body
 
@@ -404,8 +442,8 @@ def make_spmv(plan: SpMVPlan, mesh: jax.sharding.Mesh,
               neighbor_offsets: list[int] | None = None):
     """Build the jitted distributed SpMV: (n_node, n_core, rc_pad) -> same.
 
-    ``backend``: 'jnp' (vectorised gather ELL) or 'pallas' (one-pass TPU
-    kernel via ``repro.kernels``; interpret-mode on CPU).
+    ``backend``: 'jnp' or 'pallas' — dispatched to the plan's shard format
+    (``repro.sparse.formats``; Pallas kernels run interpret-mode on CPU).
 
     ``transport``: 'a2a' — one fused all_to_all (PETSc VecScatter analogue);
     'ring' — one ppermute per populated neighbour offset (beyond-paper:
@@ -415,6 +453,7 @@ def make_spmv(plan: SpMVPlan, mesh: jax.sharding.Mesh,
     banded extrusion-ordered matrices with contiguous partitions).
     """
     node_ax, core_ax = axis_names
+    fields = plan_fields(plan)
     body = make_shard_body(plan, axis_names=axis_names, backend=backend,
                            transport=transport,
                            neighbor_offsets=neighbor_offsets)
@@ -422,12 +461,12 @@ def make_spmv(plan: SpMVPlan, mesh: jax.sharding.Mesh,
     def shard_fn(*args):
         *consts, xd = args
         # strip the leading (1, 1, ...) shard dims
-        F = {k: v[0, 0] for k, v in zip(SHARD_FIELDS, consts)}
+        F = {k: v[0, 0] for k, v in zip(fields, consts)}
         return body(F, xd[0, 0])[None, None]    # (1, 1, rc_pad)
 
     spec = P(node_ax, core_ax)
     fn = shard_map_compat(shard_fn, mesh=mesh,
-                          in_specs=(spec,) * (len(SHARD_FIELDS) + 1),
+                          in_specs=(spec,) * (len(fields) + 1),
                           out_specs=spec)
 
     @jax.jit

@@ -1,4 +1,6 @@
-from repro.kernels.ops import ell_spmv, balanced_spmv, fused_ell_spmv
+from repro.kernels.ops import (ell_spmv, balanced_spmv, fused_ell_spmv,
+                               fused_sell_spmv)
 from repro.kernels import ref
 
-__all__ = ["ell_spmv", "balanced_spmv", "fused_ell_spmv", "ref"]
+__all__ = ["ell_spmv", "balanced_spmv", "fused_ell_spmv", "fused_sell_spmv",
+           "ref"]

@@ -12,10 +12,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.spmv_bcsr import (balanced_spmv_pallas, ell_spmv_pallas,
-                                     fused_ell_spmv_pallas)
+                                     fused_ell_spmv_pallas,
+                                     fused_sell_spmv_pallas, sell_spmv_pallas)
 from repro.util import align_up as _align_up
 
-__all__ = ["ell_spmv", "balanced_spmv", "fused_ell_spmv", "default_interpret"]
+__all__ = ["ell_spmv", "balanced_spmv", "fused_ell_spmv", "fused_sell_spmv",
+           "default_interpret"]
 
 
 @functools.cache
@@ -62,6 +64,44 @@ def fused_ell_spmv(dvals: jax.Array, dcols: jax.Array,
                               interpret=default_interpret() if interpret is None
                               else interpret)
     return y[:rows]
+
+
+def _pad_sell_stream(vals, cols, rows, nnz_chunk):
+    """Pick a chunk size and zero-pad one flat SELL stream to a multiple of
+    it (padding entries have vals == 0, so they contribute nothing)."""
+    n = vals.shape[0]
+    chunk = min(nnz_chunk, max(n, 1))
+    n_pad = _align_up(max(n, 1), chunk)
+    if n_pad != n:
+        pad = ((0, n_pad - n),)
+        vals, cols, rows = (jnp.pad(a, pad) for a in (vals, cols, rows))
+    return vals, cols, rows, chunk
+
+
+def fused_sell_spmv(dvals: jax.Array, dcols: jax.Array, drows: jax.Array,
+                    ovals: jax.Array, ocols: jax.Array, orows: jax.Array,
+                    x_local: jax.Array, x_ghost: jax.Array | None,
+                    rc_pad: int, nnz_chunk: int = 512,
+                    interpret: bool | None = None) -> jax.Array:
+    """One-pass two-phase sliced-ELL SpMV -> (rc_pad,) float32.
+
+    Flat slice-major SELL streams per block (see
+    ``repro.sparse.csr.sell_arrays_from_csr``); ``x_ghost=None`` runs the
+    diag-only kernel (halo-free plans).  Pads each stream to a chunk
+    multiple like ``fused_ell_spmv`` pads rows.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    dvals, dcols, drows, d_chunk = _pad_sell_stream(dvals, dcols, drows,
+                                                    nnz_chunk)
+    if x_ghost is None:
+        return sell_spmv_pallas(dvals, dcols, drows, x_local, rc_pad=rc_pad,
+                                nnz_chunk=d_chunk, interpret=interpret)
+    ovals, ocols, orows, o_chunk = _pad_sell_stream(ovals, ocols, orows,
+                                                    nnz_chunk)
+    return fused_sell_spmv_pallas(dvals, dcols, drows, ovals, ocols, orows,
+                                  x_local, x_ghost, rc_pad=rc_pad,
+                                  d_chunk=d_chunk, o_chunk=o_chunk,
+                                  interpret=interpret)
 
 
 def balanced_spmv(bcoo, x: jax.Array, nnz_chunk: int = 512,

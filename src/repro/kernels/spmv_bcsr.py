@@ -38,7 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["ell_spmv_pallas", "balanced_spmv_pallas", "fused_ell_spmv_pallas"]
+__all__ = ["ell_spmv_pallas", "balanced_spmv_pallas", "fused_ell_spmv_pallas",
+           "sell_spmv_pallas", "fused_sell_spmv_pallas"]
 
 
 # --------------------------------------------------------------------- #
@@ -130,6 +131,106 @@ def fused_ell_spmv_pallas(dvals: jax.Array, dcols: jax.Array,
         out_shape=jax.ShapeDtypeStruct((rows_pad,), jnp.float32),
         interpret=interpret,
     )(dcols, dvals, ocols, ovals, x_local, x_ghost)
+
+
+# --------------------------------------------------------------------- #
+# sliced-ELL (SELL-C-σ) kernels: slot-indexed entry streams, one-hot MXU
+# segmented sum (same scatter-add substitute as the balanced kernel)
+# --------------------------------------------------------------------- #
+def _sell_accumulate(vals, cols, rows, x, acc, *, rc_pad: int,
+                     nnz_chunk: int):
+    """Stream one flat SELL entry list in chunks, accumulating into the
+    (rc_pad,) output via a one-hot matmul (the MXU segmented sum — Mosaic
+    has no scatter-add).  Padding entries carry ``vals == 0``."""
+    slot_ids = jax.lax.broadcasted_iota(jnp.int32, (1, rc_pad), 1)
+    n_chunks = vals.shape[0] // nnz_chunk
+
+    def body(k, acc):
+        off = (k * nnz_chunk,)
+        v = jax.lax.dynamic_slice(vals, off, (nnz_chunk,)).astype(jnp.float32)
+        c = jax.lax.dynamic_slice(cols, off, (nnz_chunk,))
+        r = jax.lax.dynamic_slice(rows, off, (nnz_chunk,))
+        contrib = v * jnp.take(x, c, axis=0).astype(jnp.float32)
+        onehot = (r[:, None] == slot_ids).astype(jnp.float32)
+        return acc + jax.lax.dot_general(
+            contrib[None, :], onehot,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[0]
+
+    return jax.lax.fori_loop(0, n_chunks, body, acc)
+
+
+def _sell_kernel(vals_ref, cols_ref, rows_ref, x_ref, y_ref, *,
+                 rc_pad: int, nnz_chunk: int):
+    y_ref[...] = _sell_accumulate(
+        vals_ref[...], cols_ref[...], rows_ref[...], x_ref[...],
+        jnp.zeros((rc_pad,), jnp.float32),
+        rc_pad=rc_pad, nnz_chunk=nnz_chunk)
+
+
+def _fused_sell_kernel(dvals_ref, dcols_ref, drows_ref,
+                       ovals_ref, ocols_ref, orows_ref,
+                       xl_ref, xg_ref, y_ref, *,
+                       rc_pad: int, d_chunk: int, o_chunk: int):
+    """Both SpMV phases in one kernel: the off-diagonal stream accumulates
+    straight onto the diagonal partial sums in VMEM — the intermediate y
+    never round-trips through HBM (the SELL sibling of
+    ``_fused_ell_kernel``)."""
+    acc = _sell_accumulate(dvals_ref[...], dcols_ref[...], drows_ref[...],
+                           xl_ref[...], jnp.zeros((rc_pad,), jnp.float32),
+                           rc_pad=rc_pad, nnz_chunk=d_chunk)
+    y_ref[...] = _sell_accumulate(ovals_ref[...], ocols_ref[...],
+                                  orows_ref[...], xg_ref[...], acc,
+                                  rc_pad=rc_pad, nnz_chunk=o_chunk)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rc_pad", "nnz_chunk", "interpret"))
+def sell_spmv_pallas(vals: jax.Array, cols: jax.Array, rows: jax.Array,
+                     x: jax.Array, rc_pad: int, nnz_chunk: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """Diag-only SELL SpMV: flat (nnz_pad,) streams -> y (rc_pad,).
+
+    ``rows`` holds the output slot of each entry (slice-major SELL-C-σ
+    order, see ``repro.sparse.csr.sell_arrays_from_csr``); nnz_pad must be
+    a multiple of ``nnz_chunk`` (the wrapper in ops.py pads).
+    """
+    assert vals.shape[0] % nnz_chunk == 0, (vals.shape, nnz_chunk)
+    kernel = functools.partial(_sell_kernel, rc_pad=rc_pad,
+                               nnz_chunk=nnz_chunk)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((rc_pad,), jnp.float32),
+        interpret=interpret,
+    )(vals, cols, rows, x)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rc_pad", "d_chunk", "o_chunk",
+                                    "interpret"))
+def fused_sell_spmv_pallas(dvals: jax.Array, dcols: jax.Array,
+                           drows: jax.Array, ovals: jax.Array,
+                           ocols: jax.Array, orows: jax.Array,
+                           x_local: jax.Array, x_ghost: jax.Array,
+                           rc_pad: int, d_chunk: int = 512,
+                           o_chunk: int = 512,
+                           interpret: bool = True) -> jax.Array:
+    """One-pass two-phase SELL SpMV:
+    ``y = A_diag @ x_local + A_offd @ x_ghost`` in a single pallas_call.
+
+    Diag/offd are independent flat SELL streams (cols index x_local resp.
+    x_ghost); each stream's length must be a multiple of its chunk (the
+    wrapper in ops.py pads).
+    """
+    assert dvals.shape[0] % d_chunk == 0, (dvals.shape, d_chunk)
+    assert ovals.shape[0] % o_chunk == 0, (ovals.shape, o_chunk)
+    kernel = functools.partial(_fused_sell_kernel, rc_pad=rc_pad,
+                               d_chunk=d_chunk, o_chunk=o_chunk)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((rc_pad,), jnp.float32),
+        interpret=interpret,
+    )(dvals, dcols, drows, ovals, ocols, orows, x_local, x_ghost)
 
 
 # --------------------------------------------------------------------- #

@@ -1,4 +1,8 @@
-from repro.sparse.csr import CSRMatrix, ELLMatrix, BalancedCOO
+from repro.sparse.csr import (CSRMatrix, ELLMatrix, BalancedCOO,
+                              sell_arrays_from_csr)
+from repro.sparse.formats import (ShardFormat, ELLFormat, SELLFormat,
+                                  register_format, get_format,
+                                  available_formats)
 from repro.sparse.mesh_gen import (extruded_mesh_matrix,
                                    graded_extruded_mesh_matrix,
                                    random_spd_matrix)
@@ -7,6 +11,13 @@ __all__ = [
     "CSRMatrix",
     "ELLMatrix",
     "BalancedCOO",
+    "sell_arrays_from_csr",
+    "ShardFormat",
+    "ELLFormat",
+    "SELLFormat",
+    "register_format",
+    "get_format",
+    "available_formats",
     "extruded_mesh_matrix",
     "graded_extruded_mesh_matrix",
     "random_spd_matrix",

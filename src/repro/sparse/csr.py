@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["CSRMatrix", "ELLMatrix", "BalancedCOO"]
+__all__ = ["CSRMatrix", "ELLMatrix", "BalancedCOO", "sell_arrays_from_csr"]
 
 
 @dataclasses.dataclass
@@ -198,6 +198,48 @@ def ell_arrays_from_csr(m: CSRMatrix, width: int | None = None,
         cols[r, k] = m.indices
         vals[r, k] = m.data
     return cols, vals
+def sell_arrays_from_csr(m: CSRMatrix, slots: np.ndarray, slice_height: int
+                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side sliced-ELL (SELL-C) packing with a caller-provided row
+    permutation.
+
+    ``slots[r]`` is the storage/vector slot of row ``r`` — a permutation of
+    ``0..n_rows-1`` (σ-window sorting by row nnz is the caller's job, see
+    ``repro.sparse.formats.SELLFormat``).  Slot ``q`` belongs to slice
+    ``q // slice_height``; each slice is padded to ``slice_height`` rows at
+    its *own* maximum row width, so total storage tracks the true nnz instead
+    of ``n_rows x max_width`` (the ELL bound).
+
+    Returns flat slice-major ``(vals float64, cols int32, rows int32)`` where
+    ``rows`` holds the slot each entry accumulates into; padding entries have
+    ``vals == 0`` (and ``cols == rows == 0``), so they contribute nothing.
+    """
+    nr = m.n_rows
+    C = int(slice_height)
+    rn = m.row_nnz
+    n_slices = -(-max(nr, 0) // C) if nr else 0
+    w = np.zeros(max(n_slices, 1), dtype=np.int64)
+    slots = np.asarray(slots, dtype=np.int64)
+    if nr:
+        np.maximum.at(w, slots // C, rn)
+    starts = np.zeros(n_slices + 1, dtype=np.int64)
+    starts[1:] = np.cumsum(C * w[:n_slices])
+    size = int(starts[-1])
+    vals = np.zeros(size, dtype=np.float64)
+    cols = np.zeros(size, dtype=np.int32)
+    rows = np.zeros(size, dtype=np.int32)
+    if m.nnz:
+        r_of = m._row_of_nnz()
+        k = np.arange(m.nnz, dtype=np.int64) - np.repeat(m.indptr[:-1], rn)
+        q = slots[r_of]
+        s = q // C
+        pos = starts[s] + (q - s * C) * w[s] + k
+        vals[pos] = m.data
+        cols[pos] = m.indices
+        rows[pos] = q
+    return vals, cols, rows
+
+
 @partial(jax.tree_util.register_dataclass,
          data_fields=["cols", "vals"],
          meta_fields=["n_rows", "n_cols"])

@@ -20,6 +20,9 @@ def main() -> int:
                     help="node-axis row split (default: nnz for balanced "
                          "mode, rows otherwise)")
     ap.add_argument("--transport", default="a2a")
+    ap.add_argument("--format", default="ell",
+                    help="shard storage format (repro.sparse.formats): "
+                         "'ell' row-padded, 'sell' sliced ELL (SELL-C-σ)")
     ap.add_argument("--matrix", default="mesh", choices=["mesh", "graded"],
                     help="'graded' = skewed adapted-mesh analogue with "
                          "exponentially varying row nnz")
@@ -55,7 +58,8 @@ def main() -> int:
     t0 = time.time()
     plan, layout = build_spmv_plan(A, args.n_node, args.n_core,
                                    mode=args.mode,
-                                   node_partition=args.node_partition)
+                                   node_partition=args.node_partition,
+                                   format=args.format)
     t_plan = time.time() - t0
 
     rng = np.random.default_rng(0)
@@ -64,6 +68,7 @@ def main() -> int:
     stats = layout["stats"]
     out = {"n_node": args.n_node, "n_core": args.n_core, "mode": args.mode,
            "node_partition": layout["node_partition"],
+           "format": layout["format"],
            "transport": args.transport, "matrix": args.matrix,
            "n_rows": A.n_rows, "nnz": A.nnz,
            "t_gen_s": round(t_gen, 2), "t_plan_s": round(t_plan, 3),

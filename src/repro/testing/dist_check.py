@@ -20,6 +20,8 @@ def main() -> int:
                     choices=["rows", "nnz"])
     ap.add_argument("--backend", default="jnp")
     ap.add_argument("--transport", default="a2a")
+    ap.add_argument("--format", default="ell",
+                    help="shard storage format (repro.sparse.formats)")
     ap.add_argument("--matrix", default="mesh",
                     choices=["mesh", "graded", "random"])
     ap.add_argument("--n-surface", type=int, default=80)
@@ -57,11 +59,14 @@ def main() -> int:
 
     mesh = make_mesh_compat((args.n_node, args.n_core), ("node", "core"))
     plan, layout = build_spmv_plan(A, args.n_node, args.n_core, mode=args.mode,
-                                   node_partition=args.node_partition)
+                                   node_partition=args.node_partition,
+                                   format=args.format)
     nb = layout["node_bounds"]
-    print(f"NODE_SIZES {np.diff(nb).tolist()} "
+    print(f"FORMAT {layout['format']} "
+          f"NODE_SIZES {np.diff(nb).tolist()} "
           f"NODE_IMB {layout['stats']['node_imbalance']:.3f} "
-          f"CORE_IMB {layout['stats']['core_imbalance']:.3f}")
+          f"CORE_IMB {layout['stats']['core_imbalance']:.3f} "
+          f"WASTE {layout['stats']['padding_waste']:.3f}")
     spmv = make_spmv(plan, mesh, backend=args.backend,
                      transport=args.transport,
                      neighbor_offsets=layout["neighbor_offsets"])

@@ -106,6 +106,31 @@ def test_multidevice_ring_transport():
     assert r.returncode == 0, r.stdout + r.stderr
 
 
+def test_multidevice_ring_nonuniform_node_bounds():
+    """Ring transport crossed with non-uniform node_bounds: the ppermute
+    schedule must follow the two-level nnz node split on the graded
+    matrix, not an assumed equal-rows block size."""
+    r = run_subprocess(["-m", "repro.testing.dist_check",
+                        "--n-node", "4", "--n-core", "2",
+                        "--mode", "balanced", "--transport", "ring",
+                        "--node-partition", "nnz", "--matrix", "graded",
+                        "--n-surface", "60", "--layers", "8"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_multidevice_ring_pallas_backend():
+    """Ring transport crossed with the Pallas shard kernel — previously
+    ring was only exercised with the jnp backend on uniform splits."""
+    r = run_subprocess(["-m", "repro.testing.dist_check",
+                        "--n-node", "4", "--n-core", "2",
+                        "--mode", "balanced", "--transport", "ring",
+                        "--backend", "pallas",
+                        "--n-surface", "40", "--layers", "4"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
 def test_multidevice_pallas_backend():
     r = run_subprocess(["-m", "repro.testing.dist_check",
                         "--n-node", "2", "--n-core", "2",
