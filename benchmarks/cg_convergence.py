@@ -1,23 +1,33 @@
-"""Paper Sec. 3 benchmark protocol: CG + Jacobi on pressure matrices,
+"""Paper Sec. 3 benchmark protocol: Krylov solves on pressure matrices,
 iteration cap 10,000 — convergence behaviour and per-iteration cost.
 
-Each mode is measured twice: the unfused baseline (``cg_solve`` re-entering
-the sharded SpMV every iteration) and the fully-sharded fused solver (the
-whole ``while_loop`` inside one shard_map; ``repro.core.sharded_cg``).  The
-derived column carries the compiled-HLO collective-op census so the
-"fewer collectives per iteration" claim is recorded alongside the timing.
+Two sweeps:
+
+  * the historical fused-vs-unfused comparison (``cg_convergence/<mode>``):
+    the unfused baseline re-enters the sharded SpMV every iteration, the
+    fused row is the registry ``cg`` solver — the per-iteration
+    synchronisation gap between them is what PR 1 removed;
+  * the solver registry (``solver_census/<solver>``): every registered
+    solver through ``repro.solvers.make_solver``, reporting
+    iterations-to-tol and the *exact* per-iteration collective census
+    (ops inside the compiled while-loop body — ``collectives_per_iter``),
+    i.e. the synchronisation cost the Krylov layer itself adds per
+    iteration: cg 2 all-reduces, pipelined_cg 1 (overlapped), chebyshev 0.
 """
 from __future__ import annotations
 
-from common import emit, fmt_collectives, run_bench_subprocess
+from common import (emit, fmt_collectives, fmt_collectives_per_iter,
+                    run_bench_subprocess)
+
+BASE = ["--n-node", "4", "--n-core", "2", "--n-surface", "1500",
+        "--layers", "12"]
 
 
 def run():
     rows = []
     for mode in ("vector", "task", "balanced"):
         for fused in (False, True):
-            argv = ["--n-node", "4", "--n-core", "2", "--mode", mode,
-                    "--n-surface", "1500", "--layers", "12", "--cg",
+            argv = [*BASE, "--mode", mode, "--cg",
                     "--tol", "1e-8", "--iters", "10000"]
             if fused:
                 argv.append("--fused")
@@ -27,6 +37,16 @@ def run():
                          r["us_per_iter"],
                          f"iters={r['cg_iters']};rel={r['cg_rel']:.2e};"
                          + fmt_collectives(r)))
+
+    # registry solvers: iterations-to-tol + exact per-iteration census
+    for solver in ("cg", "pipelined_cg", "chebyshev"):
+        r = run_bench_subprocess(
+            "repro.testing.bench_spmv",
+            [*BASE, "--mode", "balanced", "--solver", solver,
+             "--precond", "jacobi", "--tol", "1e-5", "--iters", "10000"])
+        rows.append((f"solver_census/{solver}/4x2", r["us_per_iter"],
+                     f"iters={r['cg_iters']};rel={r['cg_rel']:.2e};"
+                     + fmt_collectives_per_iter(r)))
     return rows
 
 

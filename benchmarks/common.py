@@ -37,6 +37,14 @@ def fmt_collectives(r: dict) -> str:
             f"a2a={c.get('all-to-all', -1)}")
 
 
+def fmt_collectives_per_iter(r: dict) -> str:
+    """Format the exact while-body census (``collectives_per_iter``)."""
+    c = r.get("collectives_per_iter", {})
+    return (f"ar_per_iter={c.get('all-reduce', -1)};"
+            f"ag_per_iter={c.get('all-gather', -1)};"
+            f"a2a_per_iter={c.get('all-to-all', -1)}")
+
+
 def emit(rows):
     """Print benchmark rows as the required ``name,us_per_call,derived``."""
     for name, us, derived in rows:

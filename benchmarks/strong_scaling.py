@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from common import emit, fmt_collectives, run_bench_subprocess
+from common import (emit, fmt_collectives, fmt_collectives_per_iter,
+                    run_bench_subprocess)
 
 PEAK_FLOPS_F32 = 98.5e12 / 2   # v5e fp32 ~ half bf16 peak; SpMV is VPU-bound anyway
 HBM_BW = 819e9
@@ -94,6 +95,38 @@ def run(iters: int = 30):
                          f"node_imb={r['node_imbalance']:.3f};"
                          f"core_imb={r['core_imbalance']:.3f};"
                          f"gflops={r['gflops']:.3f}"))
+
+    # solver x mode strong-scaling sweep (the Krylov-layer lever): once
+    # SpMV is overlapped, the remaining per-iteration cost is the solver's
+    # own reductions — cg pays 2 blocking all-reduces per iteration,
+    # pipelined_cg 1 (overlapped with the SpMV), chebyshev 0.  The
+    # ar_per_iter column is the exact while-body census from compiled HLO.
+    for solver in ("cg", "pipelined_cg", "chebyshev"):
+        for mode in ("task", "balanced"):
+            r = run_bench_subprocess(
+                "repro.testing.bench_spmv",
+                ["--n-node", "4", "--n-core", "2", "--mode", mode,
+                 "--format", "sell", "--solver", solver,
+                 "--precond", "jacobi", "--n-surface", "2000",
+                 "--layers", "32", "--tol", "1e-5",
+                 "--iters", str(max(iters, 50))])
+            rows.append((f"fig_solvers/{solver}/{mode}/8dev",
+                         r["us_per_iter"],
+                         f"iters={r['cg_iters']};"
+                         + fmt_collectives_per_iter(r)))
+
+    # batched multi-RHS serving point: one fused plan solving 8 tenants,
+    # amortising every collective over the batch
+    r = run_bench_subprocess(
+        "repro.testing.bench_spmv",
+        ["--n-node", "4", "--n-core", "2", "--mode", "balanced",
+         "--format", "sell", "--solver", "cg", "--precond", "jacobi",
+         "--nrhs", "8", "--n-surface", "2000", "--layers", "32",
+         "--tol", "1e-5", "--iters", str(max(iters, 50))])
+    rows.append(("fig_solvers/cg_nrhs8/balanced/8dev",
+                 r["us_per_iter"] / r["nrhs"],
+                 f"iters={r['cg_iters']};nrhs={r['nrhs']};"
+                 f"us_per_iter_total={r['us_per_iter']:.1f}"))
 
     # modelled pod-scale curves, paper-size matrices
     for label, n_rows, nnz in [("fig3_model_13.5M", 13_491_933, 371_102_769),

@@ -2,10 +2,14 @@
 
 Spawns itself with 8 host devices (4 "MPI ranks" x 2 "threads" — the
 paper's NUMA-aligned hybrid configuration scaled to this container), builds
-the extruded-mesh pressure matrix, and runs the full CG solve with all three
-SpMV algorithm modes — both the unfused baseline and the fully-sharded
-fused solver (whole while_loop inside one shard_map; see DESIGN.md) —
-reporting per-iteration times.
+the extruded-mesh pressure matrix, and runs the full solve two ways:
+
+  * the three SpMV algorithm modes with the unfused baseline vs the fused
+    registry ``cg`` (the PR 1 comparison), and
+  * the solver registry (``repro.solvers``): ``cg`` / ``pipelined_cg`` /
+    ``chebyshev`` selected **by name**, each with the ``jacobi``
+    preconditioner, reporting per-iteration time and the exact
+    per-iteration all-reduce census from the compiled while body.
 
     PYTHONPATH=src python examples/cg_solve.py
 """
@@ -23,11 +27,13 @@ if "XLA_FLAGS" not in os.environ:
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import build_spmv_plan, from_dist, make_cg, to_dist
+from repro.solvers import make_solver
 from repro.sparse import extruded_mesh_matrix
-from repro.util import make_mesh_compat
+from repro.util import make_mesh_compat, while_body_collective_counts
 
 N_NODE, N_CORE = 4, 2
 print(f"devices: {len(jax.devices())} -> hybrid mesh "
@@ -58,5 +64,32 @@ for mode in ("vector", "task", "balanced"):
         print(f"{mode:9s} {tag:8s}: {int(it):4d} iters, "
               f"{results[f'{mode}/{tag}']['us_per_iter']:8.1f} us/iter, "
               f"true rel {true_rel:.2e}")
+
+# --- the Krylov registry: solvers selected by name ---------------------- #
+plan, layout = build_spmv_plan(A, N_NODE, N_CORE, mode="balanced",
+                               format="sell")
+bd = to_dist(b, layout, plan)
+for name in ("cg", "pipelined_cg", "chebyshev"):
+    solve = make_solver(plan, mesh, solver=name, precond="jacobi",
+                        A=A, layout=layout,
+                        neighbor_offsets=layout["neighbor_offsets"])
+    xd, it, rel = solve(bd, tol=1e-5, maxiter=10_000)   # compile + solve
+    jax.block_until_ready(xd)
+    t0 = time.perf_counter()
+    xd, it, rel = solve(bd, tol=1e-5, maxiter=10_000)
+    jax.block_until_ready(xd)
+    dt = time.perf_counter() - t0
+    census = while_body_collective_counts(
+        solve.jitted, bd, jnp.asarray(1e-5, jnp.float32),
+        jnp.asarray(10_000, jnp.int32))
+    xs = from_dist(xd, layout, plan)
+    true_rel = float(np.linalg.norm(A.matvec(xs) - b) / np.linalg.norm(b))
+    results[f"solver/{name}"] = dict(
+        iters=int(it), us_per_iter=dt / max(int(it), 1) * 1e6,
+        true_rel=true_rel, allreduce_per_iter=census["all-reduce"])
+    print(f"{name:13s} jacobi  : {int(it):4d} iters, "
+          f"{results[f'solver/{name}']['us_per_iter']:8.1f} us/iter, "
+          f"{census['all-reduce']} all-reduce/iter, "
+          f"true rel {true_rel:.2e}")
 
 print(json.dumps(results))

@@ -14,6 +14,8 @@ from repro.core.spmv import (SpMVPlan, build_spmv_plan, make_spmv,
                              to_dist, from_dist, MODES)
 from repro.core.cg import cg_solve, jacobi_inverse, make_cg
 from repro.core.sharded_cg import make_fused_cg
+from repro.solvers import (available_preconds, available_solvers,
+                           from_dist_batch, make_solver, to_dist_batch)
 
 __all__ = [
     "partition_equal_rows", "partition_greedy_nnz", "diffuse_nnz",
@@ -24,4 +26,6 @@ __all__ = [
     "plan_fields", "plan_shard_arrays",
     "to_dist", "from_dist", "MODES",
     "cg_solve", "jacobi_inverse", "make_cg", "make_fused_cg",
+    "make_solver", "available_solvers", "available_preconds",
+    "to_dist_batch", "from_dist_batch",
 ]

@@ -7,6 +7,13 @@ and reductions run as plain jnp ops on the distributed "CG layout"
 (n_node, n_core, rc_pad) — XLA inserts the cross-shard psums for the dot
 products automatically, which is exactly PETSc's ``VecDot``/``VecAXPY``
 split between local work and a tiny ``MPI_Allreduce``.
+
+This module keeps the *unfused* baseline solver (``cg_solve`` re-enters the
+sharded SpMV every iteration — the per-iteration synchronisation cost the
+fused solvers remove) plus the historical ``make_cg`` entry point.  The
+fused, registry-based solvers live in ``repro.solvers``; ``jacobi_inverse``
+moved to ``repro.solvers.precond`` and is re-exported here for
+compatibility.
 """
 from __future__ import annotations
 
@@ -17,25 +24,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.spmv import SpMVPlan, make_spmv
+from repro.solvers.base import local_dot
+# compat re-export: moved into the solver subsystem
+from repro.solvers.precond import jacobi_inverse
 
 __all__ = ["cg_solve", "make_cg", "jacobi_inverse"]
 
 
-def jacobi_inverse(diag_a: jax.Array, mask: jax.Array) -> jax.Array:
-    """Safe 1/diag(A) on valid rows, 0 on padding.
-
-    A zero diagonal entry under the mask would make ``jnp.where(mask > 0,
-    1/diag, 0)`` evaluate ``1/0 = inf`` on the taken branch (``where`` does
-    not short-circuit), silently NaN-ing the whole solve.
-    ``build_spmv_plan`` rejects such matrices up front; this guard keeps the
-    preconditioner finite even for hand-built plans.
-    """
-    valid = (mask > 0) & (diag_a != 0)
-    return jnp.where(valid, 1.0 / jnp.where(valid, diag_a, 1.0), 0.0)
-
-
 def _dot(a: jax.Array, b: jax.Array) -> jax.Array:
-    return jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32))
+    """Full-array f32 dot on CG-layout vectors (any shape) -> scalar."""
+    return local_dot(a.reshape(-1), b.reshape(-1))
 
 
 @partial(jax.jit, static_argnames=("spmv", "maxiter_static"))
@@ -88,15 +86,18 @@ def make_cg(plan: SpMVPlan, mesh, axis_names=("node", "core"),
     """Bundle a plan + mesh into ``solve(b, tol=..., maxiter=...)``.
 
     ``fused=True`` returns the fully-sharded solver instead (the whole CG
-    ``while_loop`` inside one shard_map region; see
-    ``repro.core.sharded_cg.make_fused_cg``) — same return contract.
+    ``while_loop`` inside one shard_map region — the registry ``cg`` solver
+    with the ``jacobi`` preconditioner; see ``repro.solvers.make_solver``
+    for other solvers, preconditioners and batched RHS) — same return
+    contract.
     """
     if fused:
-        from repro.core.sharded_cg import make_fused_cg
-        return make_fused_cg(plan, mesh, axis_names=axis_names,
-                             backend=backend, transport=transport,
-                             neighbor_offsets=neighbor_offsets,
-                             maxiter_static=maxiter_static)
+        from repro.solvers.base import make_solver
+        return make_solver(plan, mesh, solver="cg", precond="jacobi",
+                           axis_names=axis_names, backend=backend,
+                           transport=transport,
+                           neighbor_offsets=neighbor_offsets,
+                           maxiter_static=maxiter_static)
     spmv = make_spmv(plan, mesh, axis_names=axis_names, backend=backend,
                      transport=transport, neighbor_offsets=neighbor_offsets)
     m_inv = jacobi_inverse(plan.diag_a, plan.mask)

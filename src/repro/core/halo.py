@@ -15,7 +15,7 @@ that assembles the node-local vector slice, which is what lets the XLA
 scheduler overlap the exchange with the diagonal multiply (the paper's
 task-mode comm/compute overlap).  On the receive side every core scatters
 only its own ``(n_node, hs)`` slice into the ghost buffer; the per-core
-partial buffers are combined with one intra-node ``psum`` instead of
+partial buffers are combined with one intra-node gather + add instead of
 ``all_gather``-ing a full per-node receive table.
 """
 from __future__ import annotations

@@ -1,41 +1,20 @@
-"""Fully-sharded preconditioned CG: the whole solve inside one shard_map.
+"""Compat shim: the fully-sharded fused CG moved to ``repro.solvers``.
 
-The baseline ``repro.core.cg.cg_solve`` re-enters a jitted ``shard_map`` once
-per iteration for the SpMV and performs the vector updates / dot products on
-globally-laid-out arrays outside the sharded region.  Every iteration
-therefore pays a fresh intra-node ``all_gather``, a full-table ghost
-assembly, and XLA gets no chance to fuse the AXPYs and reductions with the
-SpMV phases — exactly the per-iteration synchronisation overhead the paper
-identifies as the strong-scaling limiter (and its follow-up, arXiv:1307.4567,
-measures as dominant once SpMV itself is optimised).
-
-Here the entire ``while_loop`` lives *inside* a single ``shard_map`` region:
-
-  * every CG vector (x, r, z, p, Ap) stays in per-(node, core) shard layout
-    ``(rc_pad,)`` for the whole solve — no resharding ever;
-  * dot products are local partial sums + one tiny ``jax.lax.psum`` over the
-    full mesh (PETSc's ``VecDot`` local-work / MPI_Allreduce split).  The two
-    reductions after the SpMV (r.z and r.r) share a single stacked psum;
-  * the owner-split halo exchange of ``p`` launches straight from the shard
-    and overlaps the diagonal multiply within the fused loop body in
-    task/balanced mode (see ``repro.core.spmv.make_shard_body``).
-
-Collectives per iteration: 1 ``all_to_all`` (halo) + 1 reduced-size core
-``all_gather`` ((rc_pad,) per core) + 1 core ``psum`` (ghost assembly) +
-2 scalar ``psum``s (p.Ap, and the stacked [r.z, r.r]) — versus the unfused
-baseline's 2 ``all_gather``s (one of them the full (n_core, n_node, hc) recv
-table), 1 ``all_to_all`` and 3 separate all-reduces.
+PR 1 put the whole preconditioned-CG ``while_loop`` inside one shard_map
+region; PR 4 generalised that design into the registry-based Krylov
+subsystem (``repro.solvers``: ``cg`` / ``pipelined_cg`` / ``chebyshev``
+solvers × ``none`` / ``jacobi`` / ``block_jacobi`` preconditioners, batched
+multi-RHS).  ``make_fused_cg`` is now an alias for the registry ``cg``
+solver with the ``jacobi`` preconditioner — bit-identical to the historical
+implementation — kept so existing imports and the ``make_cg(fused=True)``
+path keep working.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.core.cg import jacobi_inverse
-from repro.core.spmv import (SpMVPlan, make_shard_body, plan_fields,
-                             plan_shard_arrays)
-from repro.util import shard_map_compat
+from repro.core.spmv import SpMVPlan
+from repro.solvers.base import make_solver
 
 __all__ = ["make_fused_cg"]
 
@@ -51,76 +30,12 @@ def make_fused_cg(plan: SpMVPlan, mesh: jax.sharding.Mesh,
     rel_residual) with all vectors in CG layout — but the entire solve runs
     as one sharded program.  ``solve.jitted`` exposes the underlying jitted
     function (signature ``(b, tol, maxiter)``) for HLO inspection.
+
+    Equivalent to ``repro.solvers.make_solver(plan, mesh, solver="cg",
+    precond="jacobi", ...)``.
     """
-    node_ax, core_ax = axis_names
-    axes = (node_ax, core_ax)
-    fields = plan_fields(plan)
-    body = make_shard_body(plan, axis_names=axis_names, backend=backend,
-                           transport=transport,
-                           neighbor_offsets=neighbor_offsets)
-    m_inv_full = jacobi_inverse(plan.diag_a, plan.mask)
-
-    def shard_solve(*args):
-        *consts, m_inv, mask, b, tol, maxiter = args
-        F = {k: v[0, 0] for k, v in zip(fields, consts)}
-        m_inv, mask, b = m_inv[0, 0], mask[0, 0], b[0, 0]   # (rc_pad,)
-
-        def pdot(a, c):
-            """VecDot: local partial + one tiny allreduce."""
-            return jax.lax.psum(
-                jnp.sum(a.astype(jnp.float32) * c.astype(jnp.float32)), axes)
-
-        def pdot2(a1, c1, a2, c2):
-            """Two VecDots fused into a single (2,) allreduce."""
-            part = jnp.stack([
-                jnp.sum(a1.astype(jnp.float32) * c1.astype(jnp.float32)),
-                jnp.sum(a2.astype(jnp.float32) * c2.astype(jnp.float32))])
-            return jax.lax.psum(part, axes)
-
-        b = b * mask
-        z0 = m_inv * b
-        s0 = pdot2(b, b, b, z0)                 # [b.b, r0.z0] in one psum
-        bnorm = jnp.sqrt(s0[0])
-        tol2 = (tol * jnp.maximum(bnorm, 1e-30)) ** 2
-
-        x0 = jnp.zeros_like(b)
-
-        def cond(state):
-            k, _, _, _, _, rr = state
-            return (k < jnp.minimum(maxiter, maxiter_static)) & (rr > tol2)
-
-        def loop_body(state):
-            k, x, r, p, rz, _ = state
-            ap = body(F, p)                     # a2a + core gather + core psum
-            alpha = rz / pdot(p, ap)            # psum 1
-            x = x + alpha * p
-            r = r - alpha * ap
-            z = m_inv * r
-            s = pdot2(r, z, r, r)               # psum 2: [r.z, r.r]
-            beta = s[0] / rz
-            p = z + beta * p
-            return (k + 1, x, r, p, s[0], s[1])
-
-        state = (jnp.asarray(0, jnp.int32), x0, b, z0, s0[1], s0[0])
-        k, x, r, p, rz, rr = jax.lax.while_loop(cond, loop_body, state)
-        rel = jnp.sqrt(rr) / jnp.maximum(bnorm, 1e-30)
-        return x[None, None], k, rel            # k/rel replicated on all shards
-
-    spec = P(node_ax, core_ax)
-    n_consts = len(fields) + 2                  # + m_inv, mask
-    fn = shard_map_compat(
-        shard_solve, mesh=mesh,
-        in_specs=(spec,) * n_consts + (spec, P(), P()),
-        out_specs=(spec, P(), P()))
-
-    @jax.jit
-    def fused_solve(b: jax.Array, tol: jax.Array, maxiter: jax.Array):
-        return fn(*plan_shard_arrays(plan), m_inv_full, plan.mask,
-                  b, tol, maxiter)
-
-    def solve(b: jax.Array, tol: float = 1e-8, maxiter: int = 10_000):
-        return fused_solve(b, jnp.asarray(tol, jnp.float32),
-                           jnp.asarray(maxiter, jnp.int32))
-
-    solve.jitted = fused_solve
-    return solve
+    return make_solver(plan, mesh, solver="cg", precond="jacobi",
+                       axis_names=axis_names, backend=backend,
+                       transport=transport,
+                       neighbor_offsets=neighbor_offsets,
+                       maxiter_static=maxiter_static)

@@ -36,7 +36,9 @@ The halo exchange is **owner-split** (see ``repro.core.halo``): every core
 sends the boundary rows its own bin holds, indexed straight into its
 ``(rc_pad,)`` vector shard, so the ``all_to_all`` launches without waiting
 for the intra-node ``all_gather``; on receive each core scatters only its own
-slice and one intra-node ``psum`` combines the partial ghost buffers.
+slice and an intra-node gather + local add combines the partial ghost
+buffers (each slot has exactly one writer, so no all-reduce is needed — and
+none is emitted, keeping the Krylov layer's collective census exact).
 
 Shard-local matrix **storage is pluggable** (``repro.sparse.formats``): the
 plan carries a format name plus the format-owned device arrays
@@ -353,14 +355,18 @@ def make_shard_body(plan: SpMVPlan,
       1 ``all_to_all``  (node axis, owner-split halo — launches straight from
                          ``x_mine``, so it overlaps the intra-node gather and
                          the diagonal multiply in task/balanced mode),
-      1 ``all_gather``  (core axis, (rc_pad,) per core — assembles the
-                         node-local slice for the diagonal multiply),
-      1 ``psum``        (core axis, (g_pad+1,) — combines the per-core
-                         partial ghost buffers; each core scatters only its
-                         own (n_node, hs) recv slice).
+      2 ``all_gather``  (core axis: the (rc_pad,) bins that assemble the
+                         node-local slice for the diagonal multiply, and the
+                         (g_pad+1,) per-core partial ghost buffers, combined
+                         by a local add — each core scatters only its own
+                         (n_node, hs) recv slice, and each ghost slot has
+                         exactly one writer, so the add is exact),
+      0 ``all-reduce``  — deliberately: any all-reduce in a compiled solver
+                         loop is then attributable to the solver's own
+                         reductions (``repro.solvers``' collective census).
 
     Plans with **no halo traffic** (``plan.hs == 0`` — single-node or
-    block-diagonal matrices) skip the exchange and the ghost-assembly psum
+    block-diagonal matrices) skip the exchange and the ghost assembly
     entirely and run the diagonal phase alone.
 
     ``transport='ring'`` replaces the all_to_all with one ``ppermute`` per
@@ -407,11 +413,16 @@ def make_shard_body(plan: SpMVPlan,
                     got = jax.lax.ppermute(x_mine[send], node_ax, perm)
                     src_row = (me - d) % n_node
                     part = part.at[jnp.take(recv_own, src_row, axis=0)].set(got)
-            # every ghost slot is written by exactly one core; slot g_pad
-            # dumps the padding, so summing the per-core partial buffers
-            # assembles the full ghost vector without gathering the whole
-            # recv table
-            x_ghost = jax.lax.psum(part, core_ax)
+            # every ghost slot is written by exactly one core (slot g_pad
+            # dumps the padding), so assembling the full ghost vector is a
+            # gather + local add of the per-core partial buffers.  The add
+            # only ever combines one real value with zeros, so the result is
+            # bit-identical to an all-reduce — but the compiled HLO carries
+            # no all-reduce, which keeps the solver-level collective census
+            # exact: every all-reduce in a compiled Krylov loop body belongs
+            # to the solver's own reductions (repro.solvers).
+            parts = jax.lax.all_gather(part, core_ax, axis=0)
+            x_ghost = jnp.sum(parts, axis=0)
         else:
             x_ghost = None      # halo-free plan: no exchange, no ghost phase
 

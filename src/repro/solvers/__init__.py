@@ -1,0 +1,30 @@
+"""Pluggable Krylov solver & preconditioner subsystem.
+
+Mirrors the ``ShardFormat`` registry (``repro.sparse.formats``) one layer
+up: solvers (``cg``, ``pipelined_cg``, ``chebyshev``) and preconditioners
+(``none``, ``jacobi``, ``block_jacobi``) are named plugins composed by
+``make_solver`` into a single fused sharded program, with optional batched
+multi-RHS solves.  See DESIGN.md §9.
+"""
+from repro.solvers.base import (Solver, SolverCtx, available_solvers,
+                                from_dist_batch, get_solver, local_dot,
+                                make_solver, pdot, pdot_stack,
+                                register_solver, to_dist_batch)
+from repro.solvers.krylov import (CGSolver, ChebyshevSolver,
+                                  PipelinedCGSolver, chebyshev_iters_for_tol,
+                                  estimate_eig_bounds)
+from repro.solvers.precond import (BlockJacobiPrecond, JacobiPrecond,
+                                   NonePrecond, Preconditioner,
+                                   available_preconds, get_precond,
+                                   jacobi_inverse, register_precond)
+
+__all__ = [
+    "Solver", "SolverCtx", "register_solver", "get_solver",
+    "available_solvers", "make_solver", "local_dot", "pdot", "pdot_stack",
+    "to_dist_batch", "from_dist_batch",
+    "CGSolver", "PipelinedCGSolver", "ChebyshevSolver",
+    "estimate_eig_bounds", "chebyshev_iters_for_tol",
+    "Preconditioner", "NonePrecond", "JacobiPrecond", "BlockJacobiPrecond",
+    "register_precond", "get_precond", "available_preconds",
+    "jacobi_inverse",
+]

@@ -1,0 +1,274 @@
+"""Krylov solver registry + the fused sharded-solve factory.
+
+The Krylov layer gets the same treatment the shard-storage layer got in
+``repro.sparse.formats``: every solver is a named plugin supplying the
+per-shard iteration loop, and everything around it — the two-phase SpMV
+shard body, the preconditioner application, the shard_map plumbing, the
+batched-RHS vmapping — is shared machinery owned by this module.
+
+A solver sees the world through a :class:`SolverCtx`:
+
+  * ``ctx.spmv``    — the fused two-phase SpMV over this core's shard,
+                      already vmapped over the RHS axis: ``(nrhs, rc_pad)
+                      -> (nrhs, rc_pad)``.  Each call costs 1 ``all_to_all``
+                      + 2 core ``all_gather``s and **zero all-reduces**
+                      (the ghost assembly is gather+add, see
+                      ``repro.core.spmv.make_shard_body``), so any
+                      all-reduce in the compiled loop body belongs to the
+                      solver's own reductions — the collective census is
+                      exact.
+  * ``ctx.precond`` — shard-local preconditioner application ``z = M^-1 r``
+                      (``repro.solvers.precond``), communication-free.
+  * ``pdot`` / ``pdot_stack`` — the VecDot split: per-RHS local partial
+                      sums + one tiny ``psum`` over the whole mesh.
+                      ``pdot_stack`` fuses k dots into a single ``(k, nrhs)``
+                      all-reduce — the batched analogue of PR 1's stacked
+                      scalar psum.
+
+Vectors inside a solver loop are always ``(nrhs, rc_pad)``; the unbatched
+user-facing path is the same code with ``nrhs == 1`` and squeezed outputs.
+Per-RHS convergence is handled by *freezing*: a converged RHS keeps its
+state bit-for-bit while the rest of the batch iterates, so a batched solve
+is exactly equal to running its columns one at a time.
+
+``make_solver`` is the user entry point (mirroring ``make_spmv`` /
+``make_cg``)::
+
+    solve = make_solver(plan, mesh, solver="pipelined_cg",
+                        precond="block_jacobi", A=A, layout=layout)
+    x, iters, rel = solve(bd, tol=1e-6, maxiter=10_000)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.solvers.precond import Preconditioner, get_precond
+from repro.util import shard_map_compat
+
+# NOTE: repro.core is imported lazily inside the functions below —
+# repro.core.cg itself imports this module (for local_dot/jacobi_inverse
+# re-exports), so a top-level import would be circular.
+
+__all__ = ["local_dot", "pdot", "pdot_stack", "SolverCtx", "Solver",
+           "register_solver", "get_solver", "available_solvers",
+           "make_solver", "to_dist_batch", "from_dist_batch"]
+
+
+# --------------------------------------------------------------------- #
+# the VecDot pattern, deduped (was cg.py::_dot, sharded_cg.py::pdot/pdot2)
+# --------------------------------------------------------------------- #
+def local_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Local f32 dot over the trailing axis (no communication).
+
+    1-D inputs give a scalar; ``(nrhs, m)`` inputs give per-RHS ``(nrhs,)``
+    partials.  This is PETSc's ``VecDot`` local phase; auto-sharded callers
+    (the unfused ``cg_solve``) let XLA insert the allreduce, sharded callers
+    use :func:`pdot` / :func:`pdot_stack`.
+    """
+    return jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32), axis=-1)
+
+
+def pdot(axes, a: jax.Array, b: jax.Array) -> jax.Array:
+    """VecDot: local partial + one tiny allreduce over ``axes``."""
+    return jax.lax.psum(local_dot(a, b), axes)
+
+
+def pdot_stack(axes, *pairs) -> jax.Array:
+    """k VecDots fused into a single stacked ``(k, nrhs)`` allreduce."""
+    return jax.lax.psum(jnp.stack([local_dot(a, b) for a, b in pairs]), axes)
+
+
+# --------------------------------------------------------------------- #
+# solver protocol
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class SolverCtx:
+    """Everything a solver's shard loop may touch, pre-bound by make_solver.
+
+    ``spmv``/``precond`` operate on ``(nrhs, rc_pad)`` blocks of vectors;
+    ``mask`` is this core's ``(rc_pad,)`` valid-row mask; ``axes`` the psum
+    axis names; ``options`` the solver-specific static options resolved by
+    ``Solver.prepare`` (e.g. Chebyshev eigenvalue bounds).
+    """
+
+    spmv: Callable[[jax.Array], jax.Array]
+    precond: Callable[[jax.Array], jax.Array]
+    mask: jax.Array
+    axes: tuple[str, ...]
+    maxiter_static: int
+    options: dict
+
+
+class Solver:
+    """Interface of a registered Krylov solver.
+
+    Subclasses set ``name`` and implement ``shard_loop``; ``prepare`` runs
+    once on the host at build time and may derive static options from the
+    matrix (Chebyshev uses it to estimate eigenvalue bounds).
+    """
+
+    name: str = ""
+
+    def prepare(self, plan, precond: Preconditioner,
+                pdata: dict, A=None, layout=None,
+                options: dict | None = None) -> dict:
+        """Resolve static solve options on the host.  Default: passthrough."""
+        return dict(options or {})
+
+    def shard_loop(self, ctx: SolverCtx, b: jax.Array, tol: jax.Array,
+                   maxiter: jax.Array):
+        """Run the iteration on ``(nrhs, rc_pad)`` shards.
+
+        Returns ``(x, iters, rel)`` with ``x`` shaped like ``b`` and
+        ``iters``/``rel`` per-RHS ``(nrhs,)`` (replicated across shards).
+        """
+        raise NotImplementedError
+
+
+_SOLVERS: dict[str, Solver] = {}
+
+
+def register_solver(solver: Solver, overwrite: bool = False) -> Solver:
+    """Register ``solver`` under ``solver.name`` for lookup by name."""
+    if not solver.name:
+        raise ValueError("a Solver needs a non-empty name")
+    if solver.name in _SOLVERS and not overwrite:
+        raise ValueError(f"solver {solver.name!r} is already registered "
+                         "(pass overwrite=True to replace it)")
+    _SOLVERS[solver.name] = solver
+    return solver
+
+
+def get_solver(solver: str | Solver) -> Solver:
+    """Resolve a solver name (or pass through an instance)."""
+    if isinstance(solver, Solver):
+        return solver
+    try:
+        return _SOLVERS[solver]
+    except KeyError:
+        raise ValueError(f"unknown solver {solver!r}; available: "
+                         f"{available_solvers()}") from None
+
+
+def available_solvers() -> tuple[str, ...]:
+    return tuple(sorted(_SOLVERS))
+
+
+# --------------------------------------------------------------------- #
+# batched vector layout helpers
+# --------------------------------------------------------------------- #
+def to_dist_batch(B, layout: dict, plan, dtype=None) -> jax.Array:
+    """Stack ``(nrhs, n)`` global RHS columns into batched CG layout
+    ``(n_node, n_core, nrhs, rc_pad)`` — sharded on the leading mesh axes,
+    the RHS axis purely local."""
+    from repro.core.spmv import to_dist
+    return jnp.stack([to_dist(b, layout, plan, dtype=dtype) for b in B],
+                     axis=2)
+
+
+def from_dist_batch(xd: jax.Array, layout: dict, plan):
+    """Inverse of :func:`to_dist_batch` -> ``(nrhs, n)`` numpy array."""
+    import numpy as np
+
+    from repro.core.spmv import from_dist
+    xd = np.asarray(xd)
+    return np.stack([from_dist(xd[:, :, j], layout, plan)
+                     for j in range(xd.shape[2])])
+
+
+# --------------------------------------------------------------------- #
+# the factory
+# --------------------------------------------------------------------- #
+def make_solver(plan, mesh: jax.sharding.Mesh, *,
+                solver: str | Solver = "cg",
+                precond: str | Preconditioner = "jacobi",
+                axis_names: tuple[str, str] = ("node", "core"),
+                backend: str = "jnp", transport: str = "a2a",
+                neighbor_offsets: list[int] | None = None,
+                maxiter_static: int = 10_000,
+                nrhs: int | None = None,
+                A=None, layout: dict | None = None,
+                options: dict | None = None):
+    """Bundle plan + mesh + a registered solver/preconditioner pair into
+    ``solve(b, tol=..., maxiter=...)`` running as one sharded program.
+
+    ``nrhs=None`` (default): ``b`` is a single RHS in CG layout
+    ``(n_node, n_core, rc_pad)`` and ``iters``/``rel`` are scalars — the
+    ``make_fused_cg`` contract.  ``nrhs=k``: ``b`` is batched CG layout
+    ``(n_node, n_core, k, rc_pad)`` (see :func:`to_dist_batch`) and
+    ``iters``/``rel`` are per-RHS ``(k,)``; the whole batch is solved by
+    one fused loop whose reductions are ``(·, k)``-stacked — one plan, one
+    compiled program, k tenants.
+
+    ``A``/``layout`` (the host matrix and the layout dict from
+    ``build_spmv_plan``) are only needed by build-time host work:
+    ``precond="block_jacobi"`` extracts and inverts each core's diagonal
+    block, ``solver="chebyshev"`` estimates eigenvalue bounds when
+    ``options`` does not pin ``lmin``/``lmax``.
+
+    ``solve.jitted`` exposes the jitted function (``(b, tol, maxiter)``)
+    for HLO inspection — ``repro.util.while_body_collective_counts`` on it
+    yields the per-iteration collective census.
+    """
+    from repro.core.spmv import (make_shard_body, plan_fields,
+                                 plan_shard_arrays)
+
+    sol = get_solver(solver)
+    pre = get_precond(precond)
+    node_ax, core_ax = axis_names
+    axes = tuple(axis_names)
+    fields = plan_fields(plan)
+    body = make_shard_body(plan, axis_names=axis_names, backend=backend,
+                           transport=transport,
+                           neighbor_offsets=neighbor_offsets)
+    pdata = pre.build(plan, layout=layout, A=A)
+    pnames = tuple(pdata)
+    opts = sol.prepare(plan, pre, pdata, A=A, layout=layout, options=options)
+    batched = nrhs is not None
+
+    def shard_solve(*args):
+        consts = args[:len(fields)]
+        pvals = args[len(fields):len(fields) + len(pnames)]
+        mask, b, tol, maxiter = args[len(fields) + len(pnames):]
+        F = {k: v[0, 0] for k, v in zip(fields, consts)}
+        Pd = {k: v[0, 0] for k, v in zip(pnames, pvals)}
+        mask, b = mask[0, 0], b[0, 0]
+        if not batched:
+            b = b[None]                     # (1, rc_pad)
+        ctx = SolverCtx(
+            spmv=jax.vmap(lambda v: body(F, v)),
+            precond=lambda r: pre.apply(Pd, r),
+            mask=mask, axes=axes, maxiter_static=maxiter_static,
+            options=opts)
+        x, iters, rel = sol.shard_loop(ctx, b * mask, tol, maxiter)
+        if not batched:
+            x, iters, rel = x[0], iters[0], rel[0]
+        # iters/rel are replicated on all shards
+        return x[None, None], iters, rel
+
+    spec = P(node_ax, core_ax)
+    n_consts = len(fields) + len(pnames) + 1        # + mask
+    fn = shard_map_compat(
+        shard_solve, mesh=mesh,
+        in_specs=(spec,) * n_consts + (spec, P(), P()),
+        out_specs=(spec, P(), P()))
+
+    @jax.jit
+    def jitted(b: jax.Array, tol: jax.Array, maxiter: jax.Array):
+        return fn(*plan_shard_arrays(plan), *(pdata[k] for k in pnames),
+                  plan.mask, b, tol, maxiter)
+
+    def solve(b: jax.Array, tol: float = 1e-8, maxiter: int = 10_000):
+        return jitted(b, jnp.asarray(tol, jnp.float32),
+                      jnp.asarray(maxiter, jnp.int32))
+
+    solve.jitted = jitted
+    solve.solver = sol.name
+    solve.precond = pre.name
+    solve.options = opts
+    return solve

@@ -1,0 +1,326 @@
+"""The shipped Krylov solvers: ``cg``, ``pipelined_cg``, ``chebyshev``.
+
+Three points on the synchronisation-cost axis (arXiv:1307.4567 measures
+solver-level allreduces as the dominant strong-scaling cost once SpMV is
+optimised; arXiv:1106.5908 shows overlap is the remedy):
+
+``cg``           the PR 1 fused CG, ported verbatim onto the registry:
+                 2 stacked scalar psums per iteration (p·Ap, then
+                 [r·z, r·r] fused), both on the critical path.
+``pipelined_cg`` Ghysels–Vanroose reordering: every dot the iteration needs
+                 ([γ=r·u, δ=w·u, r·r]) is fused into **one** stacked psum
+                 issued before the SpMV it is data-independent of, so the
+                 allreduce latency hides behind the halo exchange + local
+                 matvec — the paper's task-based comm/compute overlap
+                 applied to the Krylov layer instead of the SpMV.
+``chebyshev``    the reduction-free extreme point: given eigenvalue bounds
+                 of M⁻¹A the three-term Chebyshev recurrence needs **zero**
+                 collectives beyond the SpMV itself.  Bounds come from
+                 ``options={"lmin": .., "lmax": ..}`` or are estimated at
+                 build time from a host-side PCG-Lanczos sweep
+                 (:func:`estimate_eig_bounds`), which works for any
+                 registered preconditioner through its ``host_apply``.
+
+All three run on ``(nrhs, rc_pad)`` batches with per-RHS freezing (see
+``repro.solvers.base``): a converged column's state is carried through
+bit-unchanged while the rest iterate, so batched solves equal sequential
+ones exactly.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.solvers.base import (Solver, SolverCtx, pdot, pdot_stack,
+                                register_solver)
+
+__all__ = ["CGSolver", "PipelinedCGSolver", "ChebyshevSolver",
+           "estimate_eig_bounds", "chebyshev_iters_for_tol"]
+
+
+def _gate(active, new, old):
+    """Freeze converged RHS columns: keep ``old`` where ``active`` is off."""
+    a = active.reshape(active.shape + (1,) * (new.ndim - active.ndim))
+    return jnp.where(a, new, old)
+
+
+class CGSolver(Solver):
+    """Preconditioned CG, the fused PR 1 loop (2 scalar psums/iteration)."""
+
+    name = "cg"
+
+    def shard_loop(self, ctx: SolverCtx, b, tol, maxiter):
+        axes = ctx.axes
+        cap = jnp.minimum(maxiter, ctx.maxiter_static)
+        z0 = ctx.precond(b)
+        s0 = pdot_stack(axes, (b, b), (b, z0))   # [b·b, r0·z0] in one psum
+        bnorm = jnp.sqrt(s0[0])
+        tol2 = (tol * jnp.maximum(bnorm, 1e-30)) ** 2
+
+        def cond(state):
+            k, _, _, _, _, rr = state
+            return jnp.any((k < cap) & (rr > tol2))
+
+        def body(state):
+            k, x, r, p, rz, rr = state
+            active = (k < cap) & (rr > tol2)
+            ap = ctx.spmv(p)                     # a2a + 2 core gathers
+            alpha = rz / pdot(axes, p, ap)       # psum 1
+            x = _gate(active, x + alpha[:, None] * p, x)
+            r = _gate(active, r - alpha[:, None] * ap, r)
+            z = ctx.precond(r)
+            s = pdot_stack(axes, (r, z), (r, r))  # psum 2: [r·z, r·r]
+            beta = s[0] / rz
+            p = _gate(active, z + beta[:, None] * p, p)
+            rz = _gate(active, s[0], rz)
+            rr = _gate(active, s[1], rr)
+            return (k + active.astype(k.dtype), x, r, p, rz, rr)
+
+        nrhs = b.shape[0]
+        state = (jnp.zeros((nrhs,), jnp.int32), jnp.zeros_like(b), b, z0,
+                 s0[1], s0[0])
+        k, x, r, p, rz, rr = jax.lax.while_loop(cond, body, state)
+        rel = jnp.sqrt(rr) / jnp.maximum(bnorm, 1e-30)
+        return x, k, rel
+
+
+class PipelinedCGSolver(Solver):
+    """Ghysels–Vanroose pipelined PCG — one stacked psum per iteration.
+
+    The iteration's reductions ([r·u, w·u, r·r]) are issued first, then the
+    preconditioner application and the SpMV ``n = A M⁻¹ w`` run with no
+    data dependence on them: the compiled HLO has the all-reduce and the
+    halo exchange + local matvec side by side for the latency-hiding
+    scheduler.  Costs the classic pipelined-CG price — three extra vector
+    recurrences (z, q, s) and a residual check that lags one iteration.
+
+    The extra recurrences drift from their true values in finite precision
+    (Ghysels & Vanroose §4); in f32 the drift both caps attainable accuracy
+    well above plain CG's *and* lets the recurrence residual report
+    convergence the true residual never reached.  The remedy ships enabled:
+    every ``replace_every`` iterations (option, default 50) the residual
+    system is *restarted* — r = b − Ax, u = M⁻¹r, w = Au recomputed from
+    their definitions and the direction recurrences (z, q, s, p) reset, so
+    the next step is a fresh first iteration from the current x.  A restart
+    is 2 SpMVs + 1 preconditioner application and **no reductions**, so the
+    one-allreduce-per-iteration census is untouched (~4% amortised SpMV
+    overhead).  A full restart is deliberately chosen over the
+    keep-the-β-chain replacement of Ghysels & Vanroose Alg. 4: in f32 the
+    drifted scalar history (γ, α) poisons β after the vectors jump back to
+    truth, and measured on the graded 8×2 problem Alg.-4 replacement
+    stalls above 1e-3 while restart-50 grounds the recurrence residual and
+    converges to the f32 floor (~6e-5 true).  The price is iteration count
+    (~2× plain CG when the restart interval truncates the Krylov space);
+    the restart interval must exceed the Krylov dimension the spectrum
+    needs per segment — don't set it below ~25.
+    """
+
+    name = "pipelined_cg"
+
+    def shard_loop(self, ctx: SolverCtx, b, tol, maxiter):
+        axes = ctx.axes
+        cap = jnp.minimum(maxiter, ctx.maxiter_static)
+        replace_every = int(ctx.options.get("replace_every", 50))
+        u0 = ctx.precond(b)                     # r0 = b  (x0 = 0)
+        w0 = ctx.spmv(u0)
+        rr0 = pdot(axes, b, b)
+        bnorm = jnp.sqrt(rr0)
+        tol2 = (tol * jnp.maximum(bnorm, 1e-30)) ** 2
+        zeros = jnp.zeros_like(b)
+        ones = jnp.ones_like(rr0)
+
+        def cond(state):
+            k, rr = state[1], state[-1]
+            return jnp.any((k < cap) & (rr > tol2))
+
+        def replace(args):
+            """Restart: recompute r/u/w from their definitions and reset the
+            direction recurrences (2 SpMVs, 1 precond apply, 0 reductions).
+            γ_prev := +inf makes the next step's β exactly 0, i.e. a fresh
+            first iteration from the current x."""
+            active, x, r, u, w, z, q, s, p, g_prev = args
+            r_t = b - ctx.spmv(x)
+            u_t = ctx.precond(r_t)
+            w_t = ctx.spmv(u_t)
+            zv = jnp.zeros_like(x)
+            inf = jnp.full_like(g_prev, jnp.inf)
+            return (active, x, _gate(active, r_t, r), _gate(active, u_t, u),
+                    _gate(active, w_t, w), _gate(active, zv, z),
+                    _gate(active, zv, q), _gate(active, zv, s),
+                    _gate(active, zv, p), _gate(active, inf, g_prev))
+
+        def body(state):
+            (t, k, x, r, u, w, z, q, s, p, g_prev, a_prev, rr) = state
+            active = (k < cap) & (rr > tol2)
+            first = k == 0
+            # periodic drift correction (t is the scalar trip counter; the
+            # predicate is replicated, so every shard takes the same branch)
+            do_replace = (t > 0) & (t % replace_every == 0)
+            (_, x, r, u, w, z, q, s, p, g_prev) = jax.lax.cond(
+                do_replace, replace, lambda a: a,
+                (active, x, r, u, w, z, q, s, p, g_prev))
+            # the ONE stacked reduction; everything until the scalar
+            # recurrences below is independent of it, so the allreduce
+            # overlaps the preconditioner + SpMV
+            S = pdot_stack(axes, (r, u), (w, u), (r, r))  # [γ, δ, r·r]
+            m = ctx.precond(w)
+            n = ctx.spmv(m)
+            gamma, delta = S[0], S[1]
+            beta = jnp.where(first, 0.0, gamma / g_prev)
+            alpha = jnp.where(first, gamma / delta,
+                              gamma / (delta - beta * gamma / a_prev))
+            z = _gate(active, n + beta[:, None] * z, z)
+            q = _gate(active, m + beta[:, None] * q, q)
+            s_v = _gate(active, w + beta[:, None] * s, s)
+            p = _gate(active, u + beta[:, None] * p, p)
+            x = _gate(active, x + alpha[:, None] * p, x)
+            r = _gate(active, r - alpha[:, None] * s_v, r)
+            u = _gate(active, u - alpha[:, None] * q, u)
+            w = _gate(active, w - alpha[:, None] * z, w)
+            g_prev = _gate(active, gamma, g_prev)
+            a_prev = _gate(active, alpha, a_prev)
+            rr = _gate(active, S[2], rr)
+            return (t + 1, k + active.astype(k.dtype), x, r, u, w, z, q, s_v,
+                    p, g_prev, a_prev, rr)
+
+        nrhs = b.shape[0]
+        state = (jnp.asarray(0, jnp.int32), jnp.zeros((nrhs,), jnp.int32),
+                 zeros, b, u0, w0, zeros, zeros, zeros, zeros, ones, ones,
+                 rr0)
+        out = jax.lax.while_loop(cond, body, state)
+        k, x, r = out[1], out[2], out[3]
+        rr = pdot(axes, r, r)                   # fresh ‖r‖ outside the loop
+        rel = jnp.sqrt(rr) / jnp.maximum(bnorm, 1e-30)
+        return x, k, rel
+
+
+class ChebyshevSolver(Solver):
+    """Three-term Chebyshev iteration — zero collectives per iteration.
+
+    Needs eigenvalue bounds ``[lmin, lmax]`` of the preconditioned operator
+    M⁻¹A (``prepare`` estimates them from ``A`` when not given).  With the
+    bounds fixed, every iteration is SpMV + AXPYs: no dot products, no
+    allreduces, nothing for 10k ranks to synchronise on.  The iteration
+    count that meets ``tol`` is known *a priori* from the Chebyshev error
+    bound, so the loop runs ``min(maxiter, iters_for_tol(tol))`` steps and
+    measures the real residual once, after the loop.
+    """
+
+    name = "chebyshev"
+
+    #: safety margins on the Lanczos Ritz estimates (which sit inside the
+    #: true spectrum): widen the interval so no eigenvalue escapes it.
+    lmax_margin: float = 1.05
+    lmin_margin: float = 0.9
+
+    def prepare(self, plan, precond, pdata, A=None, layout=None,
+                options=None):
+        opts = dict(options or {})
+        if "lmin" not in opts or "lmax" not in opts:
+            if A is None:
+                raise ValueError(
+                    "chebyshev needs eigenvalue bounds: pass "
+                    "options={'lmin': .., 'lmax': ..} or the host matrix "
+                    "A= (plus layout= for block_jacobi) to estimate them")
+            lmin, lmax = estimate_eig_bounds(
+                A.matvec, precond.host_apply(plan, layout, A), A.n_rows)
+            opts.setdefault("lmin", lmin * self.lmin_margin)
+            opts.setdefault("lmax", lmax * self.lmax_margin)
+        return opts
+
+    def shard_loop(self, ctx: SolverCtx, b, tol, maxiter):
+        axes = ctx.axes
+        lmin = float(ctx.options["lmin"])
+        lmax = float(ctx.options["lmax"])
+        d = (lmax + lmin) / 2.0
+        c = (lmax - lmin) / 2.0
+        bnorm = jnp.sqrt(pdot(axes, b, b))
+        # a-priori trip count from the Chebyshev error bound (static
+        # convergence factor, dynamic tol) — no in-loop residual needed
+        sigma = (math.sqrt(lmax / lmin) - 1.0) / (math.sqrt(lmax / lmin) + 1.0)
+        need = jnp.ceil(jnp.log(jnp.maximum(2.0 / jnp.maximum(tol, 1e-30),
+                                            1.0))
+                        * (1.2 / -math.log(sigma))).astype(jnp.int32) + 5
+        cap = jnp.minimum(jnp.minimum(maxiter, ctx.maxiter_static), need)
+
+        def cond(state):
+            return jnp.any(state[0] < cap)
+
+        def body(state):
+            k, x, r, p, a_prev = state
+            z = ctx.precond(r)
+            beta = jnp.where(k == 0, 0.0, (c * a_prev / 2.0) ** 2)
+            alpha = jnp.where(k == 0, 1.0 / d, 1.0 / (d - beta / a_prev))
+            p = z + beta[:, None] * p
+            x = x + alpha[:, None] * p
+            r = r - alpha[:, None] * ctx.spmv(p)   # the only collectives
+            return (k + 1, x, r, p, alpha)
+
+        nrhs = b.shape[0]
+        state = (jnp.zeros((nrhs,), jnp.int32), jnp.zeros_like(b), b,
+                 jnp.zeros_like(b), jnp.full((nrhs,), 1.0 / d, jnp.float32))
+        k, x, r, p, _ = jax.lax.while_loop(cond, body, state)
+        rr = pdot(axes, r, r)                   # one psum, after the loop
+        rel = jnp.sqrt(rr) / jnp.maximum(bnorm, 1e-30)
+        return x, k, rel
+
+
+def chebyshev_iters_for_tol(lmin: float, lmax: float, tol: float) -> int:
+    """Iterations the Chebyshev error bound needs for a relative ``tol``."""
+    sigma = (math.sqrt(lmax / lmin) - 1.0) / (math.sqrt(lmax / lmin) + 1.0)
+    return int(math.ceil(math.log(2.0 / tol) * (1.2 / -math.log(sigma)))) + 5
+
+
+def estimate_eig_bounds(matvec, precond_apply, n: int,
+                        iters: int = 96, seed: int = 0
+                        ) -> tuple[float, float]:
+    """Extremal eigenvalue estimates of M⁻¹A via host PCG-Lanczos (f64).
+
+    Runs preconditioned CG on a random RHS and diagonalises the Lanczos
+    tridiagonal its α/β coefficients define — the standard matrix-free
+    estimator (PETSc's ``KSPChebyshevEstEig``), valid for any SPD ``M``
+    given only its application.  Ritz values sit inside the true spectrum,
+    so callers should widen the interval (``ChebyshevSolver`` applies its
+    ``lmin_margin``/``lmax_margin``).
+    """
+    rng = np.random.default_rng(seed)
+    r = rng.normal(size=n)
+    z = np.asarray(precond_apply(r), dtype=np.float64)
+    p = z.copy()
+    rz = float(r @ z)
+    alphas: list[float] = []
+    betas: list[float] = []
+    for _ in range(min(iters, n - 1)):
+        ap = np.asarray(matvec(p), dtype=np.float64)
+        pap = float(p @ ap)
+        if pap <= 0 or rz <= 0:
+            break
+        alpha = rz / pap
+        r = r - alpha * ap
+        z = np.asarray(precond_apply(r), dtype=np.float64)
+        rz_new = float(r @ z)
+        alphas.append(alpha)
+        betas.append(rz_new / rz)
+        if rz_new < 1e-28:
+            break
+        p = z + (rz_new / rz) * p
+        rz = rz_new
+    m = len(alphas)
+    if m == 0:
+        raise ValueError("eigenvalue estimation failed: operator or "
+                         "preconditioner is not SPD on the probe vector")
+    T = np.zeros((m, m))
+    for j in range(m):
+        T[j, j] = 1.0 / alphas[j] + (betas[j - 1] / alphas[j - 1] if j else 0.0)
+        if j + 1 < m:
+            T[j, j + 1] = T[j + 1, j] = math.sqrt(betas[j]) / alphas[j]
+    ev = np.linalg.eigvalsh(T)
+    return float(ev[0]), float(ev[-1])
+
+
+register_solver(CGSolver())
+register_solver(PipelinedCGSolver())
+register_solver(ChebyshevSolver())

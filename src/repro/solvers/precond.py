@@ -1,0 +1,213 @@
+"""Preconditioner registry: ``none``, ``jacobi``, ``block_jacobi``.
+
+A preconditioner has two lives:
+
+  * **build time** (host, once per plan): ``build(plan, layout, A)`` turns
+    whatever host-side information it needs into a dict of device arrays
+    with leading ``(n_node, n_core)`` shard dims, which ``make_solver``
+    threads into the sharded region alongside the plan fields;
+  * **solve time** (device, per iteration): ``apply(P, r)`` maps the
+    residual block ``(nrhs, rc_pad)`` to ``z = M^-1 r`` **shard-locally** —
+    a preconditioner application never communicates.  That restriction is
+    the PETSc block-Jacobi design point: PCBJACOBI applies one local solve
+    per process and lets the Krylov loop do all the talking.
+
+``jacobi``       1/diag(A), the paper's Sec. 3 preconditioner (ported from
+                 ``repro.core.cg.jacobi_inverse``, which now re-exports
+                 from here).
+``block_jacobi`` each core's diagonal block — the rows this core's bin owns
+                 restricted to its own columns — is extracted on the host,
+                 densified, inverted, and applied as one small matmul per
+                 shard.  Strictly stronger than ``jacobi`` (fewer
+                 iterations) at zero extra communication; the analogue of
+                 PETSc's default PCBJACOBI+ILU at subdomain size = core bin.
+``none``         identity, for unpreconditioned baselines.
+
+``host_apply`` returns a plain numpy ``(n,) -> (n,)`` application of the
+same operator in *global* row ordering — used by Chebyshev's host-side
+eigenvalue estimation, which needs to run M^-1 A without a device mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["jacobi_inverse", "jacobi_inverse_np", "Preconditioner",
+           "NonePrecond", "JacobiPrecond", "BlockJacobiPrecond",
+           "register_precond", "get_precond", "available_preconds"]
+
+
+def jacobi_inverse(diag_a: jax.Array, mask: jax.Array) -> jax.Array:
+    """Safe 1/diag(A) on valid rows, 0 on padding.
+
+    A zero diagonal entry under the mask would make ``jnp.where(mask > 0,
+    1/diag, 0)`` evaluate ``1/0 = inf`` on the taken branch (``where`` does
+    not short-circuit), silently NaN-ing the whole solve.
+    ``build_spmv_plan`` rejects such matrices up front; this guard keeps the
+    preconditioner finite even for hand-built plans.
+    """
+    valid = (mask > 0) & (diag_a != 0)
+    return jnp.where(valid, 1.0 / jnp.where(valid, diag_a, 1.0), 0.0)
+
+
+def jacobi_inverse_np(diag_a: np.ndarray) -> np.ndarray:
+    """Numpy twin of :func:`jacobi_inverse` (host oracles, host_apply)."""
+    d = np.asarray(diag_a, dtype=np.float64)
+    valid = d != 0
+    return np.where(valid, 1.0 / np.where(valid, d, 1.0), 0.0)
+
+
+class Preconditioner:
+    """Interface of a registered preconditioner (see module docstring)."""
+
+    name: str = ""
+
+    def build(self, plan, layout: dict | None = None, A=None
+              ) -> dict[str, jax.Array]:
+        """Host-side setup -> dict of ``(n_node, n_core, ...)`` arrays."""
+        return {}
+
+    def apply(self, P: dict[str, jax.Array], r: jax.Array) -> jax.Array:
+        """Shard-local ``z = M^-1 r`` on ``(nrhs, rc_pad)`` blocks.
+
+        ``P`` holds this shard's slices of the ``build`` arrays (leading
+        shard dims already stripped).  Must not communicate.
+        """
+        raise NotImplementedError
+
+    def host_apply(self, plan, layout: dict | None, A):
+        """Numpy ``(n,) -> (n,)`` global-ordering application of M^-1."""
+        raise NotImplementedError
+
+
+class NonePrecond(Preconditioner):
+    """Identity — unpreconditioned Krylov baselines."""
+
+    name = "none"
+
+    def apply(self, P, r):
+        return r
+
+    def host_apply(self, plan, layout, A):
+        return lambda r: r
+
+
+class JacobiPrecond(Preconditioner):
+    """Point Jacobi: z = r / diag(A) (paper Sec. 3)."""
+
+    name = "jacobi"
+
+    def build(self, plan, layout=None, A=None):
+        return {"m_inv": jacobi_inverse(plan.diag_a, plan.mask)}
+
+    def apply(self, P, r):
+        return P["m_inv"] * r        # (rc_pad,) broadcasts over (nrhs, rc_pad)
+
+    def host_apply(self, plan, layout, A):
+        inv = jacobi_inverse_np(A.diagonal())
+        return lambda r: inv * r
+
+
+def _core_block_inverses(layout: dict, A):
+    """Dense f64 inverse of every core bin's diagonal block of ``A``.
+
+    Yields ``(i, c, rows, inv)`` per non-empty bin: ``rows`` the bin's
+    global row range (two-level partitions keep bins contiguous) and
+    ``inv`` the inverse in ascending-global-row order.  Each block is a
+    principal submatrix of A, so SPD inputs stay invertible.
+    """
+    if layout is None or A is None:
+        raise ValueError("block_jacobi needs the host matrix and layout: "
+                         "make_solver(..., A=A, layout=layout)")
+    node_bounds = np.asarray(layout["node_bounds"], dtype=np.int64)
+    for i, cb in enumerate(layout["core_bounds"]):
+        lo = int(node_bounds[i])
+        for c in range(len(cb) - 1):
+            blo, bhi = lo + int(cb[c]), lo + int(cb[c + 1])
+            nb = bhi - blo
+            if nb == 0:
+                continue
+            block = np.zeros((nb, nb))
+            for bl in range(nb):
+                s, e = A.indptr[blo + bl], A.indptr[blo + bl + 1]
+                cols = A.indices[s:e]
+                m = (cols >= blo) & (cols < bhi)
+                block[bl, cols[m] - blo] += A.data[s:e][m]
+            yield i, c, (blo, bhi), np.linalg.inv(block)
+
+
+class BlockJacobiPrecond(Preconditioner):
+    """Shard-local dense inverse of each core's diagonal block (PCBJACOBI).
+
+    ``build`` stores ``binv`` as ``(n_node, n_core, rc_pad, rc_pad)`` in the
+    plan's slot ordering (format row permutations folded in via
+    ``layout["global_row_of"]``); padding rows/columns are zero so the
+    application keeps padding slots at exactly 0.
+    """
+
+    name = "block_jacobi"
+
+    def build(self, plan, layout=None, A=None):
+        g_of = np.asarray(layout["global_row_of"]) if layout else None
+        binv = np.zeros((plan.n_node, plan.n_core, plan.rc_pad, plan.rc_pad))
+        for i, c, (blo, bhi), inv in _core_block_inverses(layout, A):
+            slots = np.flatnonzero(g_of[i, c] >= 0)
+            bl = g_of[i, c, slots] - blo      # bin-local row of each slot
+            binv[i, c, slots[:, None], slots[None, :]] = inv[np.ix_(bl, bl)]
+        return {"binv": jnp.asarray(binv, dtype=plan.mask.dtype)}
+
+    def apply(self, P, r):
+        binv = P["binv"]                      # (rc_pad, rc_pad)
+        return jnp.einsum("ij,nj->ni", binv,
+                          r.astype(binv.dtype)).astype(r.dtype)
+
+    def host_apply(self, plan, layout, A):
+        blocks = [(rows, inv)
+                  for _, _, rows, inv in _core_block_inverses(layout, A)]
+
+        def apply(r):
+            z = np.zeros_like(r, dtype=np.float64)
+            for (blo, bhi), inv in blocks:
+                z[blo:bhi] = inv @ r[blo:bhi]
+            return z
+
+        return apply
+
+
+# --------------------------------------------------------------------- #
+# registry
+# --------------------------------------------------------------------- #
+_PRECONDS: dict[str, Preconditioner] = {}
+
+
+def register_precond(pre: Preconditioner,
+                     overwrite: bool = False) -> Preconditioner:
+    """Register ``pre`` under ``pre.name`` for lookup by name."""
+    if not pre.name:
+        raise ValueError("a Preconditioner needs a non-empty name")
+    if pre.name in _PRECONDS and not overwrite:
+        raise ValueError(f"preconditioner {pre.name!r} is already registered "
+                         "(pass overwrite=True to replace it)")
+    _PRECONDS[pre.name] = pre
+    return pre
+
+
+def get_precond(pre: str | Preconditioner) -> Preconditioner:
+    """Resolve a preconditioner name (or pass through an instance)."""
+    if isinstance(pre, Preconditioner):
+        return pre
+    try:
+        return _PRECONDS[pre]
+    except KeyError:
+        raise ValueError(f"unknown preconditioner {pre!r}; available: "
+                         f"{available_preconds()}") from None
+
+
+def available_preconds() -> tuple[str, ...]:
+    return tuple(sorted(_PRECONDS))
+
+
+register_precond(NonePrecond())
+register_precond(JacobiPrecond())
+register_precond(BlockJacobiPrecond())

@@ -32,6 +32,15 @@ def main() -> int:
     ap.add_argument("--cg", action="store_true")
     ap.add_argument("--fused", action="store_true",
                     help="with --cg: time the fully-sharded fused CG solver")
+    ap.add_argument("--solver", default=None,
+                    help="time a registered solver (repro.solvers) instead "
+                         "of the historical --cg path; implies the fused "
+                         "sharded loop")
+    ap.add_argument("--precond", default="jacobi",
+                    help="preconditioner for --solver (none | jacobi | "
+                         "block_jacobi)")
+    ap.add_argument("--nrhs", type=int, default=0,
+                    help="with --solver: batched multi-RHS solve width")
     ap.add_argument("--tol", type=float, default=1e-8)
     ap.add_argument("--no-collectives", action="store_true",
                     help="skip the compiled-HLO collective-op census")
@@ -78,7 +87,46 @@ def main() -> int:
            "padding_waste": round(stats["padding_waste"], 4),
            }
 
-    if args.cg:
+    if args.solver:
+        import jax.numpy as jnp
+
+        from repro.solvers import make_solver
+        from repro.solvers.base import to_dist_batch
+        from repro.util import (collective_counts_from_text,
+                                compiled_hlo_text,
+                                while_body_collective_counts_from_text)
+
+        nrhs = args.nrhs if args.nrhs > 1 else None
+        solve = make_solver(plan, mesh, solver=args.solver,
+                            precond=args.precond, transport=args.transport,
+                            neighbor_offsets=layout["neighbor_offsets"],
+                            nrhs=nrhs, A=A, layout=layout)
+        if nrhs:
+            B = rng.normal(size=(nrhs, A.n_rows))
+            b = to_dist_batch(B, layout, plan)
+        else:
+            b = to_dist(rng.normal(size=A.n_rows), layout, plan)
+        xd, it, rel = solve(b, tol=args.tol, maxiter=200)  # warmup+compile
+        jax.block_until_ready(xd)
+        t0 = time.time()
+        xd, it, rel = solve(b, tol=args.tol, maxiter=args.iters)
+        jax.block_until_ready(xd)
+        dt = time.time() - t0
+        iters = int(np.max(np.asarray(it)))
+        out.update(solver=args.solver, precond=args.precond,
+                   nrhs=nrhs or 1, cg_iters=iters,
+                   cg_rel=float(np.max(np.asarray(rel))),
+                   us_per_iter=dt / max(iters, 1) * 1e6)
+        if not args.no_collectives:
+            # compile once, census twice (module-wide + while-body)
+            txt = compiled_hlo_text(
+                solve.jitted, b, jnp.asarray(args.tol, jnp.float32),
+                jnp.asarray(args.iters, jnp.int32))
+            out["collectives"] = collective_counts_from_text(txt)
+            # exact per-iteration census: ops inside the while body only
+            out["collectives_per_iter"] = \
+                while_body_collective_counts_from_text(txt)
+    elif args.cg:
         import jax.numpy as jnp
 
         from repro.util import collective_counts

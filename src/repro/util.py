@@ -4,7 +4,12 @@ from __future__ import annotations
 import jax
 
 __all__ = ["align_up", "shard_map_compat", "make_mesh_compat",
-           "collective_counts"]
+           "compiled_hlo_text", "collective_counts",
+           "collective_counts_from_text", "while_body_collective_counts",
+           "while_body_collective_counts_from_text"]
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "all-to-all",
+                  "collective-permute")
 
 
 def collective_counts(jitted, *args) -> dict:
@@ -16,13 +21,87 @@ def collective_counts(jitted, *args) -> dict:
     partitioning.  A ``while`` body appears exactly once in the module text,
     so the counts reflect one loop iteration plus setup.
     """
+    return collective_counts_from_text(compiled_hlo_text(jitted, *args))
+
+
+def compiled_hlo_text(jitted, *args) -> str:
+    """Post-optimization HLO module text of ``jitted`` for ``args``.
+
+    XLA compilation dominates the cost of the census helpers — callers
+    needing both the module-wide and the while-body census should compile
+    once here and use the ``*_from_text`` variants.
+    """
+    return jitted.lower(*args).compile().as_text()
+
+
+def collective_counts_from_text(txt: str) -> dict:
     import re
-    txt = jitted.lower(*args).compile().as_text()
+
     # async collectives lower to start/done pairs (e.g. all-reduce-start on
     # TPU); count the start as the op and ignore the matching done
     return {name: len(re.findall(rf"{name}(-start)?\(", txt))
-            for name in ("all-reduce", "all-gather", "all-to-all",
-                         "collective-permute")}
+            for name in COLLECTIVE_OPS}
+
+
+def _hlo_computations(txt: str) -> dict:
+    """Split compiled-HLO module text into {computation name: body text}.
+
+    Computation definitions start at column 0 as ``[ENTRY ]%name (params)
+    -> type {`` and end at the matching column-0 ``}``.
+    """
+    import re
+
+    comps: dict = {}
+    name, lines = None, []
+    for line in txt.splitlines():
+        m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$", line)
+        if m and not line.startswith(" "):
+            name, lines = m.group(1), []
+        elif line.startswith("}") and name is not None:
+            comps[name] = "\n".join(lines)
+            name = None
+        elif name is not None:
+            lines.append(line)
+    return comps
+
+
+def while_body_collective_counts(jitted, *args) -> dict:
+    """Collective ops inside the compiled while-loop body — the exact
+    per-iteration census of a fused solver.
+
+    ``collective_counts`` counts the whole module (loop + setup);
+    this helper parses the post-optimization HLO into computations, finds
+    the computations referenced as ``body=`` by ``while`` ops, and counts
+    only inside them.  For a fused Krylov solve that is precisely the cost
+    of one iteration: e.g. the registry ``cg`` shows 2 ``all-reduce`` per
+    iteration (p·Ap and the stacked [r·z, r·r]), ``pipelined_cg`` exactly
+    1, ``chebyshev`` 0 (the SpMV's ghost assembly is gather+add, never an
+    all-reduce — see ``repro.core.spmv.make_shard_body``).
+
+    Raises ValueError if the compiled module has no while loop.
+    """
+    return while_body_collective_counts_from_text(
+        compiled_hlo_text(jitted, *args))
+
+
+def while_body_collective_counts_from_text(txt: str) -> dict:
+    """:func:`while_body_collective_counts` on pre-compiled HLO text."""
+    import re
+
+    comps = _hlo_computations(txt)
+    body_names = set()
+    for m in re.finditer(r"body=\s*%?([\w\.\-]+)", txt):
+        body_names.add(m.group(1))
+    bodies = [comps[n] for n in body_names if n in comps]
+    if not bodies:
+        raise ValueError("no while-loop body computation found in the "
+                         "compiled HLO — is the solve actually a fused "
+                         "while_loop?")
+    counts = {name: 0 for name in COLLECTIVE_OPS}
+    for body in bodies:
+        for name, k in collective_counts_from_text(body).items():
+            counts[name] += k
+    return counts
 
 
 def make_mesh_compat(axis_shapes, axis_names):
@@ -40,6 +119,31 @@ def make_mesh_compat(axis_shapes, axis_names):
         except TypeError:
             pass
     return jax.make_mesh(axis_shapes, axis_names)
+
+
+def _register_optimization_barrier_batcher() -> None:
+    """Give ``lax.optimization_barrier`` a (trivial) vmap batching rule.
+
+    The barrier is semantically the identity — it only pins the schedule —
+    so batching is a pass-through.  jax (≤ 0.7 at least) ships no rule,
+    which breaks ``vmap`` over ``vector``-mode shard bodies (the batched
+    multi-RHS solver path).  Registered here, guarded, so a future jax
+    that adds its own rule wins.
+    """
+    from jax import lax
+    from jax.interpreters import batching
+
+    prim = getattr(lax, "optimization_barrier_p", None)
+    if prim is None or prim in batching.primitive_batchers:
+        return
+
+    def _batcher(args, dims, **params):
+        return prim.bind(*args, **params), dims
+
+    batching.primitive_batchers[prim] = _batcher
+
+
+_register_optimization_barrier_batcher()
 
 
 def align_up(v: int, a: int) -> int:

@@ -1,0 +1,347 @@
+"""The Krylov solver & preconditioner subsystem (repro.solvers).
+
+Single-device runs are in-process; multi-device runs spawn a fresh
+interpreter via ``repro.testing.dist_check`` (see conftest), which verifies
+every registered solver against the numpy f64 host-CG oracle.
+"""
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+from repro.core import build_spmv_plan, from_dist, make_cg, to_dist
+from repro.solvers import (ChebyshevSolver, Preconditioner, Solver,
+                           available_preconds, available_solvers,
+                           chebyshev_iters_for_tol, estimate_eig_bounds,
+                           from_dist_batch, get_precond, get_solver,
+                           make_solver, register_precond, register_solver,
+                           to_dist_batch)
+from repro.solvers.precond import BlockJacobiPrecond
+from repro.sparse import extruded_mesh_matrix, graded_extruded_mesh_matrix
+from repro.util import make_mesh_compat
+
+
+def _mesh11():
+    return make_mesh_compat((1, 1), ("node", "core"))
+
+
+def _problem(n_surface=40, layers=4, seed=3, gen=extruded_mesh_matrix,
+             **plan_kw):
+    A = gen(n_surface, layers, seed=seed)
+    b = np.random.default_rng(seed).normal(size=A.n_rows)
+    plan, layout = build_spmv_plan(A, 1, 1, mode="balanced", **plan_kw)
+    return A, b, plan, layout
+
+
+# --------------------------------------------------------------------- #
+# registry
+# --------------------------------------------------------------------- #
+def test_registries_ship_the_advertised_sets():
+    assert set(available_solvers()) >= {"cg", "pipelined_cg", "chebyshev"}
+    assert set(available_preconds()) >= {"none", "jacobi", "block_jacobi"}
+
+
+def test_registry_roundtrip_and_duplicate_rejection():
+    class MySolver(Solver):
+        name = "test_roundtrip_solver"
+
+    class MyPrecond(Preconditioner):
+        name = "test_roundtrip_precond"
+
+    s, p = MySolver(), MyPrecond()
+    assert register_solver(s) is s
+    assert get_solver("test_roundtrip_solver") is s
+    assert get_solver(s) is s
+    with pytest.raises(ValueError, match="already registered"):
+        register_solver(MySolver())
+    register_solver(MySolver(), overwrite=True)   # replacement allowed
+
+    assert register_precond(p) is p
+    assert get_precond("test_roundtrip_precond") is p
+    with pytest.raises(ValueError, match="already registered"):
+        register_precond(MyPrecond())
+
+
+def test_unknown_names_raise_with_available_list():
+    with pytest.raises(ValueError, match="unknown solver.*cg"):
+        get_solver("does_not_exist")
+    with pytest.raises(ValueError, match="unknown preconditioner.*jacobi"):
+        get_precond("does_not_exist")
+    A, b, plan, layout = _problem(20, 3)
+    with pytest.raises(ValueError, match="unknown solver"):
+        make_solver(plan, _mesh11(), solver="does_not_exist")
+    with pytest.raises(ValueError, match="unknown preconditioner"):
+        make_solver(plan, _mesh11(), precond="does_not_exist")
+
+
+def test_nameless_registration_rejected():
+    with pytest.raises(ValueError, match="non-empty name"):
+        register_solver(Solver())
+    with pytest.raises(ValueError, match="non-empty name"):
+        register_precond(Preconditioner())
+
+
+# --------------------------------------------------------------------- #
+# cg solver == historical fused CG
+# --------------------------------------------------------------------- #
+def test_registry_cg_is_the_fused_cg_bitwise():
+    A, b, plan, layout = _problem()
+    mesh = _mesh11()
+    bd = to_dist(b, layout, plan)
+    xr, itr, relr = make_solver(plan, mesh, solver="cg", precond="jacobi")(
+        bd, tol=1e-6, maxiter=1000)
+    xf, itf, relf = make_cg(plan, mesh, fused=True)(bd, tol=1e-6,
+                                                    maxiter=1000)
+    assert int(itr) == int(itf)
+    np.testing.assert_array_equal(np.asarray(xr), np.asarray(xf))
+    assert float(relr) == float(relf)
+
+
+@pytest.mark.parametrize("solver", ["cg", "pipelined_cg", "chebyshev"])
+@pytest.mark.parametrize("precond", ["none", "jacobi", "block_jacobi"])
+def test_every_pair_solves_single_device(solver, precond):
+    A, b, plan, layout = _problem(30, 3, seed=5)
+    solve = make_solver(plan, _mesh11(), solver=solver, precond=precond,
+                        A=A, layout=layout)
+    xd, it, rel = solve(to_dist(b, layout, plan), tol=1e-5, maxiter=4000)
+    xs = from_dist(xd, layout, plan)
+    true_rel = np.linalg.norm(A.matvec(xs) - b) / np.linalg.norm(b)
+    assert true_rel < 1e-3, (solver, precond, true_rel)
+    assert int(it) < 4000
+
+
+# --------------------------------------------------------------------- #
+# block-Jacobi
+# --------------------------------------------------------------------- #
+def test_block_jacobi_blocks_invert_spd_diagonal_blocks():
+    # a multi-core plan exercises per-bin extraction + slot permutation
+    # (host-side build needs no devices)
+    A = graded_extruded_mesh_matrix(30, 4, seed=7)
+    plan, layout = build_spmv_plan(A, 2, 2, mode="balanced", format="sell")
+    binv = np.asarray(BlockJacobiPrecond().build(plan, layout=layout, A=A)
+                      ["binv"], dtype=np.float64)
+    Ad = A.to_dense()
+    g = np.asarray(layout["global_row_of"])
+    for i in range(plan.n_node):
+        for c in range(plan.n_core):
+            slots = np.flatnonzero(g[i, c] >= 0)
+            rows = g[i, c, slots]
+            block = Ad[np.ix_(rows, rows)]
+            # SPD principal submatrix...
+            assert np.linalg.eigvalsh(block).min() > 0
+            # ...whose inverse landed at the right slot positions
+            got = binv[i, c][np.ix_(slots, slots)]
+            np.testing.assert_allclose(got @ block, np.eye(len(rows)),
+                                       atol=5e-4)
+            # padding rows/cols stay exactly zero
+            pad = np.flatnonzero(g[i, c] < 0)
+            assert np.all(binv[i, c][pad] == 0)
+            assert np.all(binv[i, c][:, pad] == 0)
+
+
+def test_block_jacobi_on_single_shard_is_a_direct_solve():
+    # one node x one core owns the whole matrix: block-Jacobi == A^-1,
+    # so preconditioned CG converges in O(1) iterations
+    A, b, plan, layout = _problem(20, 3, seed=9)
+    solve = make_solver(plan, _mesh11(), solver="cg", precond="block_jacobi",
+                        A=A, layout=layout)
+    xd, it, rel = solve(to_dist(b, layout, plan), tol=1e-6, maxiter=100)
+    assert int(it) <= 3
+    xs = from_dist(xd, layout, plan)
+    assert np.linalg.norm(A.matvec(xs) - b) / np.linalg.norm(b) < 1e-4
+
+
+def test_block_jacobi_needs_matrix_and_layout():
+    A, b, plan, layout = _problem(20, 3)
+    with pytest.raises(ValueError, match="block_jacobi needs"):
+        make_solver(plan, _mesh11(), solver="cg", precond="block_jacobi")
+
+
+# --------------------------------------------------------------------- #
+# Chebyshev
+# --------------------------------------------------------------------- #
+def test_eig_bounds_bracket_the_jacobi_spectrum():
+    A = extruded_mesh_matrix(20, 3, seed=11)
+    d = A.diagonal()
+    s = 1.0 / np.sqrt(d)
+    dense = A.to_dense() * s[:, None] * s[None, :]   # D^-1/2 A D^-1/2
+    ev = np.linalg.eigvalsh(dense)
+    lmin, lmax = estimate_eig_bounds(A.matvec, lambda r: r / d, A.n_rows)
+    # Ritz values sit inside the true spectrum, near its ends
+    assert ev[0] * 0.99 <= lmin <= ev[0] * 1.5
+    assert ev[-1] * 0.9 <= lmax <= ev[-1] * 1.01
+
+
+def test_chebyshev_meets_its_a_priori_bound():
+    A, b, plan, layout = _problem(30, 3, seed=13)
+    solve = make_solver(plan, _mesh11(), solver="chebyshev",
+                        precond="jacobi", A=A, layout=layout)
+    tol = 1e-4
+    xd, it, rel = solve(to_dist(b, layout, plan), tol=tol, maxiter=10_000)
+    # ran exactly the iteration count the Chebyshev error bound dictates
+    assert int(it) == chebyshev_iters_for_tol(
+        solve.options["lmin"], solve.options["lmax"], tol)
+    # the recurrence residual honours the bound it was sized for; the true
+    # residual pays the usual sqrt(kappa) A-norm-to-residual conversion on
+    # top (the bound controls the A-norm of the error, not ||r||)
+    assert float(rel) < 5 * tol
+    xs = from_dist(xd, layout, plan)
+    assert np.linalg.norm(A.matvec(xs) - b) / np.linalg.norm(b) < 1e-3
+
+
+def test_chebyshev_without_bounds_or_matrix_raises():
+    A, b, plan, layout = _problem(20, 3)
+    with pytest.raises(ValueError, match="eigenvalue bounds"):
+        make_solver(plan, _mesh11(), solver="chebyshev", precond="jacobi")
+    # explicit bounds need no matrix
+    d = A.diagonal()
+    lmin, lmax = estimate_eig_bounds(A.matvec, lambda r: r / d, A.n_rows)
+    solve = make_solver(plan, _mesh11(), solver="chebyshev",
+                        precond="jacobi",
+                        options={"lmin": 0.9 * lmin, "lmax": 1.05 * lmax})
+    xd, it, rel = solve(to_dist(b, layout, plan), tol=1e-3, maxiter=2000)
+    assert float(rel) < 1e-2
+
+
+# --------------------------------------------------------------------- #
+# batched multi-RHS
+# --------------------------------------------------------------------- #
+def test_dist_batch_roundtrip():
+    A, b, plan, layout = _problem(20, 3)
+    B = np.random.default_rng(0).normal(size=(5, A.n_rows))
+    Bd = to_dist_batch(B, layout, plan)
+    assert Bd.shape == (plan.n_node, plan.n_core, 5, plan.rc_pad)
+    np.testing.assert_allclose(from_dist_batch(Bd, layout, plan), B,
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_batched_nrhs1_equals_unbatched_bitwise():
+    A, b, plan, layout = _problem(30, 3, seed=17)
+    mesh = _mesh11()
+    for solver in ("cg", "pipelined_cg", "chebyshev"):
+        kw = dict(solver=solver, precond="jacobi", A=A, layout=layout)
+        x1, it1, rel1 = make_solver(plan, mesh, **kw)(
+            to_dist(b, layout, plan), tol=1e-5, maxiter=2000)
+        xb, itb, relb = make_solver(plan, mesh, nrhs=1, **kw)(
+            to_dist_batch(b[None], layout, plan), tol=1e-5, maxiter=2000)
+        np.testing.assert_array_equal(np.asarray(xb)[:, :, 0],
+                                      np.asarray(x1))
+        assert int(itb[0]) == int(it1)
+
+
+def test_batched_columns_are_independent_bitwise():
+    """Freezing guarantee: a column's trajectory must not depend on its
+    batch neighbours — identical RHS columns give identical bits even
+    though the other columns converge at different iterations."""
+    A, b, plan, layout = _problem(30, 3, seed=19)
+    rng = np.random.default_rng(19)
+    other = rng.normal(size=A.n_rows)
+    B = np.stack([b, other, b, 3.0 * other])
+    for solver in ("cg", "pipelined_cg", "chebyshev"):
+        solve = make_solver(plan, _mesh11(), solver=solver, precond="jacobi",
+                            nrhs=4, A=A, layout=layout)
+        xd, it, rel = solve(to_dist_batch(B, layout, plan), tol=1e-5,
+                            maxiter=2000)
+        xd = np.asarray(xd)
+        np.testing.assert_array_equal(xd[:, :, 0], xd[:, :, 2])
+
+
+def test_batched_matches_sequential_solves():
+    """One fused nrhs=8 solve == 8 sequential solves: per-column iteration
+    counts within ±1, matching solutions.  (Exact bit-equality across the
+    two *differently-shaped* compiled programs is not guaranteed — XLA
+    fusion choices are shape-dependent, so the recurrence residual can
+    graze the tolerance one iteration apart — but column independence
+    *within* a batch is bitwise, see above.)"""
+    A, b, plan, layout = _problem(30, 3, seed=23)
+    mesh = _mesh11()
+    rng = np.random.default_rng(23)
+    B = rng.normal(size=(8, A.n_rows))
+    bnorm = np.abs(B).max()
+    # chebyshev's trip count is a-priori (deterministic); CG counts can
+    # wobble ±1 when the recurrence residual grazes the tolerance.
+    # pipelined_cg gets no count check and a looser solution tolerance:
+    # it solves near its f32 attainable floor where counts are
+    # reduction-order noise, a column that grazes past a restart boundary
+    # (solvers/krylov.py) legitimately pays a restarted Krylov space, and
+    # two runs stopping at different drift states agree only to the f32
+    # pipelined accuracy floor (percent-level in solution norm for this
+    # conditioning) rather than to plain CG's.
+    iter_slack = {"cg": 1, "chebyshev": 0}
+    sol_rtol = {"cg": 1e-3, "chebyshev": 1e-3, "pipelined_cg": 5e-2}
+    for solver in ("cg", "pipelined_cg", "chebyshev"):
+        kw = dict(solver=solver, precond="jacobi", A=A, layout=layout)
+        xb, itb, relb = make_solver(plan, mesh, nrhs=8, **kw)(
+            to_dist_batch(B, layout, plan), tol=1e-5, maxiter=2000)
+        single = make_solver(plan, mesh, **kw)
+        for j in range(8):
+            x1, it1, _ = single(to_dist(B[j], layout, plan), tol=1e-5,
+                                maxiter=2000)
+            assert int(itb[j]) < 2000 and int(it1) < 2000, (solver, j)
+            if solver in iter_slack:
+                assert (abs(int(itb[j]) - int(it1))
+                        <= iter_slack[solver]), (solver, j)
+            np.testing.assert_allclose(
+                np.asarray(xb)[:, :, j], np.asarray(x1),
+                rtol=sol_rtol[solver], atol=sol_rtol[solver] * bnorm)
+
+
+# --------------------------------------------------------------------- #
+# multi-device: every solver vs the f64 host oracle, via dist_check
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("transport,backend,fmt", [
+    ("a2a", "jnp", "ell"),
+    ("a2a", "jnp", "sell"),
+    ("ring", "jnp", "ell"),
+    ("ring", "jnp", "sell"),
+    ("a2a", "pallas", "ell"),
+    ("a2a", "pallas", "sell"),
+    pytest.param("ring", "pallas", "ell", marks=pytest.mark.slow),
+    pytest.param("ring", "pallas", "sell", marks=pytest.mark.slow),
+])
+def test_multidevice_all_solvers_vs_host_oracle(transport, backend, fmt):
+    size = (["--n-surface", "40", "--layers", "4"] if backend == "jnp"
+            else ["--n-surface", "24", "--layers", "3"])
+    r = run_subprocess(["-m", "repro.testing.dist_check",
+                        "--n-node", "4", "--n-core", "2",
+                        "--mode", "balanced", "--transport", transport,
+                        "--backend", backend, "--format", fmt,
+                        "--solver", "all", "--precond", "jacobi", *size])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+    for name in ("cg", "pipelined_cg", "chebyshev"):
+        assert f"SOLVER {name}" in r.stdout, r.stdout
+
+
+@pytest.mark.parametrize("precond", ["none", "block_jacobi"])
+def test_multidevice_preconds_and_batched(precond):
+    r = run_subprocess(["-m", "repro.testing.dist_check",
+                        "--n-node", "4", "--n-core", "2",
+                        "--mode", "balanced", "--format", "sell",
+                        "--matrix", "graded",
+                        "--solver", "cg,pipelined_cg",
+                        "--precond", precond, "--nrhs", "2",
+                        "--n-surface", "40", "--layers", "4"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+    assert "NRHS 2" in r.stdout
+
+
+# --------------------------------------------------------------------- #
+# per-iteration collective census (compiled HLO, 2x2 mesh in-process is
+# not possible -- census runs on the 1x1 mesh via the multi-device
+# subprocess in CI; here assert the helper itself on a 1x1 fused solve)
+# --------------------------------------------------------------------- #
+def test_while_body_census_counts_solver_reductions():
+    import jax.numpy as jnp
+
+    from repro.util import while_body_collective_counts
+
+    A, b, plan, layout = _problem(20, 3)
+    targs = (to_dist(b, layout, plan), jnp.asarray(1e-5, jnp.float32),
+             jnp.asarray(50, jnp.int32))
+    expected = {"cg": 2, "pipelined_cg": 1, "chebyshev": 0}
+    for solver, n_ar in expected.items():
+        solve = make_solver(plan, _mesh11(), solver=solver, precond="jacobi",
+                            A=A, layout=layout)
+        census = while_body_collective_counts(solve.jitted, *targs)
+        assert census["all-reduce"] == n_ar, (solver, census)
