@@ -100,20 +100,46 @@ def run(iters: int = 30):
     # SpMV is overlapped, the remaining per-iteration cost is the solver's
     # own reductions — cg pays 2 blocking all-reduces per iteration,
     # pipelined_cg 1 (overlapped with the SpMV), chebyshev 0.  The
-    # ar_per_iter column is the exact while-body census from compiled HLO.
+    # ar_per_iter column is the exact while-body census from compiled HLO;
+    # the transport column records which halo exchange the solve ran on
+    # (previously these rows were silently a2a-only).
     for solver in ("cg", "pipelined_cg", "chebyshev"):
         for mode in ("task", "balanced"):
             r = run_bench_subprocess(
                 "repro.testing.bench_spmv",
                 ["--n-node", "4", "--n-core", "2", "--mode", mode,
                  "--format", "sell", "--solver", solver,
-                 "--precond", "jacobi", "--n-surface", "2000",
-                 "--layers", "32", "--tol", "1e-5",
+                 "--precond", "jacobi", "--transport", "a2a",
+                 "--n-surface", "2000", "--layers", "32", "--tol", "1e-5",
                  "--iters", str(max(iters, 50))])
             rows.append((f"fig_solvers/{solver}/{mode}/8dev",
                          r["us_per_iter"],
                          f"iters={r['cg_iters']};"
+                         f"transport={r['transport']};"
                          + fmt_collectives_per_iter(r)))
+
+    # transport x n_node sweep on the graded matrix (the exchange-layer
+    # lever): which halo transport wins flips with neighbour count and
+    # halo volume — pairwise skips idle pairs on the banded stencil, hier
+    # trades replicated inter-node payload for the removed receive-side
+    # core gather, auto stamps the measured winner per plan.  The wire
+    # column is the transport's static padded-bytes prediction
+    for transport in ("a2a", "ring", "pairwise", "hier", "auto"):
+        for n_node in (2, 4, 8):
+            r = run_bench_subprocess(
+                "repro.testing.bench_spmv",
+                ["--n-node", str(n_node), "--n-core", "2",
+                 "--mode", "balanced", "--format", "sell",
+                 "--transport", transport, "--matrix", "graded",
+                 "--n-surface", "400", "--layers", "32",
+                 "--iters", str(iters)])
+            t = r["transports"][transport]
+            rows.append((f"fig_transports/{transport}/{n_node}x2",
+                         r["us_per_spmv"],
+                         f"resolved={t['resolved']};"
+                         f"wire_bytes={t['predicted']['wire_bytes']};"
+                         f"ppermute={t['predicted']['collective-permute']};"
+                         + fmt_collectives(r)))
 
     # batched multi-RHS serving point: one fused plan solving 8 tenants,
     # amortising every collective over the batch

@@ -9,7 +9,11 @@ the extruded-mesh pressure matrix, and runs the full solve two ways:
   * the solver registry (``repro.solvers``): ``cg`` / ``pipelined_cg`` /
     ``chebyshev`` selected **by name**, each with the ``jacobi``
     preconditioner, reporting per-iteration time and the exact
-    per-iteration all-reduce census from the compiled while body.
+    per-iteration all-reduce census from the compiled while body, and
+  * the transport registry (``repro.core.transport``): every registered
+    halo transport's SpMV timed against its predicted wire bytes, then
+    ``autotune_transport`` stamping the measured winner into the plan and
+    the registry ``cg`` re-run on it (``transport="auto"``).
 
     PYTHONPATH=src python examples/cg_solve.py
 """
@@ -30,7 +34,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build_spmv_plan, from_dist, make_cg, to_dist
+from repro.core import (autotune_transport, available_transports,
+                        build_spmv_plan, from_dist, make_cg, make_spmv,
+                        to_dist)
 from repro.solvers import make_solver
 from repro.sparse import extruded_mesh_matrix
 from repro.util import make_mesh_compat, while_body_collective_counts
@@ -91,5 +97,28 @@ for name in ("cg", "pipelined_cg", "chebyshev"):
           f"{results[f'solver/{name}']['us_per_iter']:8.1f} us/iter, "
           f"{census['all-reduce']} all-reduce/iter, "
           f"true rel {true_rel:.2e}")
+
+# --- the transport registry: every halo exchange strategy, then auto --- #
+for name in available_transports():
+    spmv = make_spmv(plan, mesh, transport=name)
+    jax.block_until_ready(spmv(bd))                  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(50):
+        yd = spmv(bd)
+    jax.block_until_ready(yd)
+    us = (time.perf_counter() - t0) / 50 * 1e6
+    cost = layout["transport_census"][name]
+    results[f"transport/{name}"] = dict(
+        us_per_spmv=us, wire_bytes=cost["wire_bytes"])
+    print(f"transport {name:9s}: {us:8.1f} us/spmv, "
+          f"{cost['wire_bytes']:6d} predicted wire B, "
+          f"{cost['collective-permute']} ppermute")
+
+res = autotune_transport(plan, mesh)
+solve = make_solver(plan, mesh, solver="cg", precond="jacobi")  # stamped
+xd_a, it_a, _ = solve(bd, tol=1e-5, maxiter=10_000)
+results["transport/auto"] = dict(winner=res.winner, iters=int(it_a))
+print(f"autotune -> {res.winner}; registry cg on the stamped plan: "
+      f"{int(it_a)} iters (transport={solve.transport})")
 
 print(json.dumps(results))

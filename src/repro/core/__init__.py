@@ -8,7 +8,13 @@ from repro.core.partition import (
     imbalance,
     NODE_PARTITIONS,
 )
-from repro.core.halo import HaloPlan, build_halo_plan
+from repro.core.halo import (HaloPlan, build_halo_plan, pair_traffic,
+                             populated_offsets)
+from repro.core.transport import (HaloTransport, autotune_transport,
+                                  available_transports, get_transport,
+                                  make_exchange, register_transport,
+                                  resolve_transport, transport_census,
+                                  transport_stamp)
 from repro.core.spmv import (SpMVPlan, build_spmv_plan, make_spmv,
                              make_shard_body, plan_fields, plan_shard_arrays,
                              to_dist, from_dist, MODES)
@@ -21,7 +27,10 @@ __all__ = [
     "partition_equal_rows", "partition_greedy_nnz", "diffuse_nnz",
     "partition_balanced", "partition_two_level", "partition_stats",
     "imbalance", "NODE_PARTITIONS",
-    "HaloPlan", "build_halo_plan",
+    "HaloPlan", "build_halo_plan", "pair_traffic", "populated_offsets",
+    "HaloTransport", "register_transport", "get_transport",
+    "available_transports", "resolve_transport", "transport_census",
+    "transport_stamp", "autotune_transport", "make_exchange",
     "SpMVPlan", "build_spmv_plan", "make_spmv", "make_shard_body",
     "plan_fields", "plan_shard_arrays",
     "to_dist", "from_dist", "MODES",

@@ -81,7 +81,7 @@ def cg_solve(spmv: Callable, b: jax.Array, m_inv: jax.Array,
 
 def make_cg(plan: SpMVPlan, mesh, axis_names=("node", "core"),
             backend: str = "jnp", maxiter_static: int = 10_000,
-            fused: bool = False, transport: str = "a2a",
+            fused: bool = False, transport: str | None = None,
             neighbor_offsets=None):
     """Bundle a plan + mesh into ``solve(b, tol=..., maxiter=...)``.
 
@@ -113,4 +113,5 @@ def make_cg(plan: SpMVPlan, mesh, axis_names=("node", "core"),
 
     solve.spmv = spmv
     solve.jitted = jitted
+    solve.transport = spmv.transport
     return solve

@@ -26,7 +26,27 @@ import numpy as np
 
 from repro.util import align_up
 
-__all__ = ["HaloPlan", "build_halo_plan"]
+__all__ = ["HaloPlan", "build_halo_plan", "pair_traffic",
+           "populated_offsets"]
+
+
+def pair_traffic(recv_own: np.ndarray, g_pad: int) -> np.ndarray:
+    """(n_node, n_node) bool: does node ``dst`` receive halo data from
+    ``src``?  Derived purely from the receive table — a slot below the
+    ``g_pad`` dump slot means a real element travels on that pair — so
+    every ``HaloTransport`` can recover the neighbour structure from plan
+    arrays alone, with no side-channel layout dict."""
+    recv_own = np.asarray(recv_own)
+    if recv_own.shape[-1] == 0:
+        return np.zeros((recv_own.shape[0], recv_own.shape[0]), dtype=bool)
+    return (recv_own < g_pad).any(axis=(1, 3))
+
+
+def populated_offsets(traffic: np.ndarray) -> list[int]:
+    """Sorted ``(dst - src) mod n_node`` offsets that carry halo traffic."""
+    n_node = traffic.shape[0]
+    return sorted({int((dst - src) % n_node)
+                   for dst, src in zip(*np.nonzero(traffic))})
 
 
 @dataclasses.dataclass
@@ -64,6 +84,14 @@ class HaloPlan:
     def comm_bytes_per_node(self, itemsize: int = 4) -> float:
         """Mean halo traffic per node per SpMV (diagnostics / roofline)."""
         return self.total_ghosts * itemsize / max(self.n_node, 1)
+
+    def pair_traffic(self) -> np.ndarray:
+        """(n_node, n_node) bool communicating-pair table (dst, src)."""
+        return pair_traffic(self.recv_own, self.g_pad)
+
+    def neighbor_offsets(self) -> list[int]:
+        """Populated ``(dst - src) mod n_node`` offsets (ring/pairwise)."""
+        return populated_offsets(self.pair_traffic())
 
 
 def build_halo_plan(ghost_cols: list[np.ndarray], node_bounds: np.ndarray,

@@ -21,7 +21,7 @@ __all__ = ["make_fused_cg"]
 
 def make_fused_cg(plan: SpMVPlan, mesh: jax.sharding.Mesh,
                   axis_names: tuple[str, str] = ("node", "core"),
-                  backend: str = "jnp", transport: str = "a2a",
+                  backend: str = "jnp", transport: str | None = None,
                   neighbor_offsets: list[int] | None = None,
                   maxiter_static: int = 10_000):
     """Bundle a plan + mesh into ``solve(b, tol=..., maxiter=...)``.

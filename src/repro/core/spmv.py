@@ -34,11 +34,18 @@ Three algorithm modes, exactly as benchmarked in the paper (Sec. 2, Fig. 2):
 
 The halo exchange is **owner-split** (see ``repro.core.halo``): every core
 sends the boundary rows its own bin holds, indexed straight into its
-``(rc_pad,)`` vector shard, so the ``all_to_all`` launches without waiting
-for the intra-node ``all_gather``; on receive each core scatters only its own
+``(rc_pad,)`` vector shard, so the exchange launches without waiting for
+the intra-node ``all_gather``; on receive each core scatters only its own
 slice and an intra-node gather + local add combines the partial ghost
 buffers (each slot has exactly one writer, so no all-reduce is needed — and
 none is emitted, keeping the Krylov layer's collective census exact).
+
+The exchange **strategy is pluggable** (``repro.core.transport``): the
+plan stamps a transport name (``a2a`` | ``ring`` | ``pairwise`` | ``hier``),
+``make_shard_body`` dispatches the owner-split exchange to it, and
+``autotune_transport`` / ``transport="auto"`` time the candidates on the
+live mesh and stamp the winner — the exchange winner is matrix- and
+machine-dependent (Schubert et al., arXiv:1106.5908).
 
 Shard-local matrix **storage is pluggable** (``repro.sparse.formats``): the
 plan carries a format name plus the format-owned device arrays
@@ -69,6 +76,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core.halo import HaloPlan, build_halo_plan
 from repro.core.partition import (NODE_PARTITIONS, partition_stats,
                                   partition_two_level)
+from repro.core.transport import (HaloTransport, resolve_transport,
+                                  transport_census, transport_stamp)
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.formats import ShardFormat, get_format
 from repro.util import align_up, shard_map_compat
@@ -93,7 +102,7 @@ SHARD_FIELDS = ("diag_cols", "diag_vals", "offd_cols", "offd_vals",
          data_fields=["fmt_data", "send_own", "recv_own", "x_gather",
                       "diag_a", "mask"],
          meta_fields=["n", "n_node", "n_core", "rc_pad", "nl_pad", "g_pad",
-                      "hs", "mode", "format"])
+                      "hs", "mode", "format", "transport"])
 @dataclasses.dataclass
 class SpMVPlan:
     """Device-ready distributed matrix + halo plan (a pytree).
@@ -124,6 +133,11 @@ class SpMVPlan:
     hs: int
     mode: str
     format: str
+    # the plan's selected halo transport (repro.core.transport).  Defaults
+    # to the VecScatter-analogue all_to_all; ``autotune_transport`` stamps
+    # the measured winner here, and ``make_spmv``/``make_solver`` with
+    # ``transport=None`` follow the stamp.
+    transport: str = "a2a"
 
     # ------------------------------------------------------------------ #
     @property
@@ -170,7 +184,8 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
                     mode: str = "balanced", dtype=jnp.float32,
                     rows_align: int = 8, width_align: int = 1,
                     node_partition: str | None = None,
-                    format: str | ShardFormat = "ell"
+                    format: str | ShardFormat = "ell",
+                    transport: str | HaloTransport = "a2a"
                     ) -> tuple[SpMVPlan, dict]:
     """Partition ``A``, split diag/offdiag, pack shard blocks + halo plan.
 
@@ -189,12 +204,23 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
     row permutation is folded into every layout map, so ``to_dist`` /
     ``from_dist`` / the halo plan are format-agnostic.
 
+    ``transport`` stamps the plan's halo transport
+    (``repro.core.transport``; validated here, so a typo fails at plan
+    build, not at trace time inside ``shard_map``).  ``"auto"`` defers the
+    choice to ``autotune_transport`` at the first ``make_spmv`` /
+    ``make_solver`` on a live mesh.
+
     Returns (plan, layout) where ``layout`` carries the host-side index
-    arrays needed by ``to_dist`` / ``from_dist`` plus a ``stats`` dict with
-    per-axis ``imbalance()`` and the format-computed ``padding_waste``.
+    arrays needed by ``to_dist`` / ``from_dist``, a ``stats`` dict with
+    per-axis ``imbalance()`` and the format-computed ``padding_waste``,
+    and ``transport_census`` — every registered transport's predicted
+    exchange cost (padded wire bytes + per-kind collective counts) for
+    this plan.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if transport != "auto":
+        transport = transport_stamp(transport)       # fail fast on typos
     if node_partition is None:
         node_partition = "nnz" if mode == "balanced" else "rows"
     if node_partition not in NODE_PARTITIONS:
@@ -270,9 +296,11 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
                        np.arange(n_core)[None, :, None, None],
                        halo.send_own]
 
-    # neighbour structure (for the ring transport): which (dst - src) mod n
-    # offsets actually carry halo traffic.  Contiguous partitions of banded
-    # (extrusion-ordered) matrices touch only a few neighbours.
+    # neighbour structure (diagnostics; the ring/pairwise transports derive
+    # the same structure from the plan's own recv table): which
+    # (dst - src) mod n offsets actually carry halo traffic.  Contiguous
+    # partitions of banded (extrusion-ordered) matrices touch only a few
+    # neighbours.
     pair_counts = np.zeros((n_node, n_node), dtype=np.int64)
     for dst in range(n_node):
         g = np.asarray(ghost_cols[dst], dtype=np.int64)
@@ -292,7 +320,7 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
         mask=jnp.asarray(mask, dtype=dtype),
         n=n, n_node=n_node, n_core=n_core,
         rc_pad=rc_pad, nl_pad=nl_pad, g_pad=halo.g_pad, hs=halo.h_own,
-        mode=mode, format=fmt.name,
+        mode=mode, format=fmt.name, transport=transport,
     )
     stats = partition_stats(A.row_nnz, node_bounds, core_bounds_all)
     # fraction of stored slots (diag + offd, all shards) holding no real
@@ -307,6 +335,7 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
         "halo": halo,
         "neighbor_offsets": offsets,
         "pair_counts": pair_counts,
+        "transport_census": transport_census(plan),
         "stats": stats,
     }
     return plan, layout
@@ -341,36 +370,38 @@ def from_dist(vd: jax.Array, layout: dict, plan: SpMVPlan) -> np.ndarray:
 # ---------------------------------------------------------------------- #
 def make_shard_body(plan: SpMVPlan,
                     axis_names: tuple[str, str] = ("node", "core"),
-                    backend: str = "jnp", transport: str = "a2a",
+                    backend: str = "jnp",
+                    transport: str | HaloTransport | None = None,
                     neighbor_offsets: list[int] | None = None):
     """Build the per-shard two-phase SpMV body: ``body(F, x_mine) -> y_mine``.
 
-    ``F`` maps ``plan_fields(plan)`` names to per-shard arrays (leading
-    (1, 1) shard dims already stripped); ``x_mine`` is this core's
-    (rc_pad,) bin of the distributed vector.  Meant to run *inside* a
-    ``shard_map`` over ``axis_names`` — ``make_spmv`` wraps it directly and
-    ``repro.core.sharded_cg`` calls it from the fused CG ``while_loop``.
+    ``F`` maps ``plan_fields(plan)`` names (plus the transport's
+    ``body.extra`` arrays) to per-shard arrays (leading (1, 1) shard dims
+    already stripped); ``x_mine`` is this core's (rc_pad,) bin of the
+    distributed vector.  Meant to run *inside* a ``shard_map`` over
+    ``axis_names`` — ``make_spmv`` wraps it directly and ``repro.solvers``
+    calls it from the fused Krylov ``while_loop``.
 
-    Per call the body issues exactly:
-      1 ``all_to_all``  (node axis, owner-split halo — launches straight from
-                         ``x_mine``, so it overlaps the intra-node gather and
-                         the diagonal multiply in task/balanced mode),
-      2 ``all_gather``  (core axis: the (rc_pad,) bins that assemble the
-                         node-local slice for the diagonal multiply, and the
-                         (g_pad+1,) per-core partial ghost buffers, combined
-                         by a local add — each core scatters only its own
-                         (n_node, hs) recv slice, and each ghost slot has
-                         exactly one writer, so the add is exact),
-      0 ``all-reduce``  — deliberately: any all-reduce in a compiled solver
-                         loop is then attributable to the solver's own
-                         reductions (``repro.solvers``' collective census).
+    The halo exchange dispatches to the plan's registered
+    ``HaloTransport`` (``repro.core.transport``; ``transport=None``
+    follows ``plan.transport``).  Whatever the transport, the body emits
+    **zero all-reduces** — ghost assembly is gather + local add (each
+    ghost slot has exactly one writer), so any all-reduce in a compiled
+    solver loop is attributable to the solver's own reductions
+    (``repro.solvers``' collective census).  The per-transport collective
+    counts are the transport's ``predicted_cost`` plus the one core-axis
+    ``all_gather`` that assembles the node-local ``x`` slice.
 
     Plans with **no halo traffic** (``plan.hs == 0`` — single-node or
     block-diagonal matrices) skip the exchange and the ghost assembly
     entirely and run the diagonal phase alone.
 
-    ``transport='ring'`` replaces the all_to_all with one ``ppermute`` per
-    populated neighbour offset (finer-grained overlap; see ``make_spmv``).
+    Transport name and state are validated *here*, up front — an unknown
+    transport or an incomplete ``neighbor_offsets`` override raises
+    ``ValueError`` (naming the registered transports) before any tracing
+    starts.  The returned ``body`` carries ``body.transport`` (resolved
+    name) and ``body.extra`` (the transport's extra device arrays, to be
+    appended to the shard_map inputs after ``plan_fields(plan)``).
 
     ``backend``: 'jnp' or 'pallas' — dispatched to the plan format's local
     matvec (``repro.sparse.formats``; Pallas kernels run interpret-mode on
@@ -380,10 +411,13 @@ def make_shard_body(plan: SpMVPlan,
     mode = plan.mode
     n_node, g_pad, rc_pad = plan.n_node, plan.g_pad, plan.rc_pad
     has_halo = plan.hs > 0
-    if transport == "ring" and has_halo and not neighbor_offsets:
-        raise ValueError("ring transport needs layout['neighbor_offsets']")
-    if transport not in ("a2a", "ring"):
-        raise ValueError(f"unknown transport {transport!r}")
+    transport = transport if transport is not None else plan.transport
+    if transport == "auto":
+        raise ValueError("transport='auto' is resolved by make_spmv/"
+                         "make_solver (needs a live mesh to time); "
+                         "make_shard_body takes a concrete transport")
+    tr, tstate = resolve_transport(transport, plan,
+                                   neighbor_offsets=neighbor_offsets)
 
     fmt = get_format(plan.format)
     if backend == "pallas":
@@ -395,34 +429,10 @@ def make_shard_body(plan: SpMVPlan,
 
     def body(F: dict, x_mine: jax.Array) -> jax.Array:
         if has_halo:
-            send_own, recv_own = F["send_own"], F["recv_own"]  # (n_node, hs)
             # -- VecScatter analogue: owner-split halo exchange straight from
             #    this core's shard (no dependence on the intra-node gather) --
-            part = jnp.zeros(g_pad + 1, dtype=x_mine.dtype)
-            if transport == "a2a":
-                recv = jax.lax.all_to_all(x_mine[send_own], node_ax,
-                                          split_axis=0, concat_axis=0)
-                part = part.at[recv_own.reshape(-1)].set(recv.reshape(-1))
-            else:  # ring: one independent ppermute per populated offset
-                me = jax.lax.axis_index(node_ax)
-                for d in neighbor_offsets:
-                    # I am src for dst = me + d; I receive from src = me - d
-                    dst_row = (me + d) % n_node
-                    send = jnp.take(send_own, dst_row, axis=0)      # (hs,)
-                    perm = [(i, (i + d) % n_node) for i in range(n_node)]
-                    got = jax.lax.ppermute(x_mine[send], node_ax, perm)
-                    src_row = (me - d) % n_node
-                    part = part.at[jnp.take(recv_own, src_row, axis=0)].set(got)
-            # every ghost slot is written by exactly one core (slot g_pad
-            # dumps the padding), so assembling the full ghost vector is a
-            # gather + local add of the per-core partial buffers.  The add
-            # only ever combines one real value with zeros, so the result is
-            # bit-identical to an all-reduce — but the compiled HLO carries
-            # no all-reduce, which keeps the solver-level collective census
-            # exact: every all-reduce in a compiled Krylov loop body belongs
-            # to the solver's own reductions (repro.solvers).
-            parts = jax.lax.all_gather(part, core_ax, axis=0)
-            x_ghost = jnp.sum(parts, axis=0)
+            x_ghost = tr.exchange(x_mine, F, state=tstate, axes=axis_names,
+                                  n_node=n_node, g_pad=g_pad)
         else:
             x_ghost = None      # halo-free plan: no exchange, no ghost phase
 
@@ -441,6 +451,8 @@ def make_shard_body(plan: SpMVPlan,
 
         return local_matvec(F, x_local, x_ghost, rc_pad)
 
+    body.transport = tr.name
+    body.extra = tr.extra_arrays(plan, tstate) if has_halo else {}
     return body
 
 
@@ -449,25 +461,33 @@ def make_shard_body(plan: SpMVPlan,
 # ---------------------------------------------------------------------- #
 def make_spmv(plan: SpMVPlan, mesh: jax.sharding.Mesh,
               axis_names: tuple[str, str] = ("node", "core"),
-              backend: str = "jnp", transport: str = "a2a",
+              backend: str = "jnp",
+              transport: str | HaloTransport | None = None,
               neighbor_offsets: list[int] | None = None):
     """Build the jitted distributed SpMV: (n_node, n_core, rc_pad) -> same.
 
     ``backend``: 'jnp' or 'pallas' — dispatched to the plan's shard format
     (``repro.sparse.formats``; Pallas kernels run interpret-mode on CPU).
 
-    ``transport``: 'a2a' — one fused all_to_all (PETSc VecScatter analogue);
-    'ring' — one ppermute per populated neighbour offset (beyond-paper:
-    each hop is independent of the diagonal multiply AND of the other hops,
-    giving the scheduler strictly finer-grained overlap; only valid when
-    ``neighbor_offsets`` covers every populated (dst-src) offset, e.g.
-    banded extrusion-ordered matrices with contiguous partitions).
+    ``transport`` selects the halo-exchange strategy by name
+    (``repro.core.transport``: 'a2a' | 'ring' | 'pairwise' | 'hier' — see
+    the module docstring for when each wins).  ``None`` follows the plan's
+    stamp (``plan.transport``); ``"auto"`` runs ``autotune_transport`` on
+    this mesh, stamps the winner into the plan and returns the winner's
+    compiled SpMV.  The returned function carries ``spmv.transport`` (the
+    resolved name).
     """
+    transport = transport if transport is not None else plan.transport
+    if transport == "auto":     # explicit, or a deferred plan stamp
+        from repro.core.transport import autotune_transport
+        return autotune_transport(plan, mesh, axis_names=axis_names,
+                                  backend=backend,
+                                  neighbor_offsets=neighbor_offsets).spmv
     node_ax, core_ax = axis_names
-    fields = plan_fields(plan)
     body = make_shard_body(plan, axis_names=axis_names, backend=backend,
                            transport=transport,
                            neighbor_offsets=neighbor_offsets)
+    fields = plan_fields(plan) + tuple(body.extra)
 
     def shard_fn(*args):
         *consts, xd = args
@@ -482,6 +502,7 @@ def make_spmv(plan: SpMVPlan, mesh: jax.sharding.Mesh,
 
     @jax.jit
     def spmv(xd: jax.Array) -> jax.Array:
-        return fn(*plan_shard_arrays(plan), xd)
+        return fn(*plan_shard_arrays(plan), *body.extra.values(), xd)
 
+    spmv.transport = body.transport
     return spmv

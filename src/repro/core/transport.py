@@ -1,0 +1,591 @@
+"""Pluggable halo-exchange transports — the ``HaloTransport`` layer.
+
+The exchange strategy used to be two hardcoded string branches inside
+``core.spmv.make_shard_body``.  Schubert et al. (arXiv:1106.5908) show the
+best exchange strategy is matrix- *and* machine-dependent — vector-mode vs
+task-mode vs pairwise wins flip with halo volume and neighbour count — so
+the exchange gets the same treatment storage (``repro.sparse.formats``) and
+solvers (``repro.solvers``) already got: every transport is a named plugin
+owning
+
+  * its **static plan state** (``plan_state`` — pure host data derived from
+    the plan's own send/recv tables, e.g. the populated neighbour offsets
+    for ``ring``/``pairwise``; no side-channel layout dict required);
+  * any **extra device arrays** the in-shard exchange needs beyond the
+    common ``send_own``/``recv_own`` tables (``extra_arrays`` — folded into
+    the shard_map argument list by ``make_spmv``/``make_solver`` the way
+    formats fold their ``fields``);
+  * the **in-shard exchange** itself (``exchange`` — ``(x_mine, F, ...) ->
+    x_ghost``), used by ``make_shard_body`` for the standalone SpMV and
+    every registered solver alike.  The contract: the returned
+    ``(g_pad + 1,)`` buffer holds, at every *real* ghost slot
+    (``< g_pad``), exactly the bits of the owner's vector entry; the dump
+    slot ``g_pad`` is write-only garbage the matvecs never read.  **No
+    all-reduce may be emitted** — the Krylov layer's collective census
+    (``repro.util.while_body_collective_counts``) attributes every
+    all-reduce in a compiled solver loop to the solver's own reductions;
+  * a **numpy reference** of the same dataflow (``host_exchange``) — the
+    conformance harness (``tests/test_transports.py``,
+    ``repro.testing.transport_check``) property-tests it for the exchange
+    round trip on random graded matrices;
+  * its **predicted cost** (``predicted_cost`` — padded bytes on the
+    inter-node wire and per-kind collective counts per exchange), reported
+    by ``build_spmv_plan`` (``layout["transport_census"]``) and asserted
+    against the compiled-HLO census in CI.
+
+Four transports ship:
+
+``a2a``       one fused ``all_to_all`` over the node axis (PETSc VecScatter
+              analogue) + one core-axis gather/add to assemble the ghost
+              buffer.  Fewest collectives; every pair pays the padded
+              ``hs`` slots whether it communicates or not.
+``ring``      one ``ppermute`` per populated neighbour *offset* (full
+              cyclic permutation each).  Each hop is independent of the
+              diagonal multiply and of the other hops — strictly
+              finer-grained overlap; total wire unchanged vs ``a2a``.
+``pairwise``  ``ring`` minus the dead steps: each ``ppermute``'s
+              permutation lists only the *actually-communicating* (src,
+              dst) pairs at that offset, so sparse stencils (few
+              neighbours, e.g. banded extrusion-ordered matrices under
+              contiguous partitions) skip the traffic idle pairs would
+              otherwise carry.
+``hier``      two-level node-leader exchange — the paper's hybrid "one MPI
+              rank per node" analogue: intra-node gather of the send
+              slices (core axis), one inter-node ``all_to_all`` of the
+              combined per-node payload, intra-node scatter through a
+              replicated receive table (``recv_all``).  The receive side
+              needs **no** core-axis gather of partial ghost buffers —
+              the trade is a replicated inter-node payload (× n_core).
+
+``autotune_transport`` times each registered transport's compiled SpMV on
+the live mesh and stamps the winner into the plan
+(``transport="auto"`` in ``make_spmv``/``make_solver`` resolves through
+it).  ``make_exchange`` builds a ghost-buffer probe used by the
+conformance harness to compare transports bit-for-bit against ``a2a``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.halo import pair_traffic, populated_offsets
+
+__all__ = ["HaloTransport", "A2ATransport", "RingTransport",
+           "PairwiseTransport", "HierTransport", "register_transport",
+           "get_transport", "available_transports", "resolve_transport",
+           "transport_census", "AutotuneResult", "autotune_transport",
+           "make_exchange"]
+
+
+class HaloTransport:
+    """Interface of a halo-exchange transport.
+
+    Subclasses set ``name`` (registry key) and implement ``exchange`` /
+    ``host_exchange`` / ``predicted_cost``; ``plan_state`` and
+    ``extra_arrays`` default to "needs nothing".  All static state must be
+    derivable from the plan's own arrays (``send_own``/``recv_own``/
+    ``g_pad``) so a transport can be selected for any plan after the fact.
+    """
+
+    name: str = ""
+
+    # -- static plan state (host) -------------------------------------- #
+    def plan_state(self, plan) -> dict:
+        """Static host-side state (python/numpy, hashable-free) for this
+        plan.  Called once per ``make_spmv``/``make_solver`` build (and by
+        ``build_spmv_plan`` for the census)."""
+        return {}
+
+    def extra_arrays(self, plan, state: dict) -> dict[str, jax.Array]:
+        """Extra ``(n_node, n_core, ...)`` device arrays the exchange needs
+        beyond the common plan fields.  They ride the shard_map argument
+        list after ``plan_fields(plan)`` and appear in ``F`` by name."""
+        return {}
+
+    def finalize_state(self, plan, state: dict) -> dict:
+        """Recompute any derived state after a caller override (e.g. an
+        explicit ``neighbor_offsets`` list) — called by
+        ``resolve_transport`` before ``validate``.  Default: passthrough."""
+        return state
+
+    def validate(self, plan, state: dict) -> None:
+        """Raise ``ValueError`` on unusable state — called up front by
+        ``make_shard_body`` builders, never at trace time."""
+
+    # -- the in-shard exchange ----------------------------------------- #
+    def exchange(self, x_mine: jax.Array, F: dict, *, state: dict,
+                 axes: tuple[str, str], n_node: int,
+                 g_pad: int) -> jax.Array:
+        """Return this shard's assembled ``(g_pad + 1,)`` ghost buffer."""
+        raise NotImplementedError
+
+    # -- numpy reference of the same dataflow -------------------------- #
+    def host_exchange(self, xd: np.ndarray, send_own: np.ndarray,
+                      recv_own: np.ndarray, g_pad: int,
+                      state: dict) -> np.ndarray:
+        """Mirror ``exchange`` on the host: ``xd`` is the full
+        ``(n_node, n_core, rc_pad)`` vector, returns per-shard ghost
+        buffers ``(n_node, n_core, g_pad + 1)``."""
+        raise NotImplementedError
+
+    # -- census --------------------------------------------------------- #
+    def predicted_cost(self, plan, state: dict, itemsize: int = 4) -> dict:
+        """Padded inter-node wire bytes + per-kind collective counts for
+        one exchange (keys match ``repro.util.COLLECTIVE_OPS``)."""
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------- #
+# shared pieces
+# --------------------------------------------------------------------- #
+def _neighbour_state(plan) -> dict:
+    """Communicating-pair table + populated offsets from the plan arrays.
+
+    Cached on the plan instance: `transport_census` (run at every plan
+    build) and each ring/pairwise resolution would otherwise repeat the
+    same device-to-host pull + O(n_node² · n_core · hs) scan.  The cache
+    is an ordinary attribute — pytree ops that rebuild the plan simply
+    recompute it."""
+    cached = getattr(plan, "_neighbour_cache", None)
+    if cached is None:
+        traffic = pair_traffic(np.asarray(plan.recv_own), plan.g_pad)
+        cached = (traffic, populated_offsets(traffic))
+        plan._neighbour_cache = cached
+    traffic, offsets = cached
+    return {"traffic": traffic, "neighbor_offsets": list(offsets)}
+
+
+def _norm_offsets(offsets, n_node: int) -> list[int]:
+    """Offsets reduced mod n_node, deduped, self-offset dropped — an
+    override listing an alias (e.g. 5 on 4 nodes) must not schedule the
+    same hop twice."""
+    return sorted({d % n_node for d in offsets} - {0})
+
+
+def _validate_offsets(name: str, plan, state: dict) -> None:
+    """Shared ring/pairwise check: the (possibly overridden) offset list
+    must cover every populated (dst - src) offset — a partial list would
+    silently drop halo traffic."""
+    if plan.hs == 0:
+        return
+    offsets = state["neighbor_offsets"]
+    if not offsets:
+        raise ValueError(f"{name} transport needs neighbor_offsets "
+                         "covering every populated (dst-src) offset")
+    missing = set(populated_offsets(state["traffic"])) - set(offsets)
+    if missing:
+        raise ValueError(
+            f"{name} transport neighbor_offsets {sorted(offsets)} miss "
+            f"populated (dst-src) offsets {sorted(missing)}; the "
+            "exchange would silently drop that halo traffic")
+
+
+def _gather_add(part: jax.Array, core_ax: str) -> jax.Array:
+    """Combine per-core partial ghost buffers: gather + local add.  Each
+    real slot has exactly one writer, so the add only ever combines one
+    value with zeros — bit-identical to an all-reduce without emitting
+    one (keeps the solver-level collective census exact)."""
+    return jnp.sum(jax.lax.all_gather(part, core_ax, axis=0), axis=0)
+
+
+def _ppermute_exchange(x_mine, F, perm_by_offset: dict, axes, n_node: int,
+                       g_pad: int) -> jax.Array:
+    """Shared ring/pairwise dataflow: one independent ``ppermute`` per
+    neighbour offset, scattered into the partial ghost buffer, assembled
+    with the core-axis gather + add.  The transports differ only in the
+    permutation each offset carries (full cycle vs communicating pairs)."""
+    node_ax, core_ax = axes
+    send_own, recv_own = F["send_own"], F["recv_own"]
+    part = jnp.zeros(g_pad + 1, dtype=x_mine.dtype)
+    me = jax.lax.axis_index(node_ax)
+    for d, perm in perm_by_offset.items():
+        # I am src for dst = me + d; I receive from src = me - d
+        dst_row = (me + d) % n_node
+        send = jnp.take(send_own, dst_row, axis=0)              # (hs,)
+        got = jax.lax.ppermute(x_mine[send], node_ax, perm)
+        src_row = (me - d) % n_node
+        part = part.at[jnp.take(recv_own, src_row, axis=0)].set(got)
+    return _gather_add(part, core_ax)
+
+
+def _host_pair_scatter(xd, send_own, recv_own, g_pad, traffic=None):
+    """Numpy ghost assembly shared by a2a/ring/pairwise: every core
+    scatters its own recv slice per source node, then the per-core partial
+    buffers are summed node-wide (duplicate dump-slot writes land in the
+    write-only slot ``g_pad``, exactly like the device path)."""
+    n_node, n_core = send_own.shape[:2]
+    ghost = np.zeros((n_node, n_core, g_pad + 1), dtype=xd.dtype)
+    for dst in range(n_node):
+        for c in range(n_core):
+            part = np.zeros(g_pad + 1, dtype=xd.dtype)
+            for src in range(n_node):
+                if traffic is not None and not traffic[dst, src]:
+                    continue
+                part[recv_own[dst, c, src]] = xd[src, c, send_own[src, c, dst]]
+            ghost[dst, :, :] += part[None, :]
+    return ghost
+
+
+# --------------------------------------------------------------------- #
+# a2a — one fused all_to_all (the PETSc VecScatter analogue)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class A2ATransport(HaloTransport):
+    name = "a2a"
+
+    def exchange(self, x_mine, F, *, state, axes, n_node, g_pad):
+        node_ax, core_ax = axes
+        send_own, recv_own = F["send_own"], F["recv_own"]   # (n_node, hs)
+        part = jnp.zeros(g_pad + 1, dtype=x_mine.dtype)
+        recv = jax.lax.all_to_all(x_mine[send_own], node_ax,
+                                  split_axis=0, concat_axis=0)
+        part = part.at[recv_own.reshape(-1)].set(recv.reshape(-1))
+        return _gather_add(part, core_ax)
+
+    def host_exchange(self, xd, send_own, recv_own, g_pad, state):
+        return _host_pair_scatter(xd, send_own, recv_own, g_pad)
+
+    def predicted_cost(self, plan, state, itemsize=4):
+        n_node, n_core, hs = plan.n_node, plan.n_core, plan.hs
+        return {"wire_bytes": n_node * (n_node - 1) * n_core * hs * itemsize,
+                "all-to-all": 1 if hs else 0,
+                "all-gather": 1 if hs else 0,
+                "collective-permute": 0}
+
+
+# --------------------------------------------------------------------- #
+# ring — one full-cycle ppermute per populated neighbour offset
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class RingTransport(HaloTransport):
+    name = "ring"
+
+    def plan_state(self, plan):
+        return _neighbour_state(plan)
+
+    def finalize_state(self, plan, state):
+        return dict(state, neighbor_offsets=_norm_offsets(
+            state["neighbor_offsets"], plan.n_node))
+
+    def validate(self, plan, state):
+        _validate_offsets("ring", plan, state)
+
+    def exchange(self, x_mine, F, *, state, axes, n_node, g_pad):
+        perms = {d: [(i, (i + d) % n_node) for i in range(n_node)]
+                 for d in state["neighbor_offsets"]}
+        return _ppermute_exchange(x_mine, F, perms, axes, n_node, g_pad)
+
+    def host_exchange(self, xd, send_own, recv_own, g_pad, state):
+        n_node = send_own.shape[0]
+        reach = np.zeros_like(state["traffic"])
+        for d in state["neighbor_offsets"]:
+            for src in range(n_node):
+                reach[(src + d) % n_node, src] = True
+        return _host_pair_scatter(xd, send_own, recv_own, g_pad,
+                                  traffic=reach)
+
+    def predicted_cost(self, plan, state, itemsize=4):
+        k = len(state["neighbor_offsets"])
+        n_node, n_core, hs = plan.n_node, plan.n_core, plan.hs
+        return {"wire_bytes": k * n_node * n_core * hs * itemsize,
+                "all-to-all": 0,
+                "all-gather": 1 if hs else 0,
+                "collective-permute": k}
+
+
+# --------------------------------------------------------------------- #
+# pairwise — ring minus the dead steps: per-offset ppermutes list only
+# the actually-communicating pairs
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class PairwiseTransport(HaloTransport):
+    name = "pairwise"
+
+    def plan_state(self, plan):
+        return self.finalize_state(plan, _neighbour_state(plan))
+
+    def finalize_state(self, plan, state):
+        # pairs follow the (possibly overridden) offset list, restricted
+        # to pairs that actually communicate — extra offsets contribute
+        # no pairs, and completeness is enforced by validate below
+        traffic, n_node = state["traffic"], plan.n_node
+        offsets = _norm_offsets(state["neighbor_offsets"], n_node)
+        pairs = {
+            d: [(src, (src + d) % n_node) for src in range(n_node)
+                if traffic[(src + d) % n_node, src]]
+            for d in offsets}
+        return dict(state, neighbor_offsets=offsets,
+                    pairs_by_offset={d: p for d, p in pairs.items() if p})
+
+    def validate(self, plan, state):
+        _validate_offsets("pairwise", plan, state)
+
+    def exchange(self, x_mine, F, *, state, axes, n_node, g_pad):
+        # idle pairs are simply absent from each permutation: senders not
+        # listed transmit nothing, receivers not listed get zeros — whose
+        # recv rows are all dump-slot anyway (no traffic on that pair)
+        return _ppermute_exchange(x_mine, F, state["pairs_by_offset"],
+                                  axes, n_node, g_pad)
+
+    def host_exchange(self, xd, send_own, recv_own, g_pad, state):
+        return _host_pair_scatter(xd, send_own, recv_own, g_pad,
+                                  traffic=state["traffic"])
+
+    def predicted_cost(self, plan, state, itemsize=4):
+        n_pairs = int(np.count_nonzero(state["traffic"]))
+        return {"wire_bytes": n_pairs * plan.n_core * plan.hs * itemsize,
+                "all-to-all": 0,
+                "all-gather": 1 if plan.hs else 0,
+                "collective-permute": len(state["pairs_by_offset"])}
+
+
+# --------------------------------------------------------------------- #
+# hier — two-level node-leader exchange ("one MPI rank per node")
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class HierTransport(HaloTransport):
+    name = "hier"
+
+    def extra_arrays(self, plan, state):
+        # every core of node dst scatters the *whole* node's receive table,
+        # so each shard carries recv_own[dst] replicated across its core
+        # axis: (n_node, n_core[shard], n_core, n_node, hs)
+        recv = np.asarray(plan.recv_own)
+        n_node, n_core, _, hs = recv.shape
+        recv_all = np.broadcast_to(recv[:, None],
+                                   (n_node, n_core, n_core, n_node, hs))
+        return {"recv_all": jnp.asarray(np.ascontiguousarray(recv_all))}
+
+    def exchange(self, x_mine, F, *, state, axes, n_node, g_pad):
+        node_ax, core_ax = axes
+        send_own = F["send_own"]
+        # intra-node gather to the "leader" (SPMD: replicated on each core)
+        sendtab = jax.lax.all_gather(x_mine[send_own], core_ax, axis=0)
+        # one inter-node exchange of the combined per-node payload
+        recv = jax.lax.all_to_all(sendtab, node_ax,
+                                  split_axis=1, concat_axis=1)
+        # intra-node scatter: the replicated receive table assembles the
+        # full ghost buffer locally — no core-axis gather of partials
+        part = jnp.zeros(g_pad + 1, dtype=x_mine.dtype)
+        return part.at[F["recv_all"].reshape(-1)].set(recv.reshape(-1))
+
+    def host_exchange(self, xd, send_own, recv_own, g_pad, state):
+        n_node, n_core = send_own.shape[:2]
+        ghost = np.zeros((n_node, n_core, g_pad + 1), dtype=xd.dtype)
+        for dst in range(n_node):
+            buf = np.zeros(g_pad + 1, dtype=xd.dtype)
+            for c in range(n_core):
+                for src in range(n_node):
+                    buf[recv_own[dst, c, src]] = \
+                        xd[src, c, send_own[src, c, dst]]
+            ghost[dst, :, :] = buf[None, :]
+        return ghost
+
+    def predicted_cost(self, plan, state, itemsize=4):
+        n_node, n_core, hs = plan.n_node, plan.n_core, plan.hs
+        # the combined payload rides the node axis once per core row
+        # (SPMD replication), so the padded wire is n_core x the a2a bytes;
+        # the win is the removed receive-side core gather
+        return {"wire_bytes": (n_node * (n_node - 1)
+                               * n_core * n_core * hs * itemsize),
+                "all-to-all": 1 if hs else 0,
+                "all-gather": 1 if hs else 0,   # send-side, core axis
+                "collective-permute": 0}
+
+
+# --------------------------------------------------------------------- #
+# registry
+# --------------------------------------------------------------------- #
+_TRANSPORTS: dict[str, HaloTransport] = {}
+
+
+def register_transport(transport: HaloTransport,
+                       overwrite: bool = False) -> HaloTransport:
+    """Register ``transport`` under ``transport.name`` for lookup by name.
+
+    Every registered transport is automatically swept by the conformance
+    harness (``tests/test_transports.py`` iterates
+    ``available_transports()``): registering one that fails bit-identity
+    against the ``a2a`` reference is a test failure, not a runtime
+    surprise.
+    """
+    if not transport.name:
+        raise ValueError("a HaloTransport needs a non-empty name")
+    if transport.name in _TRANSPORTS and not overwrite:
+        raise ValueError(f"transport {transport.name!r} is already "
+                         "registered (pass overwrite=True to replace it)")
+    _TRANSPORTS[transport.name] = transport
+    return transport
+
+
+def get_transport(transport: str | HaloTransport) -> HaloTransport:
+    """Resolve a transport name (or pass through an instance)."""
+    if isinstance(transport, HaloTransport):
+        return transport
+    try:
+        return _TRANSPORTS[transport]
+    except KeyError:
+        raise ValueError(f"unknown transport {transport!r}; available: "
+                         f"{available_transports()} (or 'auto')") from None
+
+
+def available_transports() -> tuple[str, ...]:
+    return tuple(sorted(_TRANSPORTS))
+
+
+def transport_stamp(transport: str | HaloTransport) -> str:
+    """Resolve ``transport`` to a *registered* name fit for stamping into
+    a plan.  Plans stamp transports by name and every later build
+    resolves the stamp through the registry, so an unregistered instance
+    must fail here, at plan build — not at the first ``make_spmv``."""
+    tr = get_transport(transport)
+    if _TRANSPORTS.get(tr.name) is not tr:
+        raise ValueError(
+            f"transport instance {tr.name!r} is not registered; the plan "
+            "stamps transports by name, so register_transport() it first")
+    return tr.name
+
+
+def resolve_transport(transport, plan,
+                      neighbor_offsets=None) -> tuple[HaloTransport, dict]:
+    """(transport, validated plan state) — the up-front resolution used by
+    ``make_shard_body``/``make_spmv``/``make_solver``.
+
+    ``neighbor_offsets`` is the historical explicit override for ``ring``;
+    when given it replaces the offsets derived from the plan and is
+    validated for completeness (a partial list would silently drop halo
+    traffic at trace time — the late failure this resolution step
+    retires).
+    """
+    tr = get_transport(transport)
+    state = tr.plan_state(plan)
+    if neighbor_offsets is not None and "neighbor_offsets" in state:
+        state = tr.finalize_state(
+            plan, dict(state, neighbor_offsets=list(neighbor_offsets)))
+    tr.validate(plan, state)
+    return tr, state
+
+
+def transport_census(plan, itemsize: int = 4) -> dict:
+    """{name: predicted_cost} over every registered transport — the static
+    exchange-cost table ``build_spmv_plan`` folds into the layout."""
+    out = {}
+    for name in available_transports():
+        tr = _TRANSPORTS[name]
+        out[name] = tr.predicted_cost(plan, tr.plan_state(plan),
+                                      itemsize=itemsize)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# ghost-buffer probe (the conformance harness's microscope)
+# --------------------------------------------------------------------- #
+def make_exchange(plan, mesh: jax.sharding.Mesh,
+                  axis_names: tuple[str, str] = ("node", "core"),
+                  transport: str | HaloTransport = "a2a",
+                  neighbor_offsets=None) -> Callable:
+    """Jitted ghost-buffer probe: CG-layout ``x`` ->
+    ``(n_node, n_core, g_pad + 1)`` assembled ghost buffers — exactly what
+    the shard body feeds the off-diagonal matvec phase, extracted for
+    bit-level comparison across transports.  Raises on halo-free plans
+    (there is no exchange to probe)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.util import shard_map_compat
+
+    if plan.hs == 0:
+        raise ValueError("plan has no halo traffic (hs == 0): "
+                         "there is no exchange to probe")
+    tr, state = resolve_transport(transport, plan, neighbor_offsets)
+    extra = tuple(tr.extra_arrays(plan, state).items())
+    node_ax, core_ax = axis_names
+    n_node, g_pad = plan.n_node, plan.g_pad
+
+    def shard_fn(send_own, recv_own, *rest):
+        *extras, xd = rest
+        F = {"send_own": send_own[0, 0], "recv_own": recv_own[0, 0]}
+        F.update({k: v[0, 0] for (k, _), v in zip(extra, extras)})
+        ghost = tr.exchange(xd[0, 0], F, state=state, axes=axis_names,
+                            n_node=n_node, g_pad=g_pad)
+        return ghost[None, None]
+
+    spec = P(node_ax, core_ax)
+    fn = shard_map_compat(shard_fn, mesh=mesh,
+                          in_specs=(spec,) * (3 + len(extra)),
+                          out_specs=spec)
+
+    @jax.jit
+    def probe(xd: jax.Array) -> jax.Array:
+        return fn(plan.send_own, plan.recv_own,
+                  *(v for _, v in extra), xd)
+
+    return probe
+
+
+# --------------------------------------------------------------------- #
+# the per-plan autotuner
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class AutotuneResult:
+    winner: str
+    timings_us: dict[str, float]
+    spmv: Callable                      # the winner's compiled SpMV
+
+
+def autotune_transport(plan, mesh: jax.sharding.Mesh,
+                       axis_names: tuple[str, str] = ("node", "core"),
+                       backend: str = "jnp",
+                       candidates: tuple[str, ...] | None = None,
+                       iters: int = 20, warmup: int = 2,
+                       neighbor_offsets=None) -> AutotuneResult:
+    """Time every candidate transport's compiled SpMV on the live mesh and
+    stamp the winner into ``plan.transport``.
+
+    The probe input is a unit-ish vector in CG layout; each candidate is
+    compiled once, warmed ``warmup`` calls, then timed over ``iters``
+    back-to-back calls.  ``transport="auto"`` in ``make_spmv`` /
+    ``make_solver`` / the CLIs resolves through this function, so a plan
+    autotuned once keeps its winner for every later build
+    (``plan.transport`` is the stamp).  Halo-free plans skip timing —
+    every transport compiles to the same exchange-free body — and stamp
+    ``a2a``.
+    """
+    from repro.core.spmv import make_spmv
+
+    names = tuple(candidates) if candidates else available_transports()
+    if plan.hs == 0:
+        plan.transport = "a2a"
+        return AutotuneResult("a2a", {n: 0.0 for n in names},
+                              make_spmv(plan, mesh, axis_names=axis_names,
+                                        backend=backend, transport="a2a"))
+    # an explicit neighbor_offsets override is threaded into every
+    # candidate build (ring/pairwise validate it for completeness)
+    x = jnp.asarray(plan.mask)          # any full CG-layout vector works
+    timings: dict[str, float] = {}
+    fns: dict[str, Callable] = {}
+    for name in names:
+        spmv = make_spmv(plan, mesh, axis_names=axis_names, backend=backend,
+                         transport=name, neighbor_offsets=neighbor_offsets)
+        for _ in range(max(warmup, 1)):         # compile + warm
+            y = spmv(x)
+        jax.block_until_ready(y)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            y = spmv(x)
+        jax.block_until_ready(y)
+        timings[name] = (time.perf_counter() - t0) / iters * 1e6
+        fns[name] = spmv
+    winner = min(timings, key=timings.get)
+    plan.transport = winner
+    return AutotuneResult(winner, timings, fns[winner])
+
+
+register_transport(A2ATransport())
+register_transport(RingTransport())
+register_transport(PairwiseTransport())
+register_transport(HierTransport())

@@ -188,7 +188,7 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
                 solver: str | Solver = "cg",
                 precond: str | Preconditioner = "jacobi",
                 axis_names: tuple[str, str] = ("node", "core"),
-                backend: str = "jnp", transport: str = "a2a",
+                backend: str = "jnp", transport: str | None = None,
                 neighbor_offsets: list[int] | None = None,
                 maxiter_static: int = 10_000,
                 nrhs: int | None = None,
@@ -211,6 +211,11 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
     block, ``solver="chebyshev"`` estimates eigenvalue bounds when
     ``options`` does not pin ``lmin``/``lmax``.
 
+    ``transport`` selects the halo exchange by name
+    (``repro.core.transport``; ``None`` follows the plan's stamp,
+    ``"auto"`` autotunes the SpMV on this mesh first and uses the stamped
+    winner — exposed as ``solve.transport``).
+
     ``solve.jitted`` exposes the jitted function (``(b, tol, maxiter)``)
     for HLO inspection — ``repro.util.while_body_collective_counts`` on it
     yields the per-iteration collective census.
@@ -218,14 +223,20 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
     from repro.core.spmv import (make_shard_body, plan_fields,
                                  plan_shard_arrays)
 
+    transport = transport if transport is not None else plan.transport
+    if transport == "auto":     # explicit, or a deferred plan stamp
+        from repro.core.transport import autotune_transport
+        transport = autotune_transport(
+            plan, mesh, axis_names=axis_names, backend=backend,
+            neighbor_offsets=neighbor_offsets).winner
     sol = get_solver(solver)
     pre = get_precond(precond)
     node_ax, core_ax = axis_names
     axes = tuple(axis_names)
-    fields = plan_fields(plan)
     body = make_shard_body(plan, axis_names=axis_names, backend=backend,
                            transport=transport,
                            neighbor_offsets=neighbor_offsets)
+    fields = plan_fields(plan) + tuple(body.extra)
     pdata = pre.build(plan, layout=layout, A=A)
     pnames = tuple(pdata)
     opts = sol.prepare(plan, pre, pdata, A=A, layout=layout, options=options)
@@ -260,8 +271,8 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
 
     @jax.jit
     def jitted(b: jax.Array, tol: jax.Array, maxiter: jax.Array):
-        return fn(*plan_shard_arrays(plan), *(pdata[k] for k in pnames),
-                  plan.mask, b, tol, maxiter)
+        return fn(*plan_shard_arrays(plan), *body.extra.values(),
+                  *(pdata[k] for k in pnames), plan.mask, b, tol, maxiter)
 
     def solve(b: jax.Array, tol: float = 1e-8, maxiter: int = 10_000):
         return jitted(b, jnp.asarray(tol, jnp.float32),
@@ -270,5 +281,6 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
     solve.jitted = jitted
     solve.solver = sol.name
     solve.precond = pre.name
+    solve.transport = body.transport
     solve.options = opts
     return solve

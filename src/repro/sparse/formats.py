@@ -16,7 +16,12 @@ the shard body and both solvers.  Every storage decision now lives behind a
     ``matvec_pallas``), called from inside the ``shard_map`` body with the
     assembled ``x_local`` slice and the exchanged ``x_ghost`` buffer
     (``x_ghost is None`` when the plan has no halo traffic — block-diagonal
-    or single-node matrices — and the ghost phase must be skipped);
+    or single-node matrices — and the ghost phase must be skipped).  The
+    buffer arrives fully assembled whatever ``HaloTransport``
+    (``repro.core.transport``) produced it: real slots ``< g_pad`` carry
+    the owners' bits, the trailing dump slot is write-only garbage a
+    matvec must never read (pad ``offd`` entries point at slot 0 with
+    zero values instead);
   * its own storage **accounting** (``nnz_stored`` / ``padding_waste``) —
     the plan no longer guesses what counts as padding.
 

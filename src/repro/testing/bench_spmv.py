@@ -19,7 +19,11 @@ def main() -> int:
                     choices=["rows", "nnz"],
                     help="node-axis row split (default: nnz for balanced "
                          "mode, rows otherwise)")
-    ap.add_argument("--transport", default="a2a")
+    ap.add_argument("--transport", default="a2a",
+                    help="halo transport (repro.core.transport), 'auto' to "
+                         "autotune, or a comma list to sweep (SpMV path "
+                         "only): per-transport timings + census land in "
+                         "the JSON under 'transports'")
     ap.add_argument("--format", default="ell",
                     help="shard storage format (repro.sparse.formats): "
                          "'ell' row-padded, 'sell' sliced ELL (SELL-C-σ)")
@@ -87,12 +91,16 @@ def main() -> int:
            "padding_waste": round(stats["padding_waste"], 4),
            }
 
+    if (args.solver or args.cg) and "," in args.transport:
+        ap.error("--transport sweeps are SpMV-only; pick one transport "
+                 "for --solver/--cg runs")
+
     if args.solver:
         import jax.numpy as jnp
 
         from repro.solvers import make_solver
         from repro.solvers.base import to_dist_batch
-        from repro.util import (collective_counts_from_text,
+        from repro.util import (census_split, collective_counts_from_text,
                                 compiled_hlo_text,
                                 while_body_collective_counts_from_text)
 
@@ -114,6 +122,7 @@ def main() -> int:
         dt = time.time() - t0
         iters = int(np.max(np.asarray(it)))
         out.update(solver=args.solver, precond=args.precond,
+                   transport=solve.transport,
                    nrhs=nrhs or 1, cg_iters=iters,
                    cg_rel=float(np.max(np.asarray(rel))),
                    us_per_iter=dt / max(iters, 1) * 1e6)
@@ -123,9 +132,11 @@ def main() -> int:
                 solve.jitted, b, jnp.asarray(args.tol, jnp.float32),
                 jnp.asarray(args.iters, jnp.int32))
             out["collectives"] = collective_counts_from_text(txt)
-            # exact per-iteration census: ops inside the while body only
+            # exact per-iteration census: ops inside the while body only,
+            # split into solver reductions vs transport traffic
             out["collectives_per_iter"] = \
                 while_body_collective_counts_from_text(txt)
+            out["census_split"] = census_split(out["collectives_per_iter"])
     elif args.cg:
         import jax.numpy as jnp
 
@@ -142,6 +153,7 @@ def main() -> int:
         jax.block_until_ready(xd)
         dt = time.time() - t0
         out.update(cg_iters=int(it), cg_rel=float(rel), fused=args.fused,
+                   transport=getattr(solve, "transport", args.transport),
                    us_per_iter=dt / max(int(it), 1) * 1e6)
         if not args.no_collectives:
             # one `while` body per module text -> counts ~ per-iteration
@@ -149,17 +161,48 @@ def main() -> int:
                 solve.jitted, b, jnp.asarray(args.tol, jnp.float32),
                 jnp.asarray(args.iters, jnp.int32))
     else:
-        spmv = make_spmv(plan, mesh, transport=args.transport,
-                         neighbor_offsets=layout["neighbor_offsets"])
-        y = spmv(x)
-        jax.block_until_ready(y)           # compile + warmup
-        t0 = time.time()
-        for _ in range(args.iters):
+        from repro.util import collective_counts
+
+        names = args.transport.split(",")
+        sweep = {}
+        for name in names:
+            res = {}
+            if name == "auto":
+                from repro.core.transport import autotune_transport
+                at = autotune_transport(plan, mesh)
+                spmv = at.spmv
+                res["resolved"] = at.winner
+                res["autotune"] = {
+                    "winner": at.winner,
+                    "timings_us": {k: round(v, 1)
+                                   for k, v in at.timings_us.items()}}
+            else:
+                spmv = make_spmv(plan, mesh, transport=name)
+                res["resolved"] = spmv.transport
             y = spmv(x)
-        jax.block_until_ready(y)
-        dt = time.time() - t0
-        out["us_per_spmv"] = dt / args.iters * 1e6
-        out["gflops"] = 2.0 * A.nnz / (dt / args.iters) / 1e9
+            jax.block_until_ready(y)       # compile + warmup
+            t0 = time.time()
+            for _ in range(args.iters):
+                y = spmv(x)
+            jax.block_until_ready(y)
+            dt = time.time() - t0
+            res["us_per_spmv"] = dt / args.iters * 1e6
+            res["gflops"] = 2.0 * A.nnz / (dt / args.iters) / 1e9
+            # the transport's own static prediction (padded wire bytes +
+            # per-kind collective counts), to be held against the
+            # compiled-HLO census below
+            res["predicted"] = layout["transport_census"][res["resolved"]]
+            if not args.no_collectives:
+                res["collectives"] = collective_counts(spmv, x)
+            sweep[name] = res
+        out["transports"] = sweep
+        first = sweep[names[0]]
+        out["transport"] = (first["resolved"] if len(names) == 1
+                            else "sweep")
+        out["us_per_spmv"] = first["us_per_spmv"]
+        out["gflops"] = first["gflops"]
+        if "collectives" in first:
+            out["collectives"] = first["collectives"]
 
     print(json.dumps(out))
     return 0

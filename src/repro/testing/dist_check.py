@@ -19,7 +19,9 @@ def main() -> int:
     ap.add_argument("--node-partition", default=None,
                     choices=["rows", "nnz"])
     ap.add_argument("--backend", default="jnp")
-    ap.add_argument("--transport", default="a2a")
+    ap.add_argument("--transport", default="a2a",
+                    help="halo transport (repro.core.transport); 'auto' "
+                         "autotunes on the live mesh and stamps the plan")
     ap.add_argument("--format", default="ell",
                     help="shard storage format (repro.sparse.formats)")
     ap.add_argument("--matrix", default="mesh",
@@ -80,6 +82,12 @@ def main() -> int:
     spmv = make_spmv(plan, mesh, backend=args.backend,
                      transport=args.transport,
                      neighbor_offsets=layout["neighbor_offsets"])
+    print(f"TRANSPORT {spmv.transport}"
+          + (" (auto)" if args.transport == "auto" else ""))
+    if args.transport == "auto":
+        # the autotuner stamped its winner into the plan; later solver
+        # builds follow the stamp instead of re-running the timing sweep
+        args.transport = None
 
     rng = np.random.default_rng(1)
     x = rng.normal(size=A.n_rows)

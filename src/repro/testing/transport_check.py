@@ -1,0 +1,163 @@
+"""Halo-transport conformance harness, run as a subprocess from tests.
+
+Usage:  python -m repro.testing.transport_check --n-node 4 --n-core 2 \
+            --case graded
+
+Every *registered* transport (``repro.core.transport``) is swept against
+the ``a2a`` reference on the same plan — a transport nobody listed still
+gets checked, so registering one that breaks conformance is a test
+failure, not a runtime surprise.  Three checks per (case, format,
+transport):
+
+  ghost   the assembled ghost buffer (``make_exchange`` probe) is
+          **bit-identical** to a2a's at every real slot (< g_pad) on every
+          (node, core) shard, and identical across the core axis;
+  host    the transport's numpy ``host_exchange`` reference reproduces the
+          device ghost buffer bit-for-bit (real slots) — the same
+          reference the hypothesis property tests drive;
+  spmv    ``make_spmv`` output is bit-identical to a2a's, per backend.
+
+Plan cases cover the neighbour-structure regimes the transports
+specialise for: ``graded`` (non-uniform two-level node bounds), ``uniform``
+(equal-rows bounds), ``single`` (banded extrusion ordering — one
+neighbour each side), ``dense`` (random sparsity — every pair
+communicates), ``halofree`` (hs == 0 — no exchange at all, SpMV check
+only).  ``--autotune`` additionally runs ``autotune_transport`` and checks
+the stamped winner's SpMV is what ``transport="auto"`` returns.
+
+Sets XLA_FLAGS *before* importing jax so the host platform exposes
+n_node * n_core fake devices — only inside this process.
+"""
+import argparse
+import os
+import sys
+
+CASES = ("graded", "uniform", "single", "dense", "halofree")
+
+
+def build_case(case: str, n_node: int, n_core: int, fmt: str):
+    from repro.core import build_spmv_plan
+    from repro.sparse import (extruded_mesh_matrix,
+                              graded_extruded_mesh_matrix, random_spd_matrix)
+
+    if case == "graded":        # skewed nnz -> non-uniform node_bounds
+        A = graded_extruded_mesh_matrix(48, 6, seed=0)
+        kw = dict(mode="balanced", node_partition="nnz")
+    elif case == "uniform":     # equal-rows node split
+        A = extruded_mesh_matrix(48, 6, seed=0)
+        kw = dict(mode="balanced", node_partition="rows")
+    elif case == "single":      # banded: one neighbour each side
+        A = extruded_mesh_matrix(64, 4, seed=1)
+        kw = dict(mode="task")
+    elif case == "dense":       # random sparsity: all pairs communicate
+        A = random_spd_matrix(640, nnz_per_row=9, seed=2)
+        kw = dict(mode="balanced")
+    elif case == "halofree":    # single node owns everything: hs == 0
+        A = graded_extruded_mesh_matrix(48, 6, seed=0)
+        n_node, n_core = 1, n_node * n_core
+        kw = dict(mode="balanced")
+    else:
+        raise ValueError(f"unknown case {case!r}; one of {CASES}")
+    plan, layout = build_spmv_plan(A, n_node, n_core, format=fmt, **kw)
+    return A, plan, layout
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-node", type=int, default=4)
+    ap.add_argument("--n-core", type=int, default=2)
+    ap.add_argument("--case", default="graded", choices=CASES)
+    ap.add_argument("--formats", default="ell,sell")
+    ap.add_argument("--backends", default="jnp")
+    ap.add_argument("--transports", default=None,
+                    help="comma list (default: every registered transport)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="also run autotune_transport and verify the "
+                         "stamped winner is what transport='auto' builds")
+    args = ap.parse_args()
+
+    ndev = args.n_node * args.n_core
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={ndev}")
+
+    import jax
+    import numpy as np
+
+    from repro.core import (available_transports, get_transport,
+                            make_exchange, make_spmv, resolve_transport,
+                            to_dist)
+    from repro.core.transport import autotune_transport
+    from repro.util import make_mesh_compat
+
+    assert len(jax.devices()) == ndev, (len(jax.devices()), ndev)
+    transports = (tuple(args.transports.split(","))
+                  if args.transports else available_transports())
+    ok = True
+
+    for fmt in args.formats.split(","):
+        A, plan, layout = build_case(args.case, args.n_node, args.n_core,
+                                     fmt)
+        mesh = make_mesh_compat((plan.n_node, plan.n_core),
+                                ("node", "core"))
+        rng = np.random.default_rng(7)
+        xd = to_dist(rng.normal(size=A.n_rows), layout, plan)
+        xd_np, g = np.asarray(xd), plan.g_pad
+        print(f"CASE {args.case} FORMAT {fmt} n_node={plan.n_node} "
+              f"n_core={plan.n_core} hs={plan.hs} g_pad={g} "
+              f"offsets={layout['neighbor_offsets']}")
+
+        ghost_ref = None
+        if plan.hs:
+            ghost_ref = np.asarray(make_exchange(plan, mesh,
+                                                 transport="a2a")(xd))
+        y_ref = {b: np.asarray(make_spmv(plan, mesh, backend=b,
+                                         transport="a2a")(xd))
+                 for b in args.backends.split(",")}
+
+        for name in transports:
+            line = [f"TRANSPORT {name}"]
+            if plan.hs:
+                ghost = np.asarray(make_exchange(plan, mesh,
+                                                 transport=name)(xd))
+                g_ok = bool(np.array_equal(ghost[..., :g],
+                                           ghost_ref[..., :g]))
+                # core-axis consistency: assembly must replicate the full
+                # buffer on every core of a node
+                g_ok &= all(np.array_equal(ghost[:, 0, :g], ghost[:, c, :g])
+                            for c in range(plan.n_core))
+                tr, state = resolve_transport(name, plan)
+                host = tr.host_exchange(xd_np, np.asarray(plan.send_own),
+                                        np.asarray(plan.recv_own), g, state)
+                h_ok = bool(np.array_equal(host[..., :g], ghost[..., :g]))
+                line += [f"ghost={'ok' if g_ok else 'BAD'}",
+                         f"host={'ok' if h_ok else 'BAD'}"]
+                ok &= g_ok and h_ok
+            for b in args.backends.split(","):
+                y = np.asarray(make_spmv(plan, mesh, backend=b,
+                                         transport=name)(xd))
+                s_ok = bool(np.array_equal(y, y_ref[b]))
+                line.append(f"spmv[{b}]={'ok' if s_ok else 'BAD'}")
+                ok &= s_ok
+            print(" ".join(line))
+
+        if args.autotune:
+            res = autotune_transport(plan, mesh, iters=5, warmup=1)
+            a_ok = (plan.transport == res.winner
+                    and res.winner in available_transports())
+            y_auto = np.asarray(make_spmv(plan, mesh, transport="auto")(xd))
+            y_win = np.asarray(make_spmv(plan, mesh,
+                                         transport=res.winner)(xd))
+            a_ok &= bool(np.array_equal(y_auto, y_win))
+            t = " ".join(f"{k}={v:.0f}us" for k, v in
+                         sorted(res.timings_us.items()))
+            print(f"AUTOTUNE winner={res.winner} {t} "
+                  f"{'ok' if a_ok else 'BAD'}")
+            ok &= a_ok
+
+    print("OK" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,10 +6,30 @@ import jax
 __all__ = ["align_up", "shard_map_compat", "make_mesh_compat",
            "compiled_hlo_text", "collective_counts",
            "collective_counts_from_text", "while_body_collective_counts",
-           "while_body_collective_counts_from_text"]
+           "while_body_collective_counts_from_text", "census_split",
+           "COLLECTIVE_OPS", "SOLVER_REDUCTION_OPS", "TRANSPORT_OPS"]
 
-COLLECTIVE_OPS = ("all-reduce", "all-gather", "all-to-all",
-                  "collective-permute")
+COLLECTIVE_OPS = ("all-reduce", "reduce-scatter", "all-gather",
+                  "all-to-all", "collective-permute",
+                  "collective-broadcast")
+
+#: the two sides of the census.  The SpMV shard body deliberately emits no
+#: reduction collectives (ghost assembly is gather + local add, see
+#: ``repro.core.spmv.make_shard_body``), so in a compiled Krylov loop body
+#: every op in SOLVER_REDUCTION_OPS belongs to the solver's own reductions
+#: and every op in TRANSPORT_OPS to the halo transport + vector-layout
+#: assembly.
+SOLVER_REDUCTION_OPS = ("all-reduce", "reduce-scatter")
+TRANSPORT_OPS = ("all-gather", "all-to-all", "collective-permute",
+                 "collective-broadcast")
+
+
+def census_split(counts: dict) -> dict:
+    """Split a per-kind census into solver reductions vs transport traffic
+    (the per-collective-kind attribution the bench harness reports)."""
+    return {"solver_reductions": sum(counts.get(k, 0)
+                                     for k in SOLVER_REDUCTION_OPS),
+            "transport_ops": sum(counts.get(k, 0) for k in TRANSPORT_OPS)}
 
 
 def collective_counts(jitted, *args) -> dict:

@@ -1,0 +1,139 @@
+"""The compiled-HLO collective census helpers themselves
+(``repro.util``), on hand-built HLO module text — previously these were
+only exercised indirectly through the CI bench census.
+
+Covers: while-less programs (an error, not a zero), nested while loops,
+async start/done pairs, and the per-collective-kind breakdown that
+separates transport traffic from solver reductions.
+"""
+import pytest
+
+from repro.util import (COLLECTIVE_OPS, census_split,
+                        collective_counts_from_text,
+                        while_body_collective_counts_from_text)
+
+
+def _module(*computations: str) -> str:
+    return "HloModule census_test\n\n" + "\n\n".join(computations) + "\n"
+
+
+def _comp(name: str, body_lines: list[str], entry: bool = False) -> str:
+    head = ("ENTRY " if entry else "") + f"%{name} (p: f32[8]) -> f32[8] {{"
+    return "\n".join([head] + [f"  {ln}" for ln in body_lines] + ["}"])
+
+
+WHILE_BODY = _comp("wbody.1", [
+    "%ar = f32[8] all-reduce(f32[8] %p), to_apply=%add",
+    "%a2a = f32[8] all-to-all(f32[8] %ar), dimensions={0}",
+    "%cp = f32[8] collective-permute(f32[8] %a2a), "
+    "source_target_pairs={{0,1},{1,0}}",
+    "ROOT %out = f32[8] add(f32[8] %cp, f32[8] %p)",
+])
+WHILE_COND = _comp("wcond.1", ["ROOT %lt = pred[] constant(true)"])
+ENTRY_WITH_WHILE = _comp("main", [
+    "%ag = f32[8] all-gather(f32[8] %p), dimensions={0}",
+    "ROOT %w = f32[8] while(f32[8] %ag), condition=%wcond.1, "
+    "body=%wbody.1",
+], entry=True)
+
+
+def test_module_wide_counts_per_kind():
+    txt = _module(WHILE_BODY, WHILE_COND, ENTRY_WITH_WHILE)
+    counts = collective_counts_from_text(txt)
+    assert set(counts) == set(COLLECTIVE_OPS)
+    assert counts == {"all-reduce": 1, "reduce-scatter": 0,
+                      "all-gather": 1, "all-to-all": 1,
+                      "collective-permute": 1, "collective-broadcast": 0}
+
+
+def test_while_body_counts_exclude_setup_ops():
+    txt = _module(WHILE_BODY, WHILE_COND, ENTRY_WITH_WHILE)
+    counts = while_body_collective_counts_from_text(txt)
+    # the entry's all-gather is setup, not per-iteration cost
+    assert counts["all-gather"] == 0
+    assert counts["all-reduce"] == 1
+    assert counts["all-to-all"] == 1
+    assert counts["collective-permute"] == 1
+
+
+def test_while_less_program_raises():
+    txt = _module(_comp("main", [
+        "%ar = f32[8] all-reduce(f32[8] %p), to_apply=%add",
+        "ROOT %out = f32[8] add(f32[8] %ar, f32[8] %p)",
+    ], entry=True))
+    with pytest.raises(ValueError, match="no while-loop body"):
+        while_body_collective_counts_from_text(txt)
+    # ...but the module-wide census still works
+    assert collective_counts_from_text(txt)["all-reduce"] == 1
+
+
+def test_nested_whiles_count_both_bodies():
+    inner_body = _comp("inner.1", [
+        "%rs = f32[8] reduce-scatter(f32[8] %p), dimensions={0}",
+        "ROOT %out = f32[8] add(f32[8] %rs, f32[8] %p)",
+    ])
+    outer_body = _comp("outer.1", [
+        "%ar = f32[8] all-reduce(f32[8] %p), to_apply=%add",
+        "ROOT %w = f32[8] while(f32[8] %ar), condition=%wcond.1, "
+        "body=%inner.1",
+    ])
+    entry = _comp("main", [
+        "ROOT %w = f32[8] while(f32[8] %p), condition=%wcond.1, "
+        "body=%outer.1",
+    ], entry=True)
+    counts = while_body_collective_counts_from_text(
+        _module(inner_body, outer_body, WHILE_COND, entry))
+    assert counts["all-reduce"] == 1
+    assert counts["reduce-scatter"] == 1
+
+
+def test_async_start_counts_once_and_done_not_at_all():
+    body = _comp("wbody.2", [
+        "%ars = f32[8] all-reduce-start(f32[8] %p), to_apply=%add",
+        "%ard = f32[8] all-reduce-done(f32[8] %ars)",
+        "%cps = f32[8] collective-permute-start(f32[8] %ard), "
+        "source_target_pairs={{0,1}}",
+        "%cpd = f32[8] collective-permute-done(f32[8] %cps)",
+        "ROOT %out = f32[8] add(f32[8] %cpd, f32[8] %p)",
+    ])
+    entry = _comp("main", [
+        "ROOT %w = f32[8] while(f32[8] %p), condition=%wcond.1, "
+        "body=%wbody.2",
+    ], entry=True)
+    counts = while_body_collective_counts_from_text(
+        _module(body, WHILE_COND, entry))
+    assert counts["all-reduce"] == 1
+    assert counts["collective-permute"] == 1
+
+
+def test_census_split_attributes_kinds():
+    counts = {"all-reduce": 2, "reduce-scatter": 1, "all-gather": 3,
+              "all-to-all": 1, "collective-permute": 4,
+              "collective-broadcast": 0}
+    assert census_split(counts) == {"solver_reductions": 3,
+                                    "transport_ops": 8}
+    assert census_split({}) == {"solver_reductions": 0,
+                                "transport_ops": 0}
+
+
+def test_census_split_on_a_real_fused_solve():
+    """End to end on compiled HLO: a 1x1 fused CG has exactly 2 solver
+    reductions per iteration; the only transport-side op is the core-axis
+    all_gather assembling the node-local x slice (the halo-free plan
+    skips the exchange itself)."""
+    import jax.numpy as jnp
+
+    from repro.core import build_spmv_plan, to_dist
+    from repro.solvers import make_solver
+    from repro.sparse import extruded_mesh_matrix
+    from repro.util import (make_mesh_compat, while_body_collective_counts)
+
+    A = extruded_mesh_matrix(20, 3, seed=0)
+    plan, layout = build_spmv_plan(A, 1, 1)
+    solve = make_solver(plan, make_mesh_compat((1, 1), ("node", "core")))
+    b = to_dist(jnp.ones(A.n_rows), layout, plan)
+    counts = while_body_collective_counts(
+        solve.jitted, b, jnp.asarray(1e-5, jnp.float32),
+        jnp.asarray(10, jnp.int32))
+    assert census_split(counts) == {"solver_reductions": 2,
+                                    "transport_ops": 1}

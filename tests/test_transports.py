@@ -1,0 +1,316 @@
+"""The HaloTransport layer: registry, up-front validation, predicted-cost
+census, exchange round-trip properties, and the multi-device conformance
+sweep every registered transport must pass.
+
+Single-device / host-side runs are in-process; the bit-identity sweep
+spawns a fresh interpreter via ``repro.testing.transport_check`` (see
+conftest) on the 8-device mesh — every *registered* transport is compared
+against the ``a2a`` reference there, so registering a broken transport is
+a test failure, not a runtime surprise.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from conftest import run_subprocess
+from repro.core import (HaloTransport, available_transports,
+                        build_spmv_plan, get_transport, make_exchange,
+                        make_shard_body, make_spmv, pair_traffic,
+                        populated_offsets, register_transport,
+                        resolve_transport, to_dist, transport_census)
+from repro.core.transport import PairwiseTransport, autotune_transport
+from repro.solvers import make_solver
+from repro.sparse import extruded_mesh_matrix, graded_extruded_mesh_matrix
+from repro.util import make_mesh_compat
+
+
+def _mesh11():
+    return make_mesh_compat((1, 1), ("node", "core"))
+
+
+# --------------------------------------------------------------------- #
+# registry
+# --------------------------------------------------------------------- #
+def test_registry_ships_the_advertised_transports():
+    assert set(available_transports()) >= {"a2a", "ring", "pairwise",
+                                           "hier"}
+
+
+def test_unknown_transport_raises_naming_the_registered_ones():
+    with pytest.raises(ValueError, match="unknown transport.*a2a.*ring"):
+        get_transport("rdma")
+
+
+def test_duplicate_registration_rejected_and_instance_passthrough():
+    with pytest.raises(ValueError, match="already registered"):
+        register_transport(get_transport("pairwise"))
+    custom = PairwiseTransport()
+    assert get_transport(custom) is custom
+    with pytest.raises(ValueError, match="non-empty name"):
+        register_transport(HaloTransport())
+
+
+# --------------------------------------------------------------------- #
+# up-front validation: typos and incomplete state fail at build time,
+# never at trace time inside shard_map
+# --------------------------------------------------------------------- #
+def test_build_spmv_plan_validates_the_transport_stamp():
+    A = graded_extruded_mesh_matrix(20, 3, seed=0)
+    with pytest.raises(ValueError, match="unknown transport"):
+        build_spmv_plan(A, 1, 1, transport="bogus")
+    plan, _ = build_spmv_plan(A, 1, 1, transport="auto")
+    assert plan.transport == "auto"
+    # registered instances stamp their name; unregistered ones must fail
+    # here at plan build, not at the first make_spmv of the stamped name
+    plan, _ = build_spmv_plan(A, 1, 1, transport=get_transport("ring"))
+    assert plan.transport == "ring"
+
+    class Custom(PairwiseTransport):
+        name = "custom_unregistered"
+
+    with pytest.raises(ValueError, match="not registered"):
+        build_spmv_plan(A, 1, 1, transport=Custom())
+
+
+def test_deferred_auto_stamp_resolves_on_first_default_build():
+    """build_spmv_plan(transport='auto') defers the choice: the first
+    make_spmv/make_solver with the default transport must autotune and
+    stamp, not crash on the literal 'auto' stamp."""
+    A = graded_extruded_mesh_matrix(20, 3, seed=0)
+    b = np.random.default_rng(0).normal(size=A.n_rows)
+    plan, layout = build_spmv_plan(A, 1, 1, transport="auto")
+    spmv = make_spmv(plan, _mesh11())            # transport=None (default)
+    assert plan.transport in available_transports()
+    assert spmv.transport == plan.transport
+    plan2, _ = build_spmv_plan(A, 1, 1, transport="auto")
+    solve = make_solver(plan2, _mesh11())
+    assert solve.transport == plan2.transport in available_transports()
+    xd, it, rel = solve(to_dist(b, layout, plan2), tol=1e-5, maxiter=1000)
+    assert int(it) < 1000
+
+
+def test_make_spmv_and_make_solver_reject_unknown_transport():
+    A = graded_extruded_mesh_matrix(20, 3, seed=0)
+    plan, layout = build_spmv_plan(A, 1, 1)
+    with pytest.raises(ValueError, match="unknown transport.*pairwise"):
+        make_spmv(plan, _mesh11(), transport="bogus")
+    with pytest.raises(ValueError, match="unknown transport"):
+        make_solver(plan, _mesh11(), transport="bogus")
+
+
+@pytest.mark.parametrize("transport", ["ring", "pairwise"])
+def test_incomplete_neighbor_offsets_rejected_up_front(transport):
+    # host-side plan build needs no devices: 4-node graded plan has
+    # populated offsets {1, 2, 3}; overriding with a partial list must
+    # fail at build time (it would silently drop halo traffic)
+    A = graded_extruded_mesh_matrix(40, 6, seed=0)
+    plan, layout = build_spmv_plan(A, 4, 2, mode="balanced")
+    assert len(layout["neighbor_offsets"]) > 1
+    with pytest.raises(ValueError, match="miss populated"):
+        make_shard_body(plan, transport=transport, neighbor_offsets=[1])
+    with pytest.raises(ValueError, match="needs neighbor_offsets"):
+        make_shard_body(plan, transport=transport, neighbor_offsets=[])
+
+
+def test_pairwise_pairs_follow_an_offsets_override():
+    """A complete (superset) neighbor_offsets override must actually
+    reach pairwise's ppermute schedule, not be silently ignored."""
+    A = graded_extruded_mesh_matrix(40, 6, seed=0)
+    plan, layout = build_spmv_plan(A, 4, 2, mode="balanced")
+    full = layout["neighbor_offsets"]
+    # offset 5 on 4 nodes aliases offset 1: it must be normalised away,
+    # not scheduled as a duplicate hop
+    _, state = resolve_transport("pairwise", plan,
+                                 neighbor_offsets=full + [5])
+    assert state["neighbor_offsets"] == full
+    _, base = resolve_transport("pairwise", plan)
+    assert state["pairs_by_offset"] == base["pairs_by_offset"]
+    assert sorted(state["pairs_by_offset"]) == full
+
+
+def test_make_shard_body_rejects_auto():
+    A = graded_extruded_mesh_matrix(20, 3, seed=0)
+    plan, _ = build_spmv_plan(A, 1, 1)
+    with pytest.raises(ValueError, match="auto.*resolved by make_spmv"):
+        make_shard_body(plan, transport="auto")
+
+
+def test_make_exchange_rejects_halo_free_plans():
+    A = graded_extruded_mesh_matrix(20, 3, seed=0)
+    plan, _ = build_spmv_plan(A, 1, 1)
+    assert plan.hs == 0
+    with pytest.raises(ValueError, match="no halo traffic"):
+        make_exchange(plan, _mesh11())
+
+
+# --------------------------------------------------------------------- #
+# static plan state + predicted cost (host-side, no devices needed)
+# --------------------------------------------------------------------- #
+def test_transports_derive_neighbour_structure_from_plan_arrays():
+    A = graded_extruded_mesh_matrix(40, 6, seed=0)
+    plan, layout = build_spmv_plan(A, 4, 2, mode="balanced")
+    traffic = pair_traffic(np.asarray(plan.recv_own), plan.g_pad)
+    # matches the layout's ghost-ownership bincount exactly
+    np.testing.assert_array_equal(traffic, layout["pair_counts"] > 0)
+    assert populated_offsets(traffic) == layout["neighbor_offsets"]
+    _, state = resolve_transport("ring", plan)
+    assert state["neighbor_offsets"] == layout["neighbor_offsets"]
+    _, pstate = resolve_transport("pairwise", plan)
+    for d, pairs in pstate["pairs_by_offset"].items():
+        for src, dst in pairs:
+            assert (dst - src) % plan.n_node == d and traffic[dst, src]
+
+
+def test_predicted_cost_census_regimes():
+    """pairwise never pays more wire than ring, ring never more than the
+    offset count says, and the halo-free plan costs nothing anywhere."""
+    A = extruded_mesh_matrix(64, 4, seed=1)      # banded: sparse stencil
+    plan, layout = build_spmv_plan(A, 4, 2, mode="task")
+    census = layout["transport_census"]
+    assert set(census) == set(available_transports())
+    for name, cost in census.items():
+        assert cost["wire_bytes"] >= 0 and cost["all-to-all"] in (0, 1)
+    assert census["pairwise"]["wire_bytes"] <= census["ring"]["wire_bytes"]
+    assert census["ring"]["collective-permute"] == \
+        len(layout["neighbor_offsets"])
+    # banded matrix: not every pair communicates, so pairwise beats a2a
+    assert census["pairwise"]["wire_bytes"] < census["a2a"]["wire_bytes"]
+
+    plan0, layout0 = build_spmv_plan(A, 1, 2)
+    for cost in layout0["transport_census"].values():
+        assert cost["wire_bytes"] == 0
+        assert cost["all-to-all"] == 0 and cost["collective-permute"] == 0
+
+
+def test_census_matches_transport_predicted_cost():
+    A = graded_extruded_mesh_matrix(40, 6, seed=0)
+    plan, layout = build_spmv_plan(A, 4, 2, mode="balanced")
+    for name in available_transports():
+        tr, state = resolve_transport(name, plan)
+        assert layout["transport_census"][name] == \
+            tr.predicted_cost(plan, state)
+
+
+# --------------------------------------------------------------------- #
+# exchange round-trip property: every ghost slot receives exactly its
+# owner's value, pad slots stay untouched — for every registered
+# transport, over random graded matrices (host numpy reference, which
+# the multi-device sweep below verifies bit-for-bit against the device)
+# --------------------------------------------------------------------- #
+@settings(max_examples=10, deadline=None)
+@given(n_surface=st.integers(6, 24), layers=st.integers(2, 4),
+       n_node=st.integers(2, 4), n_core=st.integers(1, 2),
+       seed=st.integers(0, 5))
+def test_exchange_roundtrip_property(n_surface, layers, n_node, n_core,
+                                     seed):
+    A = graded_extruded_mesh_matrix(n_surface, layers, seed=seed)
+    plan, layout = build_spmv_plan(A, n_node, n_core, mode="balanced")
+    halo, g = layout["halo"], plan.g_pad
+    x = np.random.default_rng(seed).normal(size=A.n_rows)
+    xd = np.asarray(to_dist(x, layout, plan))
+    send_own = np.asarray(plan.send_own)
+    recv_own = np.asarray(plan.recv_own)
+    for name in available_transports():
+        tr, state = resolve_transport(name, plan)
+        ghost = tr.host_exchange(xd, send_own, recv_own, g, state)
+        assert ghost.shape == (n_node, n_core, g + 1)
+        for dst in range(n_node):
+            cols = np.asarray(halo.ghost_cols[dst], dtype=np.int64)
+            # slot j of node dst's ghost buffer is its j-th (sorted)
+            # ghost column; the value must be the owner's bits exactly
+            owner = np.searchsorted(layout["node_bounds"], cols,
+                                    side="right") - 1
+            grow = layout["global_row_of"]
+            for c in range(n_core):
+                for j, (col, ow) in enumerate(zip(cols, owner)):
+                    oc, sl = np.argwhere(grow[ow] == col)[0]
+                    assert ghost[dst, c, j] == xd[ow, oc, sl], (name, dst)
+                # pad slots past the real ghost count stay exactly zero
+                assert np.all(ghost[dst, c, len(cols):g] == 0.0), name
+
+
+# --------------------------------------------------------------------- #
+# autotuner
+# --------------------------------------------------------------------- #
+def test_autotune_stamps_halo_free_plans_without_timing():
+    A = graded_extruded_mesh_matrix(20, 3, seed=0)
+    plan, layout = build_spmv_plan(A, 1, 1, transport="auto")
+    res = autotune_transport(plan, _mesh11())
+    assert res.winner == "a2a" and plan.transport == "a2a"
+    x = to_dist(np.random.default_rng(0).normal(size=A.n_rows), layout,
+                plan)
+    np.testing.assert_array_equal(
+        np.asarray(res.spmv(x)),
+        np.asarray(make_spmv(plan, _mesh11(), transport="a2a")(x)))
+
+
+def test_make_spmv_follows_the_plan_stamp():
+    A = graded_extruded_mesh_matrix(20, 3, seed=0)
+    plan, _ = build_spmv_plan(A, 1, 1, transport="ring")
+    assert make_spmv(plan, _mesh11()).transport == "ring"
+    assert make_spmv(plan, _mesh11(), transport="pairwise").transport == \
+        "pairwise"
+
+
+# --------------------------------------------------------------------- #
+# multi-device conformance sweep (8 devices, via subprocess): every
+# registered transport must produce bit-identical ghost buffers and SpMV
+# results vs the a2a reference, and match its own numpy host reference
+# --------------------------------------------------------------------- #
+CONFORMANCE_CASES = ("graded", "uniform", "single", "dense", "halofree")
+
+
+@pytest.mark.parametrize("case", CONFORMANCE_CASES)
+def test_multidevice_transport_conformance(case):
+    r = run_subprocess(["-m", "repro.testing.transport_check",
+                        "--n-node", "4", "--n-core", "2", "--case", case])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout and "BAD" not in r.stdout
+    for name in available_transports():
+        assert f"TRANSPORT {name}" in r.stdout, (name, r.stdout)
+
+
+def test_multidevice_conformance_pallas_and_autotune():
+    r = run_subprocess(["-m", "repro.testing.transport_check",
+                        "--n-node", "4", "--n-core", "2",
+                        "--case", "graded", "--formats", "sell",
+                        "--backends", "jnp,pallas", "--autotune"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout and "BAD" not in r.stdout
+    assert "AUTOTUNE winner=" in r.stdout
+
+
+def test_multidevice_nonuniform_bounds_single_core_axis():
+    """Transports crossed with a pure-'MPI' mesh (8x1: no core axis
+    assembly) on the non-uniform two-level node split."""
+    r = run_subprocess(["-m", "repro.testing.transport_check",
+                        "--n-node", "8", "--n-core", "1",
+                        "--case", "graded", "--formats", "ell"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout and "BAD" not in r.stdout
+
+
+# --------------------------------------------------------------------- #
+# multi-device solver oracle: the new transports and the autotuner must
+# pass the numpy f64 host-CG oracle end to end (dist_check)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("transport", ["pairwise", "hier"])
+def test_multidevice_all_solvers_vs_host_oracle_new_transports(transport):
+    r = run_subprocess(["-m", "repro.testing.dist_check",
+                        "--n-node", "4", "--n-core", "2",
+                        "--mode", "balanced", "--format", "sell",
+                        "--transport", transport,
+                        "--solver", "all", "--precond", "jacobi",
+                        "--n-surface", "40", "--layers", "4"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_multidevice_auto_transport_fused_cg_vs_oracle():
+    r = run_subprocess(["-m", "repro.testing.dist_check",
+                        "--n-node", "4", "--n-core", "2",
+                        "--mode", "balanced", "--transport", "auto",
+                        "--matrix", "graded", "--node-partition", "nnz",
+                        "--n-surface", "40", "--layers", "6", "--fused"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
