@@ -1,0 +1,117 @@
+"""Append one ``bench_spmv`` result to the committed bench trajectory.
+
+``BENCH_spmv.json`` (repo root) is **append-only JSON Lines**: one entry
+per PR, each stamping the commit it was measured at, so perf regressions
+are visible in review as a one-line diff instead of a CI artifact nobody
+opens.  The file is never rewritten — this tool refuses to run if the
+existing lines don't parse, refuses to duplicate a commit, and only ever
+opens the file in append mode.
+
+Usage (the CI bench-smoke job pipes the sweep straight through)::
+
+    PYTHONPATH=src python -m repro.testing.bench_spmv ... \
+        | python benchmarks/append_bench.py --label pr6
+
+    python benchmarks/append_bench.py --from-file bench-smoke/BENCH_spmv.json
+
+Timings are host-dependent by nature; the point of the trajectory is the
+*shape* over PRs on the one pinned CI runner class, plus the
+machine-independent columns (wire bytes, collective counts, iteration
+counts) which must never regress silently.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+TRAJECTORY = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_spmv.json")
+
+#: volatile / bulky keys dropped from the stored entry (full JSON stays
+#: available as the per-commit CI artifact)
+DROP = ("t_gen_s", "t_plan_s", "collectives")
+
+
+def current_commit() -> str:
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        return subprocess.run(["git", "rev-parse", "HEAD"],
+                              capture_output=True, text=True,
+                              check=True).stdout.strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def read_trajectory(path: str) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    entries = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            if not line.strip():
+                continue
+            try:
+                entries.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise SystemExit(
+                    f"{path}:{i + 1}: unparseable trajectory line ({e}) — "
+                    "the trajectory is append-only; fix the file by "
+                    "reverting it, never by rewriting entries")
+    return entries
+
+
+def trim(bench: dict) -> dict:
+    out = {k: v for k, v in bench.items() if k not in DROP}
+    if "transports" in out:
+        out["transports"] = {
+            name: {k: v for k, v in t.items() if k != "collectives"}
+            for name, t in out["transports"].items()}
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="append a bench_spmv JSON result to BENCH_spmv.json")
+    ap.add_argument("--file", default=TRAJECTORY,
+                    help="trajectory file (default: repo-root "
+                         "BENCH_spmv.json)")
+    ap.add_argument("--from-file", default=None,
+                    help="read the bench JSON from this file instead of "
+                         "stdin (last line wins, as bench_spmv prints "
+                         "one dict last)")
+    ap.add_argument("--label", default=None,
+                    help="free-form entry label, e.g. 'pr6'")
+    ap.add_argument("--commit", default=None,
+                    help="override the commit stamp (default: GITHUB_SHA "
+                         "or git rev-parse HEAD)")
+    args = ap.parse_args()
+
+    raw = (open(args.from_file).read() if args.from_file
+           else sys.stdin.read())
+    lines = [ln for ln in raw.strip().splitlines() if ln.strip()]
+    if not lines:
+        raise SystemExit("no bench JSON on input")
+    bench = json.loads(lines[-1])
+
+    entries = read_trajectory(args.file)
+    commit = args.commit or current_commit()
+    if any(e.get("commit") == commit for e in entries):
+        print(f"trajectory already has an entry for {commit[:12]} — "
+              "skipping (append-only, one entry per commit)")
+        return 0
+
+    rec = {"entry": len(entries), "commit": commit,
+           "bench": trim(bench)}
+    if args.label:
+        rec["label"] = args.label
+    with open(args.file, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(f"appended entry {rec['entry']} @ {commit[:12]} to {args.file}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

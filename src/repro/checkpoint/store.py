@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 
@@ -23,6 +24,20 @@ __all__ = ["save", "load", "latest_step", "AsyncSaver"]
 
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
+#: a completed checkpoint directory: step_<digits>, nothing else.  Stray
+#: entries (editor droppings, half-renamed tmp dirs, unrelated files) must
+#: never crash discovery — they are simply not checkpoints.
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _step_entries(path: str) -> list[int]:
+    """Step numbers of the well-formed checkpoint dirs under ``path``."""
+    out = []
+    for n in os.listdir(path):
+        m = _STEP_RE.match(n)
+        if m and os.path.isdir(os.path.join(path, n)):
+            out.append(int(m.group(1)))
+    return sorted(out)
 
 
 def _flatten(tree):
@@ -49,6 +64,12 @@ def save(path: str, step: int, tree, extra: dict | None = None) -> str:
     }
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
+        # the rename below is the commit point: the manifest must be
+        # durable *before* the directory becomes visible under its final
+        # name, or a crash can leave a "complete" checkpoint with a
+        # truncated manifest
+        f.flush()
+        os.fsync(f.fileno())
     if os.path.exists(d):
         shutil.rmtree(d)
     os.rename(tmp, d)
@@ -58,9 +79,8 @@ def save(path: str, step: int, tree, extra: dict | None = None) -> str:
 def latest_step(path: str) -> int | None:
     if not os.path.isdir(path):
         return None
-    steps = [int(n.split("_")[1]) for n in os.listdir(path)
-             if n.startswith("step_") and not n.endswith(".tmp")]
-    return max(steps) if steps else None
+    steps = _step_entries(path)
+    return steps[-1] if steps else None
 
 
 def load(path: str, step: int, like, shardings=None):
@@ -72,16 +92,28 @@ def load(path: str, step: int, like, shardings=None):
         manifest = json.load(f)
     data = np.load(os.path.join(d, _ARRAYS))
     leaves_like, treedef = _flatten(like)
-    assert manifest["n_leaves"] == len(leaves_like), \
-        (manifest["n_leaves"], len(leaves_like))
+    # verify the tree *structure*, not just the leaf count — two different
+    # pytrees can flatten to the same number of leaves, and unflattening
+    # the checkpoint into the wrong structure silently permutes arrays
+    if manifest.get("treedef") != str(treedef):
+        raise ValueError(
+            f"checkpoint {d} tree structure does not match the restore "
+            f"target:\n  checkpoint: {manifest.get('treedef')}\n"
+            f"  target:     {treedef}")
+    if manifest["n_leaves"] != len(leaves_like):
+        raise ValueError(
+            f"checkpoint {d} has {manifest['n_leaves']} leaves, restore "
+            f"target has {len(leaves_like)}")
     new_leaves = []
     shard_leaves = (jax.tree_util.tree_flatten(
         shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))[0]
         if shardings is not None else [None] * len(leaves_like))
     for i, (ref, shd) in enumerate(zip(leaves_like, shard_leaves)):
         arr = data[f"leaf_{i}"]
-        assert tuple(arr.shape) == tuple(ref.shape), \
-            f"leaf {i}: ckpt {arr.shape} vs model {ref.shape}"
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"checkpoint {d} leaf {i}: saved shape {tuple(arr.shape)} "
+                f"vs restore-target shape {tuple(ref.shape)}")
         arr = arr.astype(ref.dtype)
         new_leaves.append(jax.device_put(arr, shd) if shd is not None
                           else jax.device_put(arr))
@@ -113,8 +145,7 @@ class AsyncSaver:
         self._gc()
 
     def _gc(self):
-        steps = sorted(int(n.split("_")[1]) for n in os.listdir(self.path)
-                       if n.startswith("step_") and not n.endswith(".tmp"))
+        steps = _step_entries(self.path)
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.path, f"step_{s:09d}"),
                           ignore_errors=True)

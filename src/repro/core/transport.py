@@ -76,7 +76,8 @@ import numpy as np
 from repro.core.halo import pair_traffic, populated_offsets
 
 __all__ = ["HaloTransport", "A2ATransport", "RingTransport",
-           "PairwiseTransport", "HierTransport", "register_transport",
+           "PairwiseTransport", "HierTransport", "FaultyTransport",
+           "register_transport", "unregister_transport",
            "get_transport", "available_transports", "resolve_transport",
            "transport_census", "AutotuneResult", "autotune_transport",
            "make_exchange"]
@@ -399,6 +400,72 @@ class HierTransport(HaloTransport):
 
 
 # --------------------------------------------------------------------- #
+# faulty — a corrupting wrapper for resilience testing
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class FaultyTransport(HaloTransport):
+    """Delegating wrapper that XORs an exponent bit into every word of the
+    device exchange's ghost payload — deterministic transport-level
+    corruption (``repro.runtime.fault.FaultInjector`` kind ``bitflip``).
+
+    The whole payload is hit (rather than the single word a physical
+    soft-error would flip) so detection never depends on which halo rows
+    happen to carry signal: a single corrupted slot whose value is exactly
+    0.0 turns into a quiet ±2.0, which a convergence guard can legitimately
+    absorb — a test fixture must corrupt loudly and deterministically, and
+    any nonzero halo entry blown up by ~2^128 guarantees that.
+
+    ``host_exchange`` delegates *uncorrupted*: the numpy reference stays
+    the truth, so the PR 5 conformance harness
+    (``repro.testing.transport_check --include-faulty``) must FAIL this
+    transport on both the ghost bit-identity and the SpMV comparison —
+    proving the harness actually catches payload corruption rather than
+    vacuously passing whatever a transport emits.
+
+    Deliberately **not** registered at import time: every registered
+    transport is swept by the conformance tests, and this one exists to
+    fail them.  Tests register it temporarily (``register_transport`` /
+    ``unregister_transport``) or pass the instance directly — the
+    resilient driver's bitflip injection uses an instance, never the
+    registry.
+    """
+
+    name = "faulty"
+    base: HaloTransport = dataclasses.field(default_factory=A2ATransport)
+    #: f32 bit to XOR — bit 30 is the top exponent bit, so the corrupted
+    #: value is wrong by ~2^128: loud, finite-or-inf, never a silent ulp
+    bit: int = 30
+
+    def plan_state(self, plan):
+        return self.base.plan_state(plan)
+
+    def extra_arrays(self, plan, state):
+        return self.base.extra_arrays(plan, state)
+
+    def finalize_state(self, plan, state):
+        return self.base.finalize_state(plan, state)
+
+    def validate(self, plan, state):
+        self.base.validate(plan, state)
+
+    def exchange(self, x_mine, F, *, state, axes, n_node, g_pad):
+        ghost = self.base.exchange(x_mine, F, state=state, axes=axes,
+                                   n_node=n_node, g_pad=g_pad)
+        if g_pad == 0:          # halo-free: nothing real to corrupt
+            return ghost
+        bits = jax.lax.bitcast_convert_type(ghost, jnp.uint32)
+        return jax.lax.bitcast_convert_type(bits ^ jnp.uint32(1 << self.bit),
+                                            ghost.dtype)
+
+    def host_exchange(self, xd, send_own, recv_own, g_pad, state):
+        # uncorrupted on purpose — see the class docstring
+        return self.base.host_exchange(xd, send_own, recv_own, g_pad, state)
+
+    def predicted_cost(self, plan, state, itemsize=4):
+        return self.base.predicted_cost(plan, state, itemsize=itemsize)
+
+
+# --------------------------------------------------------------------- #
 # registry
 # --------------------------------------------------------------------- #
 _TRANSPORTS: dict[str, HaloTransport] = {}
@@ -421,6 +488,18 @@ def register_transport(transport: HaloTransport,
                          "registered (pass overwrite=True to replace it)")
     _TRANSPORTS[transport.name] = transport
     return transport
+
+
+def unregister_transport(name: str) -> HaloTransport:
+    """Remove and return a registered transport — the cleanup half of a
+    temporary registration (tests register ``faulty`` only inside the
+    harness-must-fail check, so the ordinary conformance sweep never sees
+    it)."""
+    try:
+        return _TRANSPORTS.pop(name)
+    except KeyError:
+        raise ValueError(f"unknown transport {name!r}; registered: "
+                         f"{available_transports()}") from None
 
 
 def get_transport(transport: str | HaloTransport) -> HaloTransport:

@@ -17,6 +17,8 @@ from repro.solvers.precond import (BlockJacobiPrecond, JacobiPrecond,
                                    NonePrecond, Preconditioner,
                                    available_preconds, get_precond,
                                    jacobi_inverse, register_precond)
+from repro.solvers.resilient import (ResilientResult, SolveFailure,
+                                     make_resilient, resilient_solve)
 
 __all__ = [
     "Solver", "SolverCtx", "register_solver", "get_solver",
@@ -27,4 +29,5 @@ __all__ = [
     "Preconditioner", "NonePrecond", "JacobiPrecond", "BlockJacobiPrecond",
     "register_precond", "get_precond", "available_preconds",
     "jacobi_inverse",
+    "resilient_solve", "make_resilient", "ResilientResult", "SolveFailure",
 ]

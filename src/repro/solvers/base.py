@@ -107,12 +107,59 @@ class SolverCtx:
 class Solver:
     """Interface of a registered Krylov solver.
 
-    Subclasses set ``name`` and implement ``shard_loop``; ``prepare`` runs
-    once on the host at build time and may derive static options from the
-    matrix (Chebyshev uses it to estimate eigenvalue bounds).
+    Subclasses set ``name`` and implement the **loop hooks** below;
+    ``prepare`` runs once on the host at build time and may derive static
+    options from the matrix (Chebyshev uses it to estimate eigenvalue
+    bounds).
+
+    The iteration is split into hooks instead of one opaque while loop so
+    the same solver runs under two execution regimes:
+
+      * **monolithic** — :meth:`shard_loop` (the ``make_solver`` path)
+        composes ``loop_setup`` + ``lax.while_loop(loop_cond, loop_body)``
+        + ``loop_finish`` into the historical single fused loop;
+      * **chunked** — the resilient driver
+        (``repro.solvers.resilient``) runs the *same* ``loop_cond`` /
+        ``loop_body`` in bounded chunks of ``check_every`` iterations,
+        with the loop state a named dict that crosses the shard_map
+        boundary between chunks.  Because the per-iteration ops are
+        identical, the chunked iterates match the monolithic ones and the
+        while-body collective census is unchanged.
+
+    State contract: the loop state is a ``dict[str, jax.Array]``;
+    :meth:`state_kinds` declares each entry as ``"vector"`` (``(nrhs,
+    rc_pad)`` per shard — sharded over the mesh outside the loop) or
+    ``"scalar"`` (per-RHS ``(nrhs,)`` or plain ``()`` — replicated).
+    Every state dict must carry ``"x"`` (the iterate) and ``"k"`` (per-RHS
+    iteration count, int32).
+
+    Restartability: :meth:`loop_restart` rebuilds a valid state from an
+    arbitrary iterate ``x`` with a **true-residual recompute** (r = b −
+    Ax) and a reset recurrence chain — the β-chain reset idiom pipelined
+    CG already uses for drift control.  It is the single recovery
+    primitive behind cold start (``x = 0``), rollback after corruption,
+    and elastic restore onto a different mesh/partition/format/transport.
+
+    Layout independence: :meth:`state_to_global` /
+    :meth:`state_from_global` convert the checkpointable part of the
+    state between the plan's distributed layout and global row ordering,
+    riding the existing ``to_dist``/``from_dist`` machinery.  The default
+    persists the iterate alone — exactly what ``loop_restart`` needs —
+    so a checkpoint written under one (mesh, partition, format,
+    transport) restores under any other.
     """
 
     name: str = ""
+    #: :meth:`guard_scalars` keys that must stay strictly positive while
+    #: the solve is healthy (SPD breakdown detection: CG's rz and p·Ap).
+    positive_scalars: tuple[str, ...] = ()
+    #: whether a flat true-residual trajectory is a corruption signal the
+    #: resilient guard should roll back on.  Residual-driven solvers stop
+    #: when converged, so chunks that stop improving mean the solve is
+    #: stuck; a-priori-budget methods (Chebyshev) legitimately idle at
+    #: their attainable floor for the rest of the budget — they set this
+    #: False and rely on the nonfinite/diverged probe checks alone.
+    stagnation_guard: bool = True
 
     def prepare(self, plan, precond: Preconditioner,
                 pdata: dict, A=None, layout=None,
@@ -120,14 +167,79 @@ class Solver:
         """Resolve static solve options on the host.  Default: passthrough."""
         return dict(options or {})
 
+    # -- the chunked-execution loop hooks ------------------------------- #
+    def state_kinds(self) -> dict[str, str]:
+        """``{state key: "vector" | "scalar"}`` — the loop-state layout."""
+        raise NotImplementedError(
+            f"solver {self.name!r} does not implement the chunked-loop "
+            "protocol (state_kinds)")
+
+    def loop_aux(self, ctx: SolverCtx, b: jax.Array, tol: jax.Array,
+                 maxiter: jax.Array) -> dict:
+        """Derived per-solve values (tolerances, caps, bounds) recomputed
+        at every chunk entry.  Must be cheap and deterministic — it runs
+        once per chunk, outside the while body."""
+        raise NotImplementedError
+
+    def loop_setup(self, ctx: SolverCtx, b, tol, maxiter):
+        """Monolithic entry: ``(aux, initial state)`` — may fuse the aux
+        and init reductions (the historical pre-loop code path)."""
+        raise NotImplementedError
+
+    def loop_restart(self, ctx: SolverCtx, aux: dict, b, x, k) -> dict:
+        """State continuing from iterate ``x`` at iteration count ``k``:
+        true-residual recompute + recurrence-chain reset (0 extra
+        collectives beyond the SpMV and the re-derived dots)."""
+        raise NotImplementedError
+
+    def loop_cond(self, ctx: SolverCtx, aux: dict, state: dict):
+        """Replicated scalar: any RHS still iterating?"""
+        raise NotImplementedError
+
+    def loop_body(self, ctx: SolverCtx, aux: dict, state: dict) -> dict:
+        """One iteration on the state dict (the while-loop body)."""
+        raise NotImplementedError
+
+    def loop_finish(self, ctx: SolverCtx, aux: dict, state: dict):
+        """``(x, iters, rel)`` from a final state."""
+        raise NotImplementedError
+
+    def guard_scalars(self, state: dict) -> dict:
+        """The state scalars a host-side guard can check between chunks
+        (finite? positive where SPD demands it?).  Keys are
+        solver-specific; ``{}`` for residual-free recurrences (Chebyshev)
+        whose corruption only the driver's true-residual recompute can
+        see."""
+        return {}
+
+    # -- layout-independent checkpoint state ---------------------------- #
+    def state_to_global(self, state_host: dict, layout: dict, plan) -> dict:
+        """Host state -> layout-independent checkpoint payload (global row
+        ordering).  Default: the iterate ``x`` alone, via ``from_dist``."""
+        return {"x": from_dist_batch(state_host["x"], layout, plan)}
+
+    def state_from_global(self, gstate: dict, layout: dict, plan,
+                          dtype=None) -> jax.Array:
+        """Checkpoint payload -> the iterate in the (possibly different)
+        plan's distributed layout, ready for :meth:`loop_restart`."""
+        import numpy as np
+        return to_dist_batch(np.atleast_2d(np.asarray(gstate["x"])),
+                             layout, plan, dtype=dtype)
+
+    # -- the monolithic composition (the make_solver path) -------------- #
     def shard_loop(self, ctx: SolverCtx, b: jax.Array, tol: jax.Array,
                    maxiter: jax.Array):
         """Run the iteration on ``(nrhs, rc_pad)`` shards.
 
         Returns ``(x, iters, rel)`` with ``x`` shaped like ``b`` and
         ``iters``/``rel`` per-RHS ``(nrhs,)`` (replicated across shards).
+        Default: compose the loop hooks into one fused ``while_loop``.
         """
-        raise NotImplementedError
+        aux, state = self.loop_setup(ctx, b, tol, maxiter)
+        state = jax.lax.while_loop(
+            lambda s: self.loop_cond(ctx, aux, s),
+            lambda s: self.loop_body(ctx, aux, s), state)
+        return self.loop_finish(ctx, aux, state)
 
 
 _SOLVERS: dict[str, Solver] = {}

@@ -25,6 +25,15 @@ All three run on ``(nrhs, rc_pad)`` batches with per-RHS freezing (see
 ``repro.solvers.base``): a converged column's state is carried through
 bit-unchanged while the rest iterate, so batched solves equal sequential
 ones exactly.
+
+All three implement the chunked-loop hook protocol (``loop_aux`` /
+``loop_restart`` / ``loop_cond`` / ``loop_body`` / ``loop_finish``), so the
+resilient driver (``repro.solvers.resilient``) can run them in bounded
+chunks, checkpoint their state, and restart them from an arbitrary iterate.
+The monolithic ``make_solver`` path composes the same hooks into one fused
+``while_loop`` (``Solver.shard_loop``), so the two regimes share every
+per-iteration op — and the per-iteration collective census (§9) is
+identical under both.
 """
 from __future__ import annotations
 
@@ -48,43 +57,78 @@ def _gate(active, new, old):
 
 
 class CGSolver(Solver):
-    """Preconditioned CG, the fused PR 1 loop (2 scalar psums/iteration)."""
+    """Preconditioned CG, the fused PR 1 loop (2 scalar psums/iteration).
+
+    Chunked-loop state adds ``pap`` — the last p·Ap denominator, carried
+    out of the psum the iteration already pays for — so the host guard
+    can flag SPD breakdown (p·Ap ≤ 0 or r·z ≤ 0) with **zero** extra
+    collectives inside the while body.
+    """
 
     name = "cg"
+    positive_scalars = ("rz", "pap")
 
-    def shard_loop(self, ctx: SolverCtx, b, tol, maxiter):
-        axes = ctx.axes
+    def state_kinds(self):
+        return {"k": "scalar", "x": "vector", "r": "vector", "p": "vector",
+                "rz": "scalar", "rr": "scalar", "pap": "scalar"}
+
+    def loop_aux(self, ctx: SolverCtx, b, tol, maxiter):
+        cap = jnp.minimum(maxiter, ctx.maxiter_static)
+        bnorm = jnp.sqrt(pdot(ctx.axes, b, b))
+        tol2 = (tol * jnp.maximum(bnorm, 1e-30)) ** 2
+        return {"cap": cap, "bnorm": bnorm, "tol2": tol2}
+
+    def loop_setup(self, ctx: SolverCtx, b, tol, maxiter):
         cap = jnp.minimum(maxiter, ctx.maxiter_static)
         z0 = ctx.precond(b)
-        s0 = pdot_stack(axes, (b, b), (b, z0))   # [b·b, r0·z0] in one psum
+        s0 = pdot_stack(ctx.axes, (b, b), (b, z0))  # [b·b, r0·z0], one psum
         bnorm = jnp.sqrt(s0[0])
         tol2 = (tol * jnp.maximum(bnorm, 1e-30)) ** 2
-
-        def cond(state):
-            k, _, _, _, _, rr = state
-            return jnp.any((k < cap) & (rr > tol2))
-
-        def body(state):
-            k, x, r, p, rz, rr = state
-            active = (k < cap) & (rr > tol2)
-            ap = ctx.spmv(p)                     # a2a + 2 core gathers
-            alpha = rz / pdot(axes, p, ap)       # psum 1
-            x = _gate(active, x + alpha[:, None] * p, x)
-            r = _gate(active, r - alpha[:, None] * ap, r)
-            z = ctx.precond(r)
-            s = pdot_stack(axes, (r, z), (r, r))  # psum 2: [r·z, r·r]
-            beta = s[0] / rz
-            p = _gate(active, z + beta[:, None] * p, p)
-            rz = _gate(active, s[0], rz)
-            rr = _gate(active, s[1], rr)
-            return (k + active.astype(k.dtype), x, r, p, rz, rr)
-
+        aux = {"cap": cap, "bnorm": bnorm, "tol2": tol2}
         nrhs = b.shape[0]
-        state = (jnp.zeros((nrhs,), jnp.int32), jnp.zeros_like(b), b, z0,
-                 s0[1], s0[0])
-        k, x, r, p, rz, rr = jax.lax.while_loop(cond, body, state)
-        rel = jnp.sqrt(rr) / jnp.maximum(bnorm, 1e-30)
-        return x, k, rel
+        state = {"k": jnp.zeros((nrhs,), jnp.int32), "x": jnp.zeros_like(b),
+                 "r": b, "p": z0, "rz": s0[1], "rr": s0[0],
+                 "pap": jnp.ones_like(s0[0])}
+        return aux, state
+
+    def loop_restart(self, ctx: SolverCtx, aux, b, x, k):
+        # true-residual recompute + fresh direction (β-chain reset):
+        # r = b − Ax, p = z = M⁻¹r.  From x = 0 this reproduces loop_setup
+        # bit-for-bit (A·0 is exactly 0), so cold start, rollback, and
+        # elastic resume are one code path.
+        r = b - ctx.spmv(x)
+        z = ctx.precond(r)
+        s = pdot_stack(ctx.axes, (r, z), (r, r))
+        return {"k": k, "x": x, "r": r, "p": z, "rz": s[0], "rr": s[1],
+                "pap": jnp.ones_like(s[0])}
+
+    def loop_cond(self, ctx: SolverCtx, aux, state):
+        return jnp.any((state["k"] < aux["cap"])
+                       & (state["rr"] > aux["tol2"]))
+
+    def loop_body(self, ctx: SolverCtx, aux, state):
+        k, x, r, p = state["k"], state["x"], state["r"], state["p"]
+        rz, rr = state["rz"], state["rr"]
+        active = (k < aux["cap"]) & (rr > aux["tol2"])
+        ap = ctx.spmv(p)                     # a2a + 2 core gathers
+        den = pdot(ctx.axes, p, ap)          # psum 1
+        alpha = rz / den
+        x = _gate(active, x + alpha[:, None] * p, x)
+        r = _gate(active, r - alpha[:, None] * ap, r)
+        z = ctx.precond(r)
+        s = pdot_stack(ctx.axes, (r, z), (r, r))  # psum 2: [r·z, r·r]
+        beta = s[0] / rz
+        p = _gate(active, z + beta[:, None] * p, p)
+        return {"k": k + active.astype(k.dtype), "x": x, "r": r, "p": p,
+                "rz": _gate(active, s[0], rz), "rr": _gate(active, s[1], rr),
+                "pap": _gate(active, den, state["pap"])}
+
+    def loop_finish(self, ctx: SolverCtx, aux, state):
+        rel = jnp.sqrt(state["rr"]) / jnp.maximum(aux["bnorm"], 1e-30)
+        return state["x"], state["k"], rel
+
+    def guard_scalars(self, state):
+        return {"rr": state["rr"], "rz": state["rz"], "pap": state["pap"]}
 
 
 class PipelinedCGSolver(Solver):
@@ -116,25 +160,73 @@ class PipelinedCGSolver(Solver):
     (~2× plain CG when the restart interval truncates the Krylov space);
     the restart interval must exceed the Krylov dimension the spectrum
     needs per segment — don't set it below ~25.
+
+    ``loop_restart`` (the resilience entry point) is the same recovery
+    idiom made external: γ_prev := +inf zeroes the next β, so the step
+    after a rollback or elastic resume is a fresh first iteration from the
+    restored x.
     """
 
     name = "pipelined_cg"
 
-    def shard_loop(self, ctx: SolverCtx, b, tol, maxiter):
-        axes = ctx.axes
+    def state_kinds(self):
+        return {"t": "scalar", "k": "scalar",
+                "x": "vector", "r": "vector", "u": "vector", "w": "vector",
+                "z": "vector", "q": "vector", "s": "vector", "p": "vector",
+                "g_prev": "scalar", "a_prev": "scalar", "rr": "scalar"}
+
+    def loop_aux(self, ctx: SolverCtx, b, tol, maxiter):
         cap = jnp.minimum(maxiter, ctx.maxiter_static)
-        replace_every = int(ctx.options.get("replace_every", 50))
+        bnorm = jnp.sqrt(pdot(ctx.axes, b, b))
+        tol2 = (tol * jnp.maximum(bnorm, 1e-30)) ** 2
+        # the replace closure inside loop_body needs b — carry it in aux
+        return {"cap": cap, "bnorm": bnorm, "tol2": tol2, "b": b}
+
+    def loop_setup(self, ctx: SolverCtx, b, tol, maxiter):
+        cap = jnp.minimum(maxiter, ctx.maxiter_static)
         u0 = ctx.precond(b)                     # r0 = b  (x0 = 0)
         w0 = ctx.spmv(u0)
-        rr0 = pdot(axes, b, b)
+        rr0 = pdot(ctx.axes, b, b)
         bnorm = jnp.sqrt(rr0)
         tol2 = (tol * jnp.maximum(bnorm, 1e-30)) ** 2
+        aux = {"cap": cap, "bnorm": bnorm, "tol2": tol2, "b": b}
         zeros = jnp.zeros_like(b)
         ones = jnp.ones_like(rr0)
+        nrhs = b.shape[0]
+        state = {"t": jnp.asarray(0, jnp.int32),
+                 "k": jnp.zeros((nrhs,), jnp.int32),
+                 "x": zeros, "r": b, "u": u0, "w": w0,
+                 "z": zeros, "q": zeros, "s": zeros, "p": zeros,
+                 "g_prev": ones, "a_prev": ones, "rr": rr0}
+        return aux, state
 
-        def cond(state):
-            k, rr = state[1], state[-1]
-            return jnp.any((k < cap) & (rr > tol2))
+    def loop_restart(self, ctx: SolverCtx, aux, b, x, k):
+        # the drift-correction restart, parameterised by the entry iterate:
+        # recompute r/u/w from their definitions, reset the direction
+        # recurrences, and poison γ_prev so the next β is exactly 0.
+        r = b - ctx.spmv(x)
+        u = ctx.precond(r)
+        w = ctx.spmv(u)
+        rr = pdot(ctx.axes, r, r)
+        zeros = jnp.zeros_like(x)
+        return {"t": jnp.asarray(0, jnp.int32), "k": k, "x": x, "r": r,
+                "u": u, "w": w, "z": zeros, "q": zeros, "s": zeros,
+                "p": zeros, "g_prev": jnp.full_like(rr, jnp.inf),
+                "a_prev": jnp.ones_like(rr), "rr": rr}
+
+    def loop_cond(self, ctx: SolverCtx, aux, state):
+        return jnp.any((state["k"] < aux["cap"])
+                       & (state["rr"] > aux["tol2"]))
+
+    def loop_body(self, ctx: SolverCtx, aux, state):
+        b = aux["b"]
+        replace_every = int(ctx.options.get("replace_every", 50))
+        t, k = state["t"], state["k"]
+        x, r, u, w = state["x"], state["r"], state["u"], state["w"]
+        z, q, s, p = state["z"], state["q"], state["s"], state["p"]
+        g_prev, a_prev, rr = state["g_prev"], state["a_prev"], state["rr"]
+        active = (k < aux["cap"]) & (rr > aux["tol2"])
+        first = k == 0
 
         def replace(args):
             """Restart: recompute r/u/w from their definitions and reset the
@@ -152,49 +244,47 @@ class PipelinedCGSolver(Solver):
                     _gate(active, zv, q), _gate(active, zv, s),
                     _gate(active, zv, p), _gate(active, inf, g_prev))
 
-        def body(state):
-            (t, k, x, r, u, w, z, q, s, p, g_prev, a_prev, rr) = state
-            active = (k < cap) & (rr > tol2)
-            first = k == 0
-            # periodic drift correction (t is the scalar trip counter; the
-            # predicate is replicated, so every shard takes the same branch)
-            do_replace = (t > 0) & (t % replace_every == 0)
-            (_, x, r, u, w, z, q, s, p, g_prev) = jax.lax.cond(
-                do_replace, replace, lambda a: a,
-                (active, x, r, u, w, z, q, s, p, g_prev))
-            # the ONE stacked reduction; everything until the scalar
-            # recurrences below is independent of it, so the allreduce
-            # overlaps the preconditioner + SpMV
-            S = pdot_stack(axes, (r, u), (w, u), (r, r))  # [γ, δ, r·r]
-            m = ctx.precond(w)
-            n = ctx.spmv(m)
-            gamma, delta = S[0], S[1]
-            beta = jnp.where(first, 0.0, gamma / g_prev)
-            alpha = jnp.where(first, gamma / delta,
-                              gamma / (delta - beta * gamma / a_prev))
-            z = _gate(active, n + beta[:, None] * z, z)
-            q = _gate(active, m + beta[:, None] * q, q)
-            s_v = _gate(active, w + beta[:, None] * s, s)
-            p = _gate(active, u + beta[:, None] * p, p)
-            x = _gate(active, x + alpha[:, None] * p, x)
-            r = _gate(active, r - alpha[:, None] * s_v, r)
-            u = _gate(active, u - alpha[:, None] * q, u)
-            w = _gate(active, w - alpha[:, None] * z, w)
-            g_prev = _gate(active, gamma, g_prev)
-            a_prev = _gate(active, alpha, a_prev)
-            rr = _gate(active, S[2], rr)
-            return (t + 1, k + active.astype(k.dtype), x, r, u, w, z, q, s_v,
-                    p, g_prev, a_prev, rr)
+        # periodic drift correction (t is the scalar trip counter; the
+        # predicate is replicated, so every shard takes the same branch)
+        do_replace = (t > 0) & (t % replace_every == 0)
+        (_, x, r, u, w, z, q, s, p, g_prev) = jax.lax.cond(
+            do_replace, replace, lambda a: a,
+            (active, x, r, u, w, z, q, s, p, g_prev))
+        # the ONE stacked reduction; everything until the scalar
+        # recurrences below is independent of it, so the allreduce
+        # overlaps the preconditioner + SpMV
+        S = pdot_stack(ctx.axes, (r, u), (w, u), (r, r))  # [γ, δ, r·r]
+        m = ctx.precond(w)
+        n = ctx.spmv(m)
+        gamma, delta = S[0], S[1]
+        beta = jnp.where(first, 0.0, gamma / g_prev)
+        alpha = jnp.where(first, gamma / delta,
+                          gamma / (delta - beta * gamma / a_prev))
+        z = _gate(active, n + beta[:, None] * z, z)
+        q = _gate(active, m + beta[:, None] * q, q)
+        s_v = _gate(active, w + beta[:, None] * s, s)
+        p = _gate(active, u + beta[:, None] * p, p)
+        x = _gate(active, x + alpha[:, None] * p, x)
+        r = _gate(active, r - alpha[:, None] * s_v, r)
+        u = _gate(active, u - alpha[:, None] * q, u)
+        w = _gate(active, w - alpha[:, None] * z, w)
+        return {"t": t + 1, "k": k + active.astype(k.dtype),
+                "x": x, "r": r, "u": u, "w": w,
+                "z": z, "q": q, "s": s_v, "p": p,
+                "g_prev": _gate(active, gamma, g_prev),
+                "a_prev": _gate(active, alpha, a_prev),
+                "rr": _gate(active, S[2], rr)}
 
-        nrhs = b.shape[0]
-        state = (jnp.asarray(0, jnp.int32), jnp.zeros((nrhs,), jnp.int32),
-                 zeros, b, u0, w0, zeros, zeros, zeros, zeros, ones, ones,
-                 rr0)
-        out = jax.lax.while_loop(cond, body, state)
-        k, x, r = out[1], out[2], out[3]
-        rr = pdot(axes, r, r)                   # fresh ‖r‖ outside the loop
-        rel = jnp.sqrt(rr) / jnp.maximum(bnorm, 1e-30)
-        return x, k, rel
+    def loop_finish(self, ctx: SolverCtx, aux, state):
+        rr = pdot(ctx.axes, state["r"], state["r"])  # fresh ‖r‖, post-loop
+        rel = jnp.sqrt(rr) / jnp.maximum(aux["bnorm"], 1e-30)
+        return state["x"], state["k"], rel
+
+    def guard_scalars(self, state):
+        # g_prev is legitimately +inf right after a restart, so only the
+        # recurrence residual is guard-checkable; the driver's true-residual
+        # recompute covers the drifting vector recurrences.
+        return {"rr": state["rr"]}
 
 
 class ChebyshevSolver(Solver):
@@ -207,9 +297,24 @@ class ChebyshevSolver(Solver):
     count that meets ``tol`` is known *a priori* from the Chebyshev error
     bound, so the loop runs ``min(maxiter, iters_for_tol(tol))`` steps and
     measures the real residual once, after the loop.
+
+    Restartability: the recurrence is residual-free — no scalar in the
+    state ever reflects corruption, so :meth:`guard_scalars` is empty and
+    the resilient driver's true-residual recompute is the *only* detector.
+    The state carries ``kb``, the iteration of the last restart: the
+    a-priori budget ``need`` counts from ``kb`` (a restarted Chebyshev
+    needs a full fresh budget — its error bound knows nothing about the
+    restored x being closer than b), and the β/α special-casing keys off
+    ``k == kb`` instead of ``k == 0``.  With ``kb = 0`` this is exactly
+    the historical loop.
     """
 
     name = "chebyshev"
+    #: the error bound fixes the trip count up front, and the f32
+    #: attainable floor usually sits above the guard's 10·tol stagnation
+    #: threshold — a healthy run spends its whole tail "not improving",
+    #: and a rollback would hand it a fresh budget (kb := k) forever.
+    stagnation_guard = False
 
     #: safety margins on the Lanczos Ritz estimates (which sit inside the
     #: true spectrum): widen the interval so no eigenvalue escapes it.
@@ -231,41 +336,66 @@ class ChebyshevSolver(Solver):
             opts.setdefault("lmax", lmax * self.lmax_margin)
         return opts
 
-    def shard_loop(self, ctx: SolverCtx, b, tol, maxiter):
-        axes = ctx.axes
+    def _coeffs(self, ctx: SolverCtx):
         lmin = float(ctx.options["lmin"])
         lmax = float(ctx.options["lmax"])
-        d = (lmax + lmin) / 2.0
-        c = (lmax - lmin) / 2.0
-        bnorm = jnp.sqrt(pdot(axes, b, b))
+        return (lmax + lmin) / 2.0, (lmax - lmin) / 2.0
+
+    def state_kinds(self):
+        return {"k": "scalar", "x": "vector", "r": "vector", "p": "vector",
+                "a_prev": "scalar", "kb": "scalar"}
+
+    def loop_aux(self, ctx: SolverCtx, b, tol, maxiter):
+        lmin = float(ctx.options["lmin"])
+        lmax = float(ctx.options["lmax"])
+        bnorm = jnp.sqrt(pdot(ctx.axes, b, b))
         # a-priori trip count from the Chebyshev error bound (static
         # convergence factor, dynamic tol) — no in-loop residual needed
         sigma = (math.sqrt(lmax / lmin) - 1.0) / (math.sqrt(lmax / lmin) + 1.0)
         need = jnp.ceil(jnp.log(jnp.maximum(2.0 / jnp.maximum(tol, 1e-30),
                                             1.0))
                         * (1.2 / -math.log(sigma))).astype(jnp.int32) + 5
-        cap = jnp.minimum(jnp.minimum(maxiter, ctx.maxiter_static), need)
+        cap = jnp.minimum(maxiter, ctx.maxiter_static)
+        return {"cap": cap, "need": need, "bnorm": bnorm}
 
-        def cond(state):
-            return jnp.any(state[0] < cap)
-
-        def body(state):
-            k, x, r, p, a_prev = state
-            z = ctx.precond(r)
-            beta = jnp.where(k == 0, 0.0, (c * a_prev / 2.0) ** 2)
-            alpha = jnp.where(k == 0, 1.0 / d, 1.0 / (d - beta / a_prev))
-            p = z + beta[:, None] * p
-            x = x + alpha[:, None] * p
-            r = r - alpha[:, None] * ctx.spmv(p)   # the only collectives
-            return (k + 1, x, r, p, alpha)
-
+    def loop_setup(self, ctx: SolverCtx, b, tol, maxiter):
+        aux = self.loop_aux(ctx, b, tol, maxiter)
+        d, _ = self._coeffs(ctx)
         nrhs = b.shape[0]
-        state = (jnp.zeros((nrhs,), jnp.int32), jnp.zeros_like(b), b,
-                 jnp.zeros_like(b), jnp.full((nrhs,), 1.0 / d, jnp.float32))
-        k, x, r, p, _ = jax.lax.while_loop(cond, body, state)
-        rr = pdot(axes, r, r)                   # one psum, after the loop
-        rel = jnp.sqrt(rr) / jnp.maximum(bnorm, 1e-30)
-        return x, k, rel
+        state = {"k": jnp.zeros((nrhs,), jnp.int32), "x": jnp.zeros_like(b),
+                 "r": b, "p": jnp.zeros_like(b),
+                 "a_prev": jnp.full((nrhs,), 1.0 / d, jnp.float32),
+                 "kb": jnp.zeros((nrhs,), jnp.int32)}
+        return aux, state
+
+    def loop_restart(self, ctx: SolverCtx, aux, b, x, k):
+        d, _ = self._coeffs(ctx)
+        r = b - ctx.spmv(x)
+        nrhs = x.shape[0]
+        return {"k": k, "x": x, "r": r, "p": jnp.zeros_like(x),
+                "a_prev": jnp.full((nrhs,), 1.0 / d, jnp.float32), "kb": k}
+
+    def loop_cond(self, ctx: SolverCtx, aux, state):
+        k, kb = state["k"], state["kb"]
+        return jnp.any((k < aux["cap"]) & ((k - kb) < aux["need"]))
+
+    def loop_body(self, ctx: SolverCtx, aux, state):
+        d, c = self._coeffs(ctx)
+        k, x, r, p = state["k"], state["x"], state["r"], state["p"]
+        a_prev, kb = state["a_prev"], state["kb"]
+        z = ctx.precond(r)
+        beta = jnp.where(k == kb, 0.0, (c * a_prev / 2.0) ** 2)
+        alpha = jnp.where(k == kb, 1.0 / d, 1.0 / (d - beta / a_prev))
+        p = z + beta[:, None] * p
+        x = x + alpha[:, None] * p
+        r = r - alpha[:, None] * ctx.spmv(p)   # the only collectives
+        return {"k": k + 1, "x": x, "r": r, "p": p, "a_prev": alpha,
+                "kb": kb}
+
+    def loop_finish(self, ctx: SolverCtx, aux, state):
+        rr = pdot(ctx.axes, state["r"], state["r"])  # one psum, post-loop
+        rel = jnp.sqrt(rr) / jnp.maximum(aux["bnorm"], 1e-30)
+        return state["x"], state["k"], rel
 
 
 def chebyshev_iters_for_tol(lmin: float, lmax: float, tol: float) -> int:

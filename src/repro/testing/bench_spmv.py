@@ -46,6 +46,11 @@ def main() -> int:
     ap.add_argument("--nrhs", type=int, default=0,
                     help="with --solver: batched multi-RHS solve width")
     ap.add_argument("--tol", type=float, default=1e-8)
+    ap.add_argument("--check-every", type=int, default=0,
+                    help="with --solver: also time the solve under the "
+                         "resilient chunked driver (repro.solvers.resilient) "
+                         "and report its per-iteration overhead vs the "
+                         "monolithic loop under 'resilient'")
     ap.add_argument("--no-collectives", action="store_true",
                     help="skip the compiled-HLO collective-op census")
     args = ap.parse_args()
@@ -110,10 +115,11 @@ def main() -> int:
                             neighbor_offsets=layout["neighbor_offsets"],
                             nrhs=nrhs, A=A, layout=layout)
         if nrhs:
-            B = rng.normal(size=(nrhs, A.n_rows))
-            b = to_dist_batch(B, layout, plan)
+            b_host = rng.normal(size=(nrhs, A.n_rows))
+            b = to_dist_batch(b_host, layout, plan)
         else:
-            b = to_dist(rng.normal(size=A.n_rows), layout, plan)
+            b_host = rng.normal(size=A.n_rows)
+            b = to_dist(b_host, layout, plan)
         xd, it, rel = solve(b, tol=args.tol, maxiter=200)  # warmup+compile
         jax.block_until_ready(xd)
         t0 = time.time()
@@ -137,6 +143,38 @@ def main() -> int:
             out["collectives_per_iter"] = \
                 while_body_collective_counts_from_text(txt)
             out["census_split"] = census_split(out["collectives_per_iter"])
+        if args.check_every > 0:
+            from repro.solvers import make_resilient, resilient_solve
+
+            # compile the three chunked programs once, then warm + time
+            # through the same prebuilt object so the timed pass hits the
+            # jit cache exactly like the monolithic pair above; the guard
+            # thresholds are effectively disabled (we are timing the
+            # chunking machinery, not exercising rollbacks — tol=1e-8 is
+            # below the f32 floor, so every chunk looks "stagnant")
+            rs = make_resilient(plan, mesh, solver=args.solver,
+                                precond=args.precond,
+                                transport=args.transport,
+                                neighbor_offsets=layout["neighbor_offsets"],
+                                A=A, layout=layout)
+            kw = dict(solver=args.solver, precond=args.precond, mesh=mesh,
+                      layout=layout, A=None, tol=args.tol,
+                      maxiter=args.iters, check_every=args.check_every,
+                      stall_chunks=10**9, programs=rs)
+            resilient_solve(plan, b_host, **kw)          # warmup+compile
+            t0 = time.time()
+            res = resilient_solve(plan, b_host, **kw)
+            dt = time.time() - t0
+            r_iters = int(np.max(np.asarray(res.iters)))
+            r_us = dt / max(r_iters, 1) * 1e6
+            out["resilient"] = {
+                "check_every": args.check_every,
+                "chunks": res.chunks,
+                "iters": r_iters,
+                "us_per_iter": r_us,
+                "overhead_vs_monolithic":
+                    round(r_us / out["us_per_iter"] - 1.0, 4),
+            }
     elif args.cg:
         import jax.numpy as jnp
 

@@ -43,6 +43,22 @@ def main() -> int:
     ap.add_argument("--nrhs", type=int, default=0,
                     help="with --solver: also run a batched (nrhs, n) solve "
                          "and check every column against the oracle")
+    ap.add_argument("--check-every", type=int, default=0,
+                    help="with --solver: run under the resilient driver "
+                         "(repro.solvers.resilient) in chunks of this many "
+                         "iterations instead of the monolithic loop")
+    ap.add_argument("--inject-fault", default=None, metavar="KIND@ITER",
+                    help="with --check-every: arm a deterministic fault "
+                         "(nan|bitflip|preempt, e.g. 'nan@30') — the "
+                         "resilient driver must detect, roll back, and "
+                         "still converge (preempt SIGKILLs this process)")
+    ap.add_argument("--resume-from", default=None,
+                    help="with --check-every: resume from the latest "
+                         "checkpoint in this directory (elastic: any mesh "
+                         "shape/format/transport)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="with --check-every: persist per-chunk "
+                         "checkpoints here")
     args = ap.parse_args()
 
     ndev = args.n_node * args.n_core
@@ -157,6 +173,38 @@ def main() -> int:
             Xh = [host_cg(A, B[j], tol=1e-10, maxiter=20_000)
                   for j in range(args.nrhs)]
         for name in names:
+            tr_max, dx_max = bounds.get(name, (2e-3, 5e-2))
+            if args.check_every > 0:
+                # resilient driver: same oracle, same bounds — chunking
+                # (and any injected fault + rollback) must not change
+                # where the solve lands
+                from repro.runtime.fault import FaultInjector
+                from repro.solvers import resilient_solve
+                inj = (FaultInjector.parse(args.inject_fault)
+                       if args.inject_fault else None)
+                res = resilient_solve(
+                    plan, b, layout=layout, A=A, solver=name,
+                    precond=args.precond, mesh=mesh, backend=args.backend,
+                    transport=args.transport,
+                    neighbor_offsets=layout["neighbor_offsets"],
+                    tol=solver_tol, maxiter=5000,
+                    check_every=args.check_every,
+                    checkpoint_dir=args.checkpoint_dir,
+                    resume_from=args.resume_from, injector=inj)
+                dxh = float(np.linalg.norm(res.x - xh)) / xh_norm
+                line_ok = (res.converged and res.true_rel < tr_max
+                           and dxh < dx_max)
+                if inj is not None and inj.kind != "preempt":
+                    # an armed (non-preempt) fault must actually trip the
+                    # guard: zero rollbacks means the injection was a no-op
+                    line_ok = line_ok and res.rollbacks > 0
+                print(f"RESILIENT {name} PRECOND {args.precond} "
+                      f"ITERS {int(np.max(res.iters))} "
+                      f"CHUNKS {res.chunks} ROLLBACKS {res.rollbacks} "
+                      f"TRUE_REL {res.true_rel:.3e} DX_HOST {dxh:.3e} "
+                      f"{'ok' if line_ok else 'BAD'}")
+                ok = ok and line_ok
+                continue
             solve = make_solver(plan, mesh, solver=name,
                                 precond=args.precond, backend=args.backend,
                                 transport=args.transport,
@@ -166,7 +214,6 @@ def main() -> int:
             xs = from_dist(xd, layout, plan)
             tr = float(np.linalg.norm(A.matvec(xs) - b) / np.linalg.norm(b))
             dxh = float(np.linalg.norm(xs - xh)) / xh_norm
-            tr_max, dx_max = bounds.get(name, (2e-3, 5e-2))
             line_ok = tr < tr_max and dxh < dx_max and int(its) < 5000
             print(f"SOLVER {name} PRECOND {args.precond} ITERS {int(its)} "
                   f"REL {float(rel):.3e} TRUE_REL {tr:.3e} "

@@ -74,6 +74,12 @@ def main() -> int:
     ap.add_argument("--autotune", action="store_true",
                     help="also run autotune_transport and verify the "
                          "stamped winner is what transport='auto' builds")
+    ap.add_argument("--include-faulty", action="store_true",
+                    help="register the corrupting 'faulty' wrapper "
+                         "transport before the sweep; on any case with "
+                         "halo traffic the harness is EXPECTED to fail it "
+                         "(rc 1) — that failure is the proof the harness "
+                         "catches payload corruption")
     args = ap.parse_args()
 
     ndev = args.n_node * args.n_core
@@ -91,6 +97,9 @@ def main() -> int:
     from repro.util import make_mesh_compat
 
     assert len(jax.devices()) == ndev, (len(jax.devices()), ndev)
+    if args.include_faulty:
+        from repro.core.transport import FaultyTransport, register_transport
+        register_transport(FaultyTransport())
     transports = (tuple(args.transports.split(","))
                   if args.transports else available_transports())
     ok = True

@@ -1,0 +1,331 @@
+"""Resilient solves (repro.solvers.resilient): chunked execution equals the
+monolithic loop, injected faults are detected and rolled back, checkpoints
+restore elastically onto different plans, and bounded retries fail
+structurally.
+
+Single-device runs are in-process on the 1x1 mesh; multi-device runs spawn
+fresh interpreters via ``repro.testing.dist_check`` (resilient driver
+threading) and ``repro.testing.resilience_check`` (the SIGKILL
+kill-and-resume orchestration).
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from conftest import run_subprocess
+from repro.core import build_spmv_plan, from_dist, to_dist
+from repro.runtime.fault import FaultInjector
+from repro.solvers import (ResilientResult, SolveFailure, get_solver,
+                           make_resilient, make_solver, resilient_solve)
+from repro.solvers.resilient import _guard_verdict
+from repro.sparse import extruded_mesh_matrix, graded_extruded_mesh_matrix
+from repro.util import make_mesh_compat
+
+SOLVERS = ("cg", "pipelined_cg", "chebyshev")
+
+
+def _mesh11():
+    return make_mesh_compat((1, 1), ("node", "core"))
+
+
+def _problem(n_surface=40, layers=4, seed=3, gen=extruded_mesh_matrix,
+             **plan_kw):
+    A = gen(n_surface, layers, seed=seed)
+    b = np.random.default_rng(seed).normal(size=A.n_rows)
+    plan, layout = build_spmv_plan(A, 1, 1, mode="balanced", **plan_kw)
+    return A, b, plan, layout
+
+
+# --------------------------------------------------------------------- #
+# chunked execution == monolithic execution
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", SOLVERS)
+def test_chunked_iterates_match_monolithic_bitwise(name):
+    """Chunk boundaries carry the full solver state, so the chunked driver
+    lands on the exact monolithic iterate — same x bits, same count."""
+    A, b, plan, layout = _problem(30, 4)
+    mesh = _mesh11()
+    solve = make_solver(plan, mesh, solver=name, precond="jacobi",
+                        A=A, layout=layout)
+    xd, its, rel = solve(to_dist(b, layout, plan), tol=1e-5, maxiter=2000)
+    xs = from_dist(xd, layout, plan)
+
+    res = resilient_solve(plan, b, layout=layout, A=A, solver=name,
+                          precond="jacobi", mesh=mesh, tol=1e-5,
+                          maxiter=2000, check_every=17)
+    assert isinstance(res, ResilientResult)
+    assert int(np.max(res.iters)) == int(its)
+    assert res.rollbacks == 0
+    np.testing.assert_array_equal(res.x, xs)
+    # > 1 chunk actually ran, so equality crossed a boundary
+    assert res.chunks == -(-int(its) // 17)
+
+
+def test_unbatched_and_batched_results_shapes():
+    A, b, plan, layout = _problem(24, 3)
+    mesh = _mesh11()
+    res = resilient_solve(plan, b, layout=layout, A=A, mesh=mesh,
+                          tol=1e-5, maxiter=500, check_every=20)
+    assert res.x.shape == (A.n_rows,) and np.ndim(res.iters) == 0
+    B = np.stack([b, 2 * b])
+    resb = resilient_solve(plan, B, layout=layout, A=A, mesh=mesh,
+                           tol=1e-5, maxiter=500, check_every=20)
+    assert resb.x.shape == (2, A.n_rows) and resb.iters.shape == (2,)
+    # bit-equality across differently-shaped compiled programs is not
+    # guaranteed (XLA fusion is shape-dependent); same-solution is
+    scale = np.abs(res.x).max()
+    np.testing.assert_allclose(resb.x[0], res.x, atol=5e-5 * scale)
+
+
+# --------------------------------------------------------------------- #
+# fault injection -> guard detection -> rollback -> convergence
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", SOLVERS)
+def test_nan_injection_detected_and_rolled_back(name):
+    """A NaN planted in the iterate is caught within check_every
+    iterations by the between-chunk guard and the solve still converges
+    to the same tolerance."""
+    A, b, plan, layout = _problem(30, 4)
+    mesh = _mesh11()
+    clean = resilient_solve(plan, b, layout=layout, A=A, solver=name,
+                            precond="jacobi", mesh=mesh, tol=1e-5,
+                            maxiter=2000, check_every=15)
+    inj = FaultInjector("nan", at_iteration=10)
+    res = resilient_solve(plan, b, layout=layout, A=A, solver=name,
+                          precond="jacobi", mesh=mesh, tol=1e-5,
+                          maxiter=2000, check_every=15, injector=inj)
+    assert inj.fired == 1
+    assert res.rollbacks == 1
+    assert res.converged
+    assert res.true_rel <= clean.true_rel * 50 + 1e-4
+    # detection happened at the first chunk boundary after the injection:
+    # the recorded good trajectory never contains a non-finite entry
+    assert all(np.isfinite(w) for _, w in res.trajectory)
+
+
+def test_persistent_corruption_exhausts_retries():
+    A, b, plan, layout = _problem(24, 3)
+    inj = FaultInjector("nan", at_iteration=5, repeat=True)
+    with pytest.raises(SolveFailure) as ei:
+        resilient_solve(plan, b, layout=layout, A=A, mesh=_mesh11(),
+                        tol=1e-5, maxiter=2000, check_every=10,
+                        max_retries=2, injector=inj)
+    assert ei.value.reason.startswith("nonfinite")
+    assert ei.value.retries == 2
+    assert ei.value.iteration >= 0
+    assert isinstance(ei.value.trajectory, list)
+
+
+def test_injector_validation_and_parse():
+    A, b, plan, layout = _problem(20, 3)
+    with pytest.raises(ValueError, match="not a vector state"):
+        resilient_solve(plan, b, layout=layout, A=A, mesh=_mesh11(),
+                        injector=FaultInjector("nan", 5, state_key="rz"))
+    with pytest.raises(ValueError, match="kind"):
+        FaultInjector("meteor", 5)
+    with pytest.raises(ValueError, match="fault spec"):
+        FaultInjector.parse("nan-at-5")
+    inj = FaultInjector.parse("bitflip@30")
+    assert inj.kind == "bitflip" and inj.at_iteration == 30
+    assert not inj.crossed(0, 20)
+    assert inj.crossed(20, 40)
+    assert not inj.crossed(20, 40)      # once-only without repeat
+
+
+@settings(deadline=None, max_examples=6)
+@given(check_every=st.integers(min_value=5, max_value=40),
+       at=st.integers(min_value=1, max_value=12))
+def test_rollback_recompute_converges_to_same_tol(check_every, at):
+    """Property: wherever the NaN lands and however the solve is chunked,
+    rollback + true-residual recompute reaches the same tolerance as the
+    clean solve (satellite 4's convergence property)."""
+    A, b, plan, layout = _problem(24, 3)
+    res = resilient_solve(plan, b, layout=layout, A=A, mesh=_mesh11(),
+                          tol=1e-5, maxiter=2000, check_every=check_every,
+                          injector=FaultInjector("nan", at_iteration=at))
+    assert res.converged
+    assert res.rollbacks >= 1
+    assert res.true_rel < 2e-4
+
+
+# --------------------------------------------------------------------- #
+# the guard verdict, unit-level
+# --------------------------------------------------------------------- #
+def _verdict(sol, state, true_rel, **kw):
+    kw.setdefault("best_rel", 1.0)
+    kw.setdefault("tol", 1e-5)
+    kw.setdefault("since_improve", 0)
+    kw.setdefault("stall_chunks", 8)
+    kw.setdefault("divergence_factor", 1e3)
+    kw.setdefault("mismatch_factor", 1e3)
+    return _guard_verdict(sol, state, np.asarray(true_rel), **kw)
+
+
+def test_guard_verdict_order_and_reasons():
+    cg = get_solver("cg")
+    good = {"rr": np.asarray([1e-4]), "rz": np.asarray([1e-4]),
+            "pap": np.asarray([1.0])}
+    assert _verdict(cg, good, [1e-2]) == (True, "ok")
+    assert _verdict(cg, {**good, "rr": np.asarray([np.nan])},
+                    [1e-2]) == (False, "nonfinite:rr")
+    assert _verdict(cg, good, [np.inf]) == (False,
+                                            "nonfinite:true_residual")
+    assert _verdict(cg, {**good, "pap": np.asarray([-1.0])},
+                    [1e-2]) == (False, "breakdown:pap")
+    assert _verdict(cg, good, [50.0], best_rel=1e-2) == (False, "diverged")
+    # recurrence says converged, truth says otherwise -> mismatch
+    assert _verdict(cg, {**good, "rr": np.asarray([1e-20])},
+                    [0.5]) == (False, "mismatch")
+    assert _verdict(cg, good, [1e-2],
+                    since_improve=8) == (False, "stagnation")
+
+
+def test_guard_stagnation_gated_by_solver_and_done():
+    cg, cheb = get_solver("cg"), get_solver("chebyshev")
+    state = {"rr": np.asarray([1e-4]), "rz": np.asarray([1e-4]),
+             "pap": np.asarray([1.0])}
+    stalled = dict(since_improve=50)
+    assert _verdict(cg, state, [1e-2], **stalled)[1] == "stagnation"
+    # a chunk that reported completion is never "stuck"
+    assert _verdict(cg, state, [1e-2], done=True, **stalled) == (True, "ok")
+    # a-priori-budget solvers idle at their floor legitimately
+    assert not cheb.stagnation_guard
+    assert _verdict(cheb, {}, [1e-2], **stalled) == (True, "ok")
+    # worst already near tol is converged-not-stuck regardless
+    assert _verdict(cg, state, [5e-5], **stalled) == (True, "ok")
+
+
+def test_chebyshev_budget_solve_survives_long_flat_tail():
+    """Regression: Chebyshev runs a fixed a-priori budget whose tail sits
+    at the f32 floor; the guard must not roll it back (which would re-arm
+    the budget via kb and livelock)."""
+    A, b, plan, layout = _problem(24, 3)
+    res = resilient_solve(plan, b, layout=layout, A=A, solver="chebyshev",
+                          mesh=_mesh11(), tol=1e-5, maxiter=2000,
+                          check_every=25, stall_chunks=2)
+    assert res.rollbacks == 0
+    assert res.converged
+
+
+# --------------------------------------------------------------------- #
+# checkpoint / elastic resume
+# --------------------------------------------------------------------- #
+def test_checkpoint_resume_onto_different_format(tmp_path):
+    """Kill-free elastic restore: checkpoints written while solving on an
+    ell plan resume on a sell plan (different packing, same system) from
+    the checkpointed iteration, not from zero."""
+    A, b, plan, layout = _problem(30, 4, gen=graded_extruded_mesh_matrix)
+    mesh = _mesh11()
+    ck = str(tmp_path / "ck")
+    res = resilient_solve(plan, b, layout=layout, A=A, mesh=mesh,
+                          tol=1e-5, maxiter=2000, check_every=12,
+                          checkpoint_dir=ck)
+    assert res.checkpoint_dir == ck
+    from repro.checkpoint import latest_step
+    step = latest_step(ck)
+    assert step == int(np.max(res.iters))
+
+    plan2, layout2 = build_spmv_plan(A, 1, 1, mode="balanced",
+                                     format="sell")
+    res2 = resilient_solve(plan2, b, layout=layout2, A=A, mesh=mesh,
+                           tol=1e-5, maxiter=2000, check_every=12,
+                           resume_from=ck)
+    assert res2.resumed_from == step
+    assert res2.converged
+    # resuming from the converged iterate costs at most a restart's worth
+    assert int(np.max(res2.iters)) - step < int(np.max(res.iters))
+    assert res2.trajectory[:len(res.trajectory)] == res.trajectory
+
+
+def test_resume_validates_problem_shape(tmp_path):
+    A, b, plan, layout = _problem(24, 3)
+    ck = str(tmp_path / "ck")
+    resilient_solve(plan, b, layout=layout, A=A, mesh=_mesh11(), tol=1e-5,
+                    maxiter=500, check_every=20, checkpoint_dir=ck)
+    A2, b2, plan2, layout2 = _problem(30, 4)
+    # the hardened store rejects the mismatched payload shape before the
+    # driver's own n/nrhs cross-check even runs
+    with pytest.raises(ValueError, match="shape"):
+        resilient_solve(plan2, b2, layout=layout2, A=A2, mesh=_mesh11(),
+                        resume_from=ck)
+    with pytest.raises(ValueError, match="no checkpoint"):
+        resilient_solve(plan, b, layout=layout, A=A, mesh=_mesh11(),
+                        resume_from=str(tmp_path / "empty"))
+
+
+def test_input_validation_and_programs_reuse():
+    A, b, plan, layout = _problem(24, 3)
+    mesh = _mesh11()
+    with pytest.raises(ValueError, match="needs layout"):
+        resilient_solve(plan, b)
+    with pytest.raises(ValueError, match="rows"):
+        resilient_solve(plan, b[:-3], layout=layout, mesh=mesh)
+
+    rs = make_resilient(plan, mesh, A=A, layout=layout)
+    r1 = resilient_solve(plan, b, layout=layout, A=A, mesh=mesh,
+                         tol=1e-5, maxiter=500, check_every=20,
+                         programs=rs)
+    r2 = resilient_solve(plan, b, layout=layout, A=A, mesh=mesh,
+                         tol=1e-5, maxiter=500, check_every=20,
+                         programs=rs)
+    np.testing.assert_array_equal(r1.x, r2.x)
+    A2, _, plan2, layout2 = _problem(30, 4)
+    with pytest.raises(ValueError, match="different plan"):
+        resilient_solve(plan2, np.zeros(A2.n_rows), layout=layout2,
+                        mesh=mesh, programs=rs)
+
+
+def test_solver_protocol_requires_x_and_k():
+    from repro.solvers import Solver
+
+    class NoK(Solver):
+        name = "_resilient_test_nok"
+
+        def state_kinds(self):
+            return {"x": "vector"}
+
+    A, b, plan, layout = _problem(20, 3)
+    with pytest.raises(ValueError, match="must include"):
+        make_resilient(plan, _mesh11(), solver=NoK(), A=A, layout=layout)
+
+
+# --------------------------------------------------------------------- #
+# multi-device: dist_check threading + kill-and-resume orchestration
+# --------------------------------------------------------------------- #
+def test_multidevice_resilient_sweep_with_nan_injection():
+    """2x2 mesh, both CG variants chunked under the resilient driver with
+    a NaN injected mid-solve: detect, roll back, converge vs the oracle."""
+    r = run_subprocess(["-m", "repro.testing.dist_check",
+                        "--n-node", "2", "--n-core", "2",
+                        "--matrix", "graded", "--n-surface", "48",
+                        "--solver", "cg,pipelined_cg",
+                        "--check-every", "25",
+                        "--inject-fault", "nan@30"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert r.stdout.count("ROLLBACKS 1") == 2
+
+
+def test_multidevice_resilient_bitflip_detected():
+    """Transport payload corruption (exponent bit XOR in the halo
+    exchange) must be caught by the chunk guard and rolled back."""
+    r = run_subprocess(["-m", "repro.testing.dist_check",
+                        "--n-node", "2", "--n-core", "2",
+                        "--matrix", "graded", "--n-surface", "48",
+                        "--solver", "cg", "--check-every", "25",
+                        "--inject-fault", "bitflip@30"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ROLLBACKS 1" in r.stdout
+
+
+@pytest.mark.slow
+def test_kill_and_resume_elastic_restart(tmp_path):
+    """The full satellite-6 story: an 8-device solve is SIGKILLed
+    mid-solve by the injector, then resumed on a 4-device mesh with a
+    different format and transport, converging within the chunking
+    overhead of an uninterrupted solve (see
+    ``repro.testing.resilience_check``)."""
+    r = run_subprocess(["-m", "repro.testing.resilience_check",
+                        "--ckpt-dir", str(tmp_path / "ck")])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "killed-by-SIGKILL ok" in r.stdout
+    assert "FAIL" not in r.stdout

@@ -110,6 +110,86 @@ def test_step_guard_emergency_on_exception():
     assert called == [1]
 
 
+def test_step_guard_exception_path_never_a_straggler():
+    # prime the watchdog so a genuinely slow step WOULD flag, then fail a
+    # step: the failed step's wall-time must not reach the watchdog and
+    # ``slow`` must read False, not stale True from an earlier step
+    w = Watchdog(threshold=3.0, warmup=1)
+    g = StepGuard(w)
+    for _ in range(3):
+        with g:
+            pass
+    before = w.n
+    with pytest.raises(ValueError):
+        with g:
+            raise ValueError("step blew up")
+    assert g.slow is False
+    assert w.n == before            # wall-time never observed
+    assert g.last_dt >= 0.0         # but the timer still closed
+
+
+def test_step_guard_failing_emergency_does_not_mask():
+    def bad_emergency():
+        raise OSError("disk full")
+
+    g = StepGuard(Watchdog(), on_emergency=bad_emergency)
+    with pytest.raises(RuntimeError, match="original"):
+        with g:
+            raise RuntimeError("original failure")
+    assert isinstance(g.emergency_error, OSError)
+
+
+def test_checkpoint_ignores_stray_dir_entries(tmp_path):
+    from repro.checkpoint import AsyncSaver, latest_step, load, save
+    tree = {"x": jnp.ones(3)}
+    save(str(tmp_path), 5, tree)
+    # editor droppings, partial writes, and lookalike files must all be
+    # invisible to step discovery
+    (tmp_path / "step_junk").mkdir()            # dir, bad suffix
+    (tmp_path / "step_000000009").write_text("not a dir")
+    (tmp_path / "manifest.bak").write_text("{}")
+    (tmp_path / "step_7.tmp").mkdir()           # uncommitted save
+    assert latest_step(str(tmp_path)) == 5
+    like = {"x": jax.ShapeDtypeStruct((3,), jnp.float32)}
+    loaded, _ = load(str(tmp_path), 5, like)
+    np.testing.assert_allclose(np.asarray(loaded["x"]), 1.0)
+    # retention GC walks the same filter: strays survive, steps rotate
+    s = AsyncSaver(str(tmp_path), keep=1)
+    s.submit(6, tree)
+    s.wait()
+    assert latest_step(str(tmp_path)) == 6
+    assert not (tmp_path / "step_000000005").exists()
+    assert (tmp_path / "step_000000009").exists()
+
+
+def test_checkpoint_load_verifies_tree_structure(tmp_path):
+    from repro.checkpoint import load, save
+    save(str(tmp_path), 1, {"a": jnp.ones(4), "b": jnp.zeros(4)})
+    # same leaf count, different structure
+    bad_tree = {"a": {"nested": jax.ShapeDtypeStruct((4,), jnp.float32)},
+                "c": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    with pytest.raises(ValueError, match="tree structure"):
+        load(str(tmp_path), 1, bad_tree)
+    # a corrupted manifest whose treedef string still matches: the leaf
+    # count is the remaining line of defence
+    import json
+    mpath = tmp_path / "step_000000001" / "manifest.json"
+    m = json.loads(mpath.read_text())
+    m["n_leaves"] = 3
+    mpath.write_text(json.dumps(m))
+    good_like = {"a": jax.ShapeDtypeStruct((4,), jnp.float32),
+                 "b": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    with pytest.raises(ValueError, match="leaves"):
+        load(str(tmp_path), 1, good_like)
+    m["n_leaves"] = 2
+    mpath.write_text(json.dumps(m))
+    # right structure, wrong per-leaf shape
+    with pytest.raises(ValueError, match="saved shape"):
+        load(str(tmp_path), 1,
+             {"a": jax.ShapeDtypeStruct((8,), jnp.float32),
+              "b": jax.ShapeDtypeStruct((4,), jnp.float32)})
+
+
 def test_int8_compression_roundtrip():
     x = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)) * 5)
     q, s = compress_int8(x)

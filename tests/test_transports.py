@@ -306,6 +306,61 @@ def test_multidevice_all_solvers_vs_host_oracle_new_transports(transport):
     assert "OK" in r.stdout
 
 
+# --------------------------------------------------------------------- #
+# harness sensitivity: the corrupting 'faulty' wrapper (PR 6) must FAIL
+# the conformance sweep — a harness that passes whatever a transport
+# emits would also wave through real payload corruption
+# --------------------------------------------------------------------- #
+def test_conformance_harness_catches_the_faulty_transport():
+    r = run_subprocess(["-m", "repro.testing.transport_check",
+                        "--n-node", "4", "--n-core", "2",
+                        "--case", "graded", "--include-faulty"])
+    assert r.returncode != 0, r.stdout + r.stderr
+    faulty = [ln for ln in r.stdout.splitlines()
+              if ln.startswith("TRANSPORT faulty")]
+    assert faulty and all("BAD" in ln for ln in faulty), r.stdout
+    # the corruption must show on BOTH checks: device ghost vs a2a
+    # reference AND device vs the (uncorrupted) numpy host reference
+    assert "ghost=BAD" in faulty[0] and "host=BAD" in faulty[0]
+    # ...while every genuine transport still passes in the same sweep
+    for ln in r.stdout.splitlines():
+        if ln.startswith("TRANSPORT") and not ln.startswith(
+                "TRANSPORT faulty"):
+            assert "BAD" not in ln, ln
+
+
+def test_faulty_transport_registration_roundtrip():
+    from repro.core.transport import FaultyTransport, unregister_transport
+    assert "faulty" not in available_transports()   # never auto-registered
+    tr = register_transport(FaultyTransport())
+    try:
+        assert "faulty" in available_transports()
+        assert get_transport("faulty") is tr
+    finally:
+        assert unregister_transport("faulty") is tr
+    assert "faulty" not in available_transports()
+    with pytest.raises(ValueError, match="unknown transport"):
+        unregister_transport("faulty")
+
+
+def test_faulty_host_reference_is_uncorrupted():
+    """host_exchange delegates verbatim — the numpy path stays the truth
+    the harness can hold the corrupted device path against."""
+    from repro.core.transport import FaultyTransport
+    A = graded_extruded_mesh_matrix(40, 6, seed=0)
+    plan, layout = build_spmv_plan(A, 4, 2, mode="balanced")
+    x = np.random.default_rng(0).normal(size=A.n_rows)
+    xd = np.asarray(to_dist(x, layout, plan))
+    tr, state = resolve_transport(FaultyTransport(), plan)
+    ref_tr, ref_state = resolve_transport("a2a", plan)
+    np.testing.assert_array_equal(
+        tr.host_exchange(xd, np.asarray(plan.send_own),
+                         np.asarray(plan.recv_own), plan.g_pad, state),
+        ref_tr.host_exchange(xd, np.asarray(plan.send_own),
+                             np.asarray(plan.recv_own), plan.g_pad,
+                             ref_state))
+
+
 def test_multidevice_auto_transport_fused_cg_vs_oracle():
     r = run_subprocess(["-m", "repro.testing.dist_check",
                         "--n-node", "4", "--n-core", "2",
