@@ -87,7 +87,23 @@ def main() -> int:
     ap.add_argument("--commit", default=None,
                     help="override the commit stamp (default: GITHUB_SHA "
                          "or git rev-parse HEAD)")
+    ap.add_argument("--extra", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="additional top-level metric(s) to stamp on the "
+                         "entry, e.g. --extra analyze_wall_s=5.9 (values "
+                         "parsed as JSON when possible, else kept as "
+                         "strings); repeatable")
     args = ap.parse_args()
+
+    extra = {}
+    for kv in args.extra:
+        key, sep, value = kv.partition("=")
+        if not sep or not key:
+            raise SystemExit(f"--extra wants KEY=VALUE, got {kv!r}")
+        try:
+            extra[key] = json.loads(value)
+        except json.JSONDecodeError:
+            extra[key] = value
 
     raw = (open(args.from_file).read() if args.from_file
            else sys.stdin.read())
@@ -107,6 +123,7 @@ def main() -> int:
            "bench": trim(bench)}
     if args.label:
         rec["label"] = args.label
+    rec.update(extra)
     with open(args.file, "a") as f:
         f.write(json.dumps(rec) + "\n")
     print(f"appended entry {rec['entry']} @ {commit[:12]} to {args.file}")

@@ -13,7 +13,6 @@ on the host.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from common import (emit, fmt_collectives, fmt_collectives_per_iter,
                     run_bench_subprocess)

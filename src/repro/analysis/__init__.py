@@ -1,0 +1,45 @@
+"""Static SPMD contract verification — prove the invariants, don't run them.
+
+The paper's speedups rest on structural invariants the rest of the repo
+encodes but, until now, only checked *dynamically* by executing 8-device
+programs: every ghost slot has exactly one writer, the SpMV body emits
+zero all-reduces, each solver pays its declared reductions per iteration,
+the exchange moves exactly the bytes its transport's ``predicted_cost``
+claims.  This package proves the same contracts **statically**, in
+seconds, for every registered format x transport x solver x precond
+combination — so a broken registration (a lossy wire format, a
+rectangular-SpMV plan, an AMG transfer operator) is a CI failure before
+it ever executes.
+
+Three layers, each owning the invariants only it can see:
+
+``plan_check``    host-side race/aliasing detection over ``SpMVPlan``
+                  numpy data: single-writer ghost slots, slot-map
+                  permutations, partition-bound consistency, storage
+                  accounting.
+``jaxpr_pass``    device-free ``jax.make_jaxpr(..., axis_env=...)``
+                  traces of the shard body, the exchange, and each
+                  solver's fused loop: zero-all-reduce SpMV, per-solver
+                  reductions/iter, derived wire bytes ==
+                  ``predicted_cost``, payload-transform linting (how a
+                  corrupting transport is caught without running it),
+                  downcast/scatter-ordering lints.
+``kernel_check``  bounds verification of the formats' static gather/
+                  scatter index streams against the plan's buffer
+                  extents — an OOB index is flagged here, not left to be
+                  a device fault.
+
+``repro.testing.analyze`` sweeps the full registry through all three
+layers and emits a JSON violation report; DESIGN.md §12 documents the
+contract language and every violation code.
+"""
+from repro.analysis.jaxpr_pass import (check_precond_static,
+                                       check_solver_static,
+                                       check_spmv_static)
+from repro.analysis.kernel_check import check_kernel_streams
+from repro.analysis.plan_check import check_plan
+from repro.analysis.report import CODES, Report, Violation
+
+__all__ = ["CODES", "Report", "Violation", "check_plan",
+           "check_kernel_streams", "check_spmv_static",
+           "check_solver_static", "check_precond_static"]

@@ -1,0 +1,398 @@
+"""Layer 2 — device-free jaxpr proofs of the collective contracts.
+
+The key mechanism: ``jax.make_jaxpr(fn, axis_env=[("node", N), ("core",
+M)])`` traces SPMD collectives (psum, all_to_all, all_gather, ppermute)
+**without any devices or mesh** — so the exact program every shard runs
+inside ``shard_map`` can be traced and inspected in milliseconds, for
+every registered combination, on a single-CPU CI runner.  The compiled
+HLO census (``repro.util.while_body_collective_counts``, asserted in the
+bench-smoke job) then only needs to spot-check that XLA compiles what
+the jaxpr promised (:func:`check_solver_hlo`).
+
+Proven here (codes in ``repro.analysis.report``):
+
+* the SpMV shard body emits **zero all-reduces** for every format x
+  transport (``J_SPMV_ALLREDUCE``) and its full per-kind census equals
+  the transport's ``predicted_cost`` plus exactly one core-axis
+  ``all_gather`` for the node-local x assembly (``J_CENSUS_MISMATCH``);
+* inter-node wire bytes *derived from the traced exchange* (operand
+  shapes x participating pairs) equal the ``predicted_cost`` table
+  (``J_WIRE_MISMATCH``) — the table can no longer drift from the code;
+* an ``exact_wire`` transport's exchange contains only data-movement and
+  single-writer-assembly primitives — bit manipulation or payload
+  arithmetic is how a corrupting transport (``FaultyTransport``) is
+  caught **statically** (``J_PAYLOAD_TRANSFORM`` /
+  ``J_PAYLOAD_UNKNOWN_OP``);
+* each solver's fused while-body carries exactly its declared
+  ``reductions_per_iter`` all-reduces (``J_SOLVER_REDUCTIONS`` /
+  ``J_SOLVER_UNDECLARED``);
+* a ``local_only`` preconditioner's ``apply`` is collective-free
+  (``J_PRECOND_COLLECTIVE``);
+* advisory lints: silent float downcasts (``J_DOWNCAST``) and unsorted
+  non-unique scatter-adds (``J_SCATTER_UNORDERED``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.report import Report, Violation
+from repro.core.spmv import make_shard_body, plan_fields, plan_shard_arrays
+from repro.core.transport import get_transport, resolve_transport
+from repro.solvers.base import SolverCtx, get_solver
+from repro.solvers.precond import get_precond
+from repro.util import (COLLECTIVE_OPS, SOLVER_REDUCTION_OPS,
+                        iter_jaxpr_eqns, jaxpr_collective_counts,
+                        jaxpr_while_eqns)
+
+__all__ = ["trace_shard_body", "trace_exchange", "check_spmv_static",
+           "check_solver_static", "check_precond_static",
+           "check_solver_hlo", "PAYLOAD_ALLOW", "PAYLOAD_DENY"]
+
+AXES = ("node", "core")
+
+#: primitives an exact-wire exchange may use: data movement, index
+#: arithmetic, predication, and the single-writer assembly gather + add.
+PAYLOAD_ALLOW = frozenset({
+    # collectives + SPMD identity
+    "all_gather", "all_to_all", "ppermute", "axis_index",
+    # movement / layout
+    "gather", "scatter", "slice", "dynamic_slice", "dynamic_update_slice",
+    "concatenate", "reshape", "transpose", "squeeze", "expand_dims",
+    "broadcast_in_dim", "pad", "iota", "copy", "stop_gradient",
+    # the sanctioned assembly add (each real slot has one writer, so the
+    # sum only combines one value with zeros) + index arithmetic
+    "add", "sub", "rem", "reduce_sum", "select_n", "clamp", "min", "max",
+    "lt", "le", "gt", "ge", "eq", "ne", "and", "or", "not",
+    "convert_element_type",
+})
+
+#: primitives that *transform* the payload: emitting one of these in an
+#: exchange that claims ``exact_wire`` is a contract violation — this is
+#: exactly how FaultyTransport's bitcast+xor corruption is caught
+#: without running a single device program.
+PAYLOAD_DENY = frozenset({
+    "bitcast_convert_type", "xor", "shift_left", "shift_right_logical",
+    "shift_right_arithmetic", "mul", "div", "neg", "integer_pow", "pow",
+    "exp", "log", "sqrt", "rsqrt", "abs", "sign", "round", "floor",
+    "ceil", "nextafter",
+})
+
+#: call/control-flow wrappers — not operations themselves; their inner
+#: jaxprs are already walked by ``iter_jaxpr_eqns``.
+STRUCTURAL = frozenset({
+    "pjit", "closed_call", "core_call", "custom_jvp_call",
+    "custom_vjp_call", "custom_vjp_call_jaxpr", "remat", "checkpoint",
+    "while", "cond", "scan", "optimization_barrier",
+})
+
+
+def _axis_env(plan: Any) -> list[tuple[str, int]]:
+    return [(AXES[0], plan.n_node), (AXES[1], plan.n_core)]
+
+
+def _shard_F(plan: Any, body: Any) -> dict[str, jax.Array]:
+    """Per-shard constants dict exactly as the shard_map body sees them
+    (leading (1, 1) shard dims stripped from shard 0's slice)."""
+    fields = plan_fields(plan) + tuple(body.extra)
+    arrays = plan_shard_arrays(plan) + tuple(body.extra.values())
+    return {k: v[0, 0] for k, v in zip(fields, arrays)}
+
+
+def trace_shard_body(plan: Any, transport: Any = None,
+                     backend: str = "jnp") -> Any:
+    """Closed jaxpr of one shard's two-phase SpMV body, traced under the
+    plan's (node, core) axis environment — no devices required."""
+    body = make_shard_body(plan, axis_names=AXES, backend=backend,
+                           transport=transport)
+    F = _shard_F(plan, body)
+    x = jnp.zeros((plan.rc_pad,), plan.mask.dtype)
+    return jax.make_jaxpr(lambda v: body(F, v),
+                          axis_env=_axis_env(plan))(x)
+
+
+def trace_exchange(plan: Any, transport: Any) -> Any:
+    """Closed jaxpr of the transport's ghost exchange alone (the wire
+    microscope).  Raises on halo-free plans — there is no exchange."""
+    if plan.hs == 0:
+        raise ValueError("plan has no halo traffic (hs == 0)")
+    tr, state = resolve_transport(transport, plan)
+    extra = {k: v[0, 0] for k, v in tr.extra_arrays(plan, state).items()}
+    F = {"send_own": plan.send_own[0, 0], "recv_own": plan.recv_own[0, 0],
+         **extra}
+    x = jnp.zeros((plan.rc_pad,), plan.mask.dtype)
+    return jax.make_jaxpr(
+        lambda v: tr.exchange(v, F, state=state, axes=AXES,
+                              n_node=plan.n_node, g_pad=plan.g_pad),
+        axis_env=_axis_env(plan))(x)
+
+
+def _axis_names(eqn: Any) -> tuple[str, ...]:
+    ax = eqn.params.get("axis_name", ())
+    return tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+
+
+def _operand_bytes(eqn: Any) -> int:
+    aval = eqn.invars[0].aval
+    return int(aval.size) * int(jnp.dtype(aval.dtype).itemsize)
+
+
+def derived_wire_bytes(exchange_jaxpr: Any, n_node: int,
+                       n_core: int) -> int:
+    """Total inter-node wire bytes of one exchange, derived statically
+    from the traced collectives' operand shapes and permutations.
+
+    The model matches how ``predicted_cost`` counts: a node-axis
+    ``all_to_all`` moves each device's operand minus its own share; a
+    node-axis ``ppermute`` moves one operand per (src != dst) pair; the
+    node axis is SPMD-replicated across ``n_core`` core rows, which each
+    pay the traffic; core-axis collectives are intra-node (0 wire).
+    """
+    node_ax = AXES[0]
+    wire = 0
+    for eqn in iter_jaxpr_eqns(exchange_jaxpr):
+        name = eqn.primitive.name
+        if name not in ("all_to_all", "ppermute", "all_gather"):
+            continue
+        axes = _axis_names(eqn)
+        if node_ax not in axes:
+            continue                      # intra-node: no wire
+        nbytes = _operand_bytes(eqn)
+        if name == "all_to_all":
+            wire += n_core * nbytes * (n_node - 1)
+        elif name == "ppermute":
+            pairs = sum(1 for s, d in eqn.params.get("perm", ())
+                        if s != d)
+            wire += n_core * nbytes * pairs
+        else:                             # node-axis all_gather
+            wire += n_core * n_node * nbytes * (n_node - 1)
+    return wire
+
+
+def _lint_payload(plan: Any, transport: Any, out: Report) -> None:
+    tr = get_transport(transport)
+    jxp = trace_exchange(plan, tr)
+    ctx = {"format": plan.format, "transport": tr.name}
+    out.count(1)
+    for eqn in iter_jaxpr_eqns(jxp):
+        name = eqn.primitive.name
+        if name in STRUCTURAL:
+            continue
+        if name in PAYLOAD_DENY:
+            out.add(Violation(
+                "J_PAYLOAD_TRANSFORM",
+                f"exchange emits payload-transforming primitive "
+                f"{name!r} while the transport declares "
+                f"exact_wire={tr.exact_wire}", ctx,
+                severity=None if tr.exact_wire else "warning"))
+        elif name not in PAYLOAD_ALLOW:
+            out.add(Violation(
+                "J_PAYLOAD_UNKNOWN_OP",
+                f"exchange uses primitive {name!r} outside the known "
+                "data-movement allowlist", ctx))
+
+
+def _lint_numerics(jxp: Any, ctx: dict[str, Any], out: Report) -> None:
+    """Advisory downcast + scatter-ordering lints over any trace."""
+    seen_downcast: set[str] = set()
+    seen_scatter = False
+    for eqn in iter_jaxpr_eqns(jxp):
+        name = eqn.primitive.name
+        if name == "convert_element_type":
+            src = jnp.dtype(eqn.invars[0].aval.dtype)
+            dst = jnp.dtype(eqn.params.get("new_dtype", src))
+            key = f"{src}->{dst}"
+            if (src.kind == "f" and dst.kind == "f"
+                    and dst.itemsize < src.itemsize
+                    and key not in seen_downcast):
+                seen_downcast.add(key)
+                out.add(Violation(
+                    "J_DOWNCAST",
+                    f"silent float downcast {key} in traced program",
+                    ctx))
+        elif name == "scatter-add" and not seen_scatter:
+            if (not eqn.params.get("indices_are_sorted", False)
+                    and not eqn.params.get("unique_indices", False)):
+                seen_scatter = True
+                out.add(Violation(
+                    "J_SCATTER_UNORDERED",
+                    "scatter-add with unsorted, non-unique indices: "
+                    "summation order is implementation-defined "
+                    "(bit-reproducibility advisory)", ctx))
+
+
+def check_spmv_static(plan: Any, transport: Any = None,
+                      backend: str = "jnp") -> Report:
+    """Prove the SpMV body's collective contract for one (plan,
+    transport): zero all-reduces, census == predicted_cost (+ the one
+    core-axis assembly all_gather), derived wire bytes == predicted,
+    payload lint, numeric lints.  Returns a :class:`Report`."""
+    out = Report()
+    tr = get_transport(transport if transport is not None
+                       else plan.transport)
+    ctx = {"format": plan.format, "transport": tr.name}
+
+    jxp = trace_shard_body(plan, transport=tr, backend=backend)
+    census = jaxpr_collective_counts(jxp)
+
+    out.count(1)
+    reductions = sum(census[k] for k in SOLVER_REDUCTION_OPS)
+    if reductions:
+        out.add(Violation(
+            "J_SPMV_ALLREDUCE",
+            f"SpMV shard body emits {reductions} reduction "
+            f"collective(s); the zero-all-reduce contract requires 0",
+            ctx))
+
+    out.count(1)
+    _, state = resolve_transport(tr, plan)
+    predicted = tr.predicted_cost(plan, state)
+    for kind in COLLECTIVE_OPS:
+        want = int(predicted.get(kind, 0))
+        if kind == "all-gather":
+            want += 1                 # the node-local x assembly gather
+        if census[kind] != want:
+            out.add(Violation(
+                "J_CENSUS_MISMATCH",
+                f"{kind}: traced {census[kind]}, predicted_cost implies "
+                f"{want}", {**ctx, "kind": kind}))
+
+    if plan.hs > 0:
+        out.count(1)
+        derived = derived_wire_bytes(trace_exchange(plan, tr),
+                                     plan.n_node, plan.n_core)
+        want_wire = int(predicted.get("wire_bytes", 0))
+        if tr.exact_wire and derived != want_wire:
+            out.add(Violation(
+                "J_WIRE_MISMATCH",
+                f"derived wire bytes {derived} != predicted "
+                f"{want_wire}", ctx))
+        _lint_payload(plan, tr, out)
+
+    _lint_numerics(jxp, ctx, out)
+    return out
+
+
+def _solver_ctx(plan: Any, body: Any, pre: Any,
+                pdata: dict[str, jax.Array], opts: dict[str, Any],
+                maxiter_static: int = 10_000) -> SolverCtx:
+    F = _shard_F(plan, body)
+    Pd = {k: v[0, 0] for k, v in pdata.items()}
+    return SolverCtx(
+        spmv=jax.vmap(lambda v: body(F, v)),
+        precond=lambda r: pre.apply(Pd, r),
+        mask=plan.mask[0, 0], axes=AXES,
+        maxiter_static=maxiter_static, options=opts)
+
+
+def check_solver_static(plan: Any, solver: Any, precond: Any = "jacobi",
+                        transport: Any = None, A: Any = None,
+                        layout: dict[str, Any] | None = None,
+                        options: dict[str, Any] | None = None) -> Report:
+    """Prove one solver's reductions-per-iteration contract on this plan:
+    trace the fused ``shard_loop`` device-free, find the while body, and
+    count its reduction collectives against the solver's declared
+    ``reductions_per_iter``.  Returns a :class:`Report`."""
+    out = Report()
+    sol = get_solver(solver)
+    pre = get_precond(precond)
+    body = make_shard_body(plan, axis_names=AXES, transport=transport)
+    pdata = pre.build(plan, layout=layout, A=A)
+    opts = sol.prepare(plan, pre, pdata, A=A, layout=layout,
+                       options=options)
+    ctx_info = {"format": plan.format, "transport": body.transport,
+                "solver": sol.name, "precond": pre.name}
+
+    sctx = _solver_ctx(plan, body, pre, pdata, opts)
+    b = jnp.zeros((1, plan.rc_pad), plan.mask.dtype)
+    jxp = jax.make_jaxpr(
+        lambda bb, tt, mm: sol.shard_loop(sctx, bb, tt, mm),
+        axis_env=_axis_env(plan))(b, jnp.float32(1e-6), jnp.int32(100))
+
+    out.count(1)
+    if sol.reductions_per_iter is None:
+        out.add(Violation(
+            "J_SOLVER_UNDECLARED",
+            f"solver {sol.name!r} declares no reductions_per_iter — "
+            "the census contract cannot be checked", ctx_info))
+        return out
+
+    whiles = jaxpr_while_eqns(jxp)
+    out.count(1)
+    if not whiles:
+        out.add(Violation(
+            "J_SOLVER_REDUCTIONS",
+            f"solver {sol.name!r} shard_loop traced to no while loop — "
+            "not a fused iteration", ctx_info))
+        return out
+    # the outermost while is the solver loop (iter_jaxpr_eqns is DFS,
+    # parents before children)
+    body_census = jaxpr_collective_counts(whiles[0].params["body_jaxpr"])
+    got = sum(body_census[k] for k in SOLVER_REDUCTION_OPS)
+    if got != sol.reductions_per_iter:
+        out.add(Violation(
+            "J_SOLVER_REDUCTIONS",
+            f"while body carries {got} reduction collective(s); "
+            f"{sol.name!r} declares reductions_per_iter="
+            f"{sol.reductions_per_iter}", ctx_info))
+
+    _lint_numerics(jxp, ctx_info, out)
+    return out
+
+
+def check_precond_static(plan: Any, precond: Any, A: Any = None,
+                         layout: dict[str, Any] | None = None) -> Report:
+    """Prove a ``local_only`` preconditioner's ``apply`` is
+    collective-free (traced under the mesh axis environment)."""
+    out = Report()
+    pre = get_precond(precond)
+    pdata = pre.build(plan, layout=layout, A=A)
+    Pd = {k: v[0, 0] for k, v in pdata.items()}
+    r = jnp.zeros((1, plan.rc_pad), plan.mask.dtype)
+    jxp = jax.make_jaxpr(lambda rr: pre.apply(Pd, rr),
+                         axis_env=_axis_env(plan))(r)
+    out.count(1)
+    census = jaxpr_collective_counts(jxp)
+    total = sum(census.values())
+    if total and pre.local_only:
+        out.add(Violation(
+            "J_PRECOND_COLLECTIVE",
+            f"preconditioner {pre.name!r} declares local_only but apply "
+            f"emits {total} collective(s): "
+            f"{ {k: v for k, v in census.items() if v} }",
+            {"format": plan.format, "precond": pre.name}))
+    return out
+
+
+def check_solver_hlo(plan: Any, mesh: Any, solver: str,
+                     precond: str = "jacobi",
+                     A: Any = None, layout: dict[str, Any] | None = None,
+                     options: dict[str, Any] | None = None) -> Report:
+    """Compiled-HLO spot check (needs a live mesh): the while-body census
+    of the real ``make_solver`` program must agree with the statically
+    proven contract.  This is the bridge to the bench-smoke CI
+    assertions — the jaxpr layer proves every combo cheaply, this
+    confirms XLA compiles what the jaxpr promised."""
+    from repro.solvers.base import make_solver
+    from repro.util import while_body_collective_counts
+
+    out = Report()
+    sol = get_solver(solver)
+    solve = make_solver(plan, mesh, solver=solver, precond=precond,
+                        A=A, layout=layout, options=options)
+    b = jnp.zeros(plan.cg_shape, plan.mask.dtype)
+    census = while_body_collective_counts(
+        solve.jitted, b, jnp.float32(1e-6), jnp.int32(10))
+    out.count(1)
+    got = sum(census.get(k, 0) for k in SOLVER_REDUCTION_OPS)
+    if got != sol.reductions_per_iter:
+        out.add(Violation(
+            "J_HLO_CENSUS",
+            f"compiled while-body carries {got} reduction "
+            f"collective(s); {sol.name!r} declares "
+            f"{sol.reductions_per_iter}",
+            {"format": plan.format, "solver": sol.name,
+             "precond": precond}))
+    return out

@@ -1,0 +1,245 @@
+"""Layer 1 — host-side race/aliasing detection over ``SpMVPlan`` data.
+
+Everything here is pure numpy over the plan's static arrays: no tracing,
+no devices.  The invariants proven (codes in ``repro.analysis.report``):
+
+* every *real* ghost slot has **exactly one writer** across the whole
+  receive table (``P_GHOST_MULTI_WRITER``) — the single-writer property
+  is what makes the gather+add ghost assembly equal to an all-reduce
+  without emitting one, so a second writer is a silent race;
+* every ghost slot a nonzero off-diagonal entry *reads* is written by
+  someone (``P_GHOST_STALE_READ``);
+* the send/receive tables index inside their buffers (``P_SEND_OOB`` /
+  ``P_RECV_OOB``);
+* the folded slot order is a true permutation: ``x_gather`` maps the
+  node's rows bijectively onto mask-valid vector slots and is replicated
+  across the core axis (``P_SLOT_PERM``);
+* partition bounds are monotone, cover ``[0, n]``, and agree with the
+  per-node valid-row counts (``P_NODE_BOUNDS``, needs ``layout``);
+* the mask counts exactly ``n`` valid slots (``P_MASK_COUNT``);
+* format storage accounting is self-consistent (``P_ACCOUNTING``);
+* halo-free plans really carry no ghost machinery (``P_HALO_FREE``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from repro.analysis.report import Report, Violation
+from repro.core.halo import ghost_writer_counts
+from repro.sparse.formats import get_format
+
+__all__ = ["check_plan"]
+
+
+def _ctx(plan: Any, **extra: object) -> dict[str, Any]:
+    return {"format": plan.format, **extra}
+
+
+def _check_halo_tables(plan: Any, out: Report) -> None:
+    send = np.asarray(plan.send_own)
+    recv = np.asarray(plan.recv_own)
+    g_pad, hs = plan.g_pad, plan.hs
+
+    out.count(2)
+    if (hs == 0) != (g_pad == 0):
+        out.add(Violation("P_HALO_FREE",
+                          f"hs={hs} but g_pad={g_pad}: halo-free means "
+                          "both are zero", _ctx(plan)))
+    if hs == 0:
+        streams = get_format(plan.format).index_streams()
+        for st in streams:
+            vals = np.asarray(plan.fmt_data[st.vals])
+            if st.x == "ghost" and vals.size and np.any(vals != 0):
+                out.add(Violation(
+                    "P_HALO_FREE",
+                    f"halo-free plan stores nonzero off-diagonal values "
+                    f"in {st.vals!r}", _ctx(plan, field=st.vals)))
+        return
+
+    out.count(2)
+    bad_send = (send < 0) | (send >= plan.rc_pad)
+    if np.any(bad_send):
+        idx = tuple(int(i) for i in np.argwhere(bad_send)[0])
+        out.add(Violation(
+            "P_SEND_OOB",
+            f"{int(bad_send.sum())} send_own entries outside "
+            f"[0, {plan.rc_pad}) (first at {idx}: "
+            f"{int(send[idx])})", _ctx(plan)))
+    bad_recv = (recv < 0) | (recv > g_pad)
+    if np.any(bad_recv):
+        idx = tuple(int(i) for i in np.argwhere(bad_recv)[0])
+        out.add(Violation(
+            "P_RECV_OOB",
+            f"{int(bad_recv.sum())} recv_own entries outside "
+            f"[0, {g_pad}] (first at {idx}: {int(recv[idx])})",
+            _ctx(plan)))
+
+    # single-writer: each real slot written at most once over the whole
+    # (core, src, k) receive table of its destination node
+    out.count(1)
+    writers = ghost_writer_counts(recv, g_pad)
+    multi = np.argwhere(writers > 1)
+    if multi.size:
+        node, slot = (int(v) for v in multi[0])
+        out.add(Violation(
+            "P_GHOST_MULTI_WRITER",
+            f"{len(multi)} ghost slot(s) with multiple writers (first: "
+            f"node {node} slot {slot} has {int(writers[node, slot])} "
+            "writers)", _ctx(plan, node=node, slot=slot)))
+
+    # stale reads: every ghost slot a nonzero offd entry references must
+    # have a writer (the format says which slots are referenced)
+    out.count(1)
+    for st in get_format(plan.format).index_streams():
+        if st.x != "ghost":
+            continue
+        vals = np.asarray(plan.fmt_data[st.vals])
+        cols = np.asarray(plan.fmt_data[st.cols])
+        if vals.size == 0:
+            continue
+        for node in range(plan.n_node):
+            ref = np.unique(cols[node][vals[node] != 0])
+            ref = ref[(ref >= 0) & (ref < g_pad)]   # OOB is K_INDEX_OOB's job
+            stale = ref[writers[node, ref] == 0]
+            if stale.size:
+                out.add(Violation(
+                    "P_GHOST_STALE_READ",
+                    f"node {node}: {stale.size} referenced ghost slot(s) "
+                    f"have no writer (first: slot {int(stale[0])} via "
+                    f"{st.cols!r})",
+                    _ctx(plan, node=node, field=st.cols,
+                         slot=int(stale[0]))))
+                break
+
+
+def _check_slot_maps(plan: Any, out: Report) -> None:
+    xg = np.asarray(plan.x_gather)
+    mask = np.asarray(plan.mask)
+
+    out.count(1)
+    if not np.all((mask == 0.0) | (mask == 1.0)):
+        out.add(Violation("P_MASK_COUNT",
+                          "mask holds values other than 0/1", _ctx(plan)))
+    total = int(mask.sum())
+    if total != plan.n:
+        out.add(Violation(
+            "P_MASK_COUNT",
+            f"mask marks {total} valid slots, matrix has n={plan.n} rows",
+            _ctx(plan)))
+
+    out.count(plan.n_node)
+    n_slots = plan.n_core * plan.rc_pad
+    for node in range(plan.n_node):
+        nl = int(mask[node].sum())
+        if not np.all(xg[node] == xg[node, :1]):
+            out.add(Violation(
+                "P_SLOT_PERM",
+                f"node {node}: x_gather differs across the core axis "
+                "(must be replicated)", _ctx(plan, node=node)))
+            continue
+        e = xg[node, 0, :nl].astype(np.int64)
+        if np.any((e < 0) | (e >= n_slots)):
+            out.add(Violation(
+                "P_SLOT_PERM",
+                f"node {node}: x_gather points outside the node's "
+                f"{n_slots} vector slots", _ctx(plan, node=node)))
+            continue
+        if len(np.unique(e)) != nl:
+            out.add(Violation(
+                "P_SLOT_PERM",
+                f"node {node}: x_gather maps {nl} rows onto "
+                f"{len(np.unique(e))} distinct slots — not a permutation",
+                _ctx(plan, node=node)))
+            continue
+        core, lr = e // plan.rc_pad, e % plan.rc_pad
+        if not np.all(mask[node, core, lr] == 1.0):
+            bad = int(np.argwhere(mask[node, core, lr] != 1.0)[0][0])
+            out.add(Violation(
+                "P_SLOT_PERM",
+                f"node {node}: x_gather row {bad} targets a padding slot "
+                f"(core {int(core[bad])}, slot {int(lr[bad])})",
+                _ctx(plan, node=node)))
+
+
+def _check_accounting(plan: Any, out: Report) -> None:
+    fmt = get_format(plan.format)
+    out.count(2)
+    declared_vals = [st.vals for st in fmt.index_streams()]
+    if declared_vals:
+        stored = sum(int(np.asarray(plan.fmt_data[v]).size)
+                     for v in declared_vals)
+        if fmt.nnz_stored(plan.fmt_data) != stored:
+            out.add(Violation(
+                "P_ACCOUNTING",
+                f"nnz_stored()={fmt.nnz_stored(plan.fmt_data)} but the "
+                f"declared value streams hold {stored} slots",
+                _ctx(plan)))
+        nonzero = sum(int(np.count_nonzero(np.asarray(plan.fmt_data[v])))
+                      for v in declared_vals)
+        waste = fmt.padding_waste(plan.fmt_data, nonzero)
+        if not 0.0 <= waste < 1.0 + 1e-12:
+            out.add(Violation(
+                "P_ACCOUNTING",
+                f"padding_waste={waste} outside [0, 1) for "
+                f"nnz_true>={nonzero}", _ctx(plan)))
+
+    out.count(1)
+    diag = np.asarray(plan.diag_a)
+    mask = np.asarray(plan.mask)
+    if not np.all(np.isfinite(diag)):
+        out.add(Violation("P_ACCOUNTING",
+                          "diag_a holds nonfinite entries",
+                          _ctx(plan, field="diag_a")))
+    elif np.any(diag[mask == 1.0] == 0.0):
+        out.add(Violation(
+            "P_ACCOUNTING",
+            "diag_a is zero on a valid row — the Jacobi preconditioner "
+            "would be infinite there", _ctx(plan, field="diag_a")))
+
+
+def _check_bounds(plan: Any, layout: dict[str, Any], out: Report) -> None:
+    nb = np.asarray(layout["node_bounds"], dtype=np.int64)
+    mask = np.asarray(plan.mask)
+    out.count(1)
+    if len(nb) != plan.n_node + 1:
+        out.add(Violation(
+            "P_NODE_BOUNDS",
+            f"node_bounds has {len(nb)} entries for {plan.n_node} nodes",
+            _ctx(plan)))
+        return
+    if np.any(np.diff(nb) < 0) or int(nb[0]) != 0 or int(nb[-1]) != plan.n:
+        out.add(Violation(
+            "P_NODE_BOUNDS",
+            f"node_bounds {nb.tolist()} is not monotone over "
+            f"[0, {plan.n}]", _ctx(plan)))
+        return
+    for node in range(plan.n_node):
+        nl = int(nb[node + 1] - nb[node])
+        got = int(mask[node].sum())
+        if nl != got:
+            out.add(Violation(
+                "P_NODE_BOUNDS",
+                f"node {node}: bounds claim {nl} rows, the mask marks "
+                f"{got} valid slots", _ctx(plan, node=node)))
+        cb = np.asarray(layout["core_bounds"][node], dtype=np.int64)
+        if (len(cb) != plan.n_core + 1 or np.any(np.diff(cb) < 0)
+                or int(cb[0]) != 0 or int(cb[-1]) != nl):
+            out.add(Violation(
+                "P_NODE_BOUNDS",
+                f"node {node}: core_bounds {cb.tolist()} does not cover "
+                f"[0, {nl}]", _ctx(plan, node=node)))
+
+
+def check_plan(plan: Any, layout: dict[str, Any] | None = None) -> Report:
+    """Run every plan-layer invariant; ``layout`` (from
+    ``build_spmv_plan``) additionally enables the partition-bound
+    checks.  Returns a :class:`Report` (errors gate CI)."""
+    out = Report()
+    _check_halo_tables(plan, out)
+    _check_slot_maps(plan, out)
+    _check_accounting(plan, out)
+    if layout is not None:
+        _check_bounds(plan, layout, out)
+    return out

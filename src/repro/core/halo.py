@@ -27,7 +27,7 @@ import numpy as np
 from repro.util import align_up
 
 __all__ = ["HaloPlan", "build_halo_plan", "pair_traffic",
-           "populated_offsets"]
+           "populated_offsets", "ghost_writer_counts"]
 
 
 def pair_traffic(recv_own: np.ndarray, g_pad: int) -> np.ndarray:
@@ -40,6 +40,31 @@ def pair_traffic(recv_own: np.ndarray, g_pad: int) -> np.ndarray:
     if recv_own.shape[-1] == 0:
         return np.zeros((recv_own.shape[0], recv_own.shape[0]), dtype=bool)
     return (recv_own < g_pad).any(axis=(1, 3))
+
+
+def ghost_writer_counts(recv_own: np.ndarray, g_pad: int) -> np.ndarray:
+    """(n_node, g_pad) int: how many (core, src, k) receive-table entries
+    write each *real* ghost slot of each destination node.
+
+    The single-writer invariant — every real slot written exactly once
+    across the whole receive table — is what lets the ghost assembly be a
+    gather + local add instead of an all-reduce (``_gather_add`` in
+    ``repro.core.transport``): the add only ever combines one value with
+    zeros.  A slot with two writers is a race whose outcome depends on
+    scatter ordering; the static verifier (``repro.analysis.plan_check``)
+    turns it into a CI error.  Writes to the dump slot ``g_pad`` are
+    excluded — it is write-only garbage by contract.
+    """
+    recv_own = np.asarray(recv_own)
+    n_node = recv_own.shape[0]
+    counts = np.zeros((n_node, max(g_pad, 1)), dtype=np.int64)
+    if g_pad == 0 or recv_own.shape[-1] == 0:
+        return counts[:, :g_pad]
+    for dst in range(n_node):
+        slots = recv_own[dst].reshape(-1)
+        counts[dst] = np.bincount(slots[slots < g_pad],
+                                  minlength=g_pad)[:g_pad]
+    return counts[:, :g_pad]
 
 
 def populated_offsets(traffic: np.ndarray) -> list[int]:

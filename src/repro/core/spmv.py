@@ -185,7 +185,8 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
                     rows_align: int = 8, width_align: int = 1,
                     node_partition: str | None = None,
                     format: str | ShardFormat = "ell",
-                    transport: str | HaloTransport = "a2a"
+                    transport: str | HaloTransport = "a2a",
+                    verify: bool = False
                     ) -> tuple[SpMVPlan, dict]:
     """Partition ``A``, split diag/offdiag, pack shard blocks + halo plan.
 
@@ -216,6 +217,12 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
     and ``transport_census`` — every registered transport's predicted
     exchange cost (padded wire bytes + per-kind collective counts) for
     this plan.
+
+    ``verify=True`` runs the static contract verifier's host layers
+    (``repro.analysis``: plan invariants + kernel index-stream bounds)
+    on the finished plan and raises ``ValueError`` on any error-severity
+    violation — the same checks ``repro.testing.analyze`` sweeps in CI,
+    available inline for plans built outside the registry sweep.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -338,6 +345,16 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
         "transport_census": transport_census(plan),
         "stats": stats,
     }
+    if verify:
+        # late import: repro.analysis sits above core in the layering
+        from repro.analysis import check_kernel_streams, check_plan
+        rep = check_plan(plan, layout)
+        rep.extend(check_kernel_streams(plan).violations)
+        if rep.errors:
+            raise ValueError(
+                "build_spmv_plan(verify=True): plan violates "
+                f"{len(rep.errors)} static contract(s):\n  "
+                + "\n  ".join(str(v) for v in rep.errors))
     return plan, layout
 
 

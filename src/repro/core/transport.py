@@ -94,6 +94,17 @@ class HaloTransport:
     """
 
     name: str = ""
+    #: wire-payload contract: True promises ``exchange`` moves the
+    #: owners' vector bits *unchanged* — only data movement and the
+    #: single-writer assembly add may touch the payload.  The static
+    #: verifier (``repro.analysis.jaxpr_pass``) enforces it by linting
+    #: the traced exchange for value-transforming primitives (bit
+    #: manipulation, float arithmetic beyond the assembly add) and by
+    #: checking derived wire bytes against ``predicted_cost``.  A future
+    #: declared-lossy wire format (bf16/quantised ghosts, ROADMAP) sets
+    #: this False to downgrade the payload lint to advisory — corruption
+    #: is only a contract violation when the transport claims exactness.
+    exact_wire: bool = True
 
     # -- static plan state (host) -------------------------------------- #
     def plan_state(self, plan) -> dict:
@@ -428,6 +439,12 @@ class FaultyTransport(HaloTransport):
     ``unregister_transport``) or pass the instance directly — the
     resilient driver's bitflip injection uses an instance, never the
     registry.
+
+    It inherits ``exact_wire = True`` on purpose: it *claims* an exact
+    payload while corrupting it, which is exactly the lie the static
+    verifier (``repro.analysis.jaxpr_pass``) must catch without running
+    anything — the bitcast/xor primitives in its traced exchange are a
+    payload-lint error on a transport claiming exactness.
     """
 
     name = "faulty"

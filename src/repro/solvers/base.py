@@ -150,6 +150,16 @@ class Solver:
     """
 
     name: str = ""
+    #: declared all-reduce count of one ``loop_body`` iteration — the
+    #: solver's side of the collective-census contract.  The static
+    #: verifier (``repro.analysis.jaxpr_pass``) traces ``shard_loop``
+    #: device-free and proves the while-body psum count equals this
+    #: declaration for every registered format x transport combination
+    #: (the SpMV contributes zero all-reduces by construction, so the
+    #: whole body count is attributable to the solver).  ``None`` means
+    #: "no contract declared" and is itself flagged: a registered solver
+    #: must state its synchronisation cost.
+    reductions_per_iter: int | None = None
     #: :meth:`guard_scalars` keys that must stay strictly positive while
     #: the solve is healthy (SPD breakdown detection: CG's rz and p·Ap).
     positive_scalars: tuple[str, ...] = ()
@@ -335,14 +345,18 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
     from repro.core.spmv import (make_shard_body, plan_fields,
                                  plan_shard_arrays)
 
+    # resolve every name FIRST: an unknown solver/precond must raise the
+    # registry's ValueError (listing what is registered) before any
+    # expensive work — in particular before transport="auto" spends
+    # seconds compiling and timing candidate SpMVs it will throw away
+    sol = get_solver(solver)
+    pre = get_precond(precond)
     transport = transport if transport is not None else plan.transport
     if transport == "auto":     # explicit, or a deferred plan stamp
         from repro.core.transport import autotune_transport
         transport = autotune_transport(
             plan, mesh, axis_names=axis_names, backend=backend,
             neighbor_offsets=neighbor_offsets).winner
-    sol = get_solver(solver)
-    pre = get_precond(precond)
     node_ax, core_ax = axis_names
     axes = tuple(axis_names)
     body = make_shard_body(plan, axis_names=axis_names, backend=backend,

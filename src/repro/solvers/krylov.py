@@ -66,6 +66,9 @@ class CGSolver(Solver):
     """
 
     name = "cg"
+    #: psum 1 (p·Ap) + psum 2 (the stacked [r·z, r·r]) — statically
+    #: proven per iteration by repro.analysis.jaxpr_pass
+    reductions_per_iter = 2
     positive_scalars = ("rz", "pap")
 
     def state_kinds(self):
@@ -168,6 +171,10 @@ class PipelinedCGSolver(Solver):
     """
 
     name = "pipelined_cg"
+    #: the ONE stacked psum ([γ, δ, r·r]); the drift-correction restart
+    #: branch is reduction-free by design, so the contract holds on
+    #: every iteration, replaced or not
+    reductions_per_iter = 1
 
     def state_kinds(self):
         return {"t": "scalar", "k": "scalar",
@@ -310,6 +317,9 @@ class ChebyshevSolver(Solver):
     """
 
     name = "chebyshev"
+    #: the reduction-free extreme point: the three-term recurrence needs
+    #: no dot products, so the while body carries zero all-reduces
+    reductions_per_iter = 0
     #: the error bound fixes the trip count up front, and the f32
     #: attainable floor usually sits above the guard's 10·tol stagnation
     #: threshold — a healthy run spends its whole tail "not improving",

@@ -62,6 +62,14 @@ class Preconditioner:
     """Interface of a registered preconditioner (see module docstring)."""
 
     name: str = ""
+    #: the PCBJACOBI design point as a checkable contract: ``apply`` must
+    #: not communicate.  The static verifier (``repro.analysis``) traces
+    #: ``apply`` under the mesh axis environment and errors on any
+    #: collective primitive while this is True; a future communicating
+    #: preconditioner (e.g. an additive-Schwarz coarse solve) declares
+    #: itself by setting it False, which also tells the Krylov census to
+    #: attribute its collectives separately.
+    local_only: bool = True
 
     def build(self, plan, layout: dict | None = None, A=None
               ) -> dict[str, jax.Array]:

@@ -59,8 +59,35 @@ from repro.sparse.csr import (CSRMatrix, ell_arrays_from_csr,
                               sell_arrays_from_csr)
 from repro.util import align_up
 
-__all__ = ["ShardFormat", "ELLFormat", "SELLFormat", "register_format",
-           "get_format", "available_formats"]
+__all__ = ["IndexStream", "ShardFormat", "ELLFormat", "SELLFormat",
+           "register_format", "get_format", "available_formats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexStream:
+    """Static descriptor of one gather/scatter index stream of a format.
+
+    The Pallas/jnp matvecs read the vector buffers through these index
+    arrays with **no runtime bounds checks** — on real accelerators an
+    out-of-range index is an out-of-bounds read or a corrupting write,
+    not an exception.  Each format therefore declares its streams so the
+    static kernel checker (``repro.analysis.kernel_check``) can prove,
+    per plan, that every index stays inside its buffer extent and that
+    padding entries are value-masked, before anything executes.
+
+    ``vals``/``cols`` name entries of ``fmt_data``; ``x`` says which
+    buffer ``cols`` indexes (``"local"`` — the assembled ``(nl_pad,)``
+    slice — or ``"ghost"`` — the ``(g_pad + 1,)`` exchanged buffer whose
+    trailing dump slot only zero-valued entries may read); ``rows``, when
+    set, is the accumulation-slot stream scattered into the ``(rc_pad,)``
+    output (``None`` for row-aligned layouts like ELL, where entry ``i``
+    accumulates into row ``i`` by construction).
+    """
+
+    vals: str
+    cols: str
+    x: str
+    rows: str | None = None
 
 
 class ShardFormat:
@@ -102,6 +129,14 @@ class ShardFormat:
         """
         raise NotImplementedError
 
+    # -- static contract ----------------------------------------------- #
+    def index_streams(self) -> tuple[IndexStream, ...]:
+        """The format's gather/scatter streams, for the static bounds
+        checker (``repro.analysis.kernel_check``).  Every field that
+        indexes a vector buffer or the output must be declared here — an
+        undeclared index stream is itself flagged by the analyzer."""
+        return ()
+
     # -- accounting ---------------------------------------------------- #
     def nnz_stored(self, data: dict[str, jax.Array]) -> int:
         """Total value slots held on device, padding included."""
@@ -141,6 +176,12 @@ class ELLFormat(ShardFormat):
 
     name = "ell"
     fields = ("diag_cols", "diag_vals", "offd_cols", "offd_vals")
+
+    def index_streams(self):
+        # row-aligned: entry (r, k) accumulates into row r, so there is
+        # no explicit rows stream to range-check
+        return (IndexStream(vals="diag_vals", cols="diag_cols", x="local"),
+                IndexStream(vals="offd_vals", cols="offd_cols", x="ghost"))
 
     def pack(self, diag_nodes, offd_nodes, core_bounds, c_of_all, slots_all,
              rc_pad, width_align, dtype):
@@ -209,6 +250,12 @@ class SELLFormat(ShardFormat):
     name = "sell"
     fields = ("sell_dvals", "sell_dcols", "sell_drows",
               "sell_ovals", "sell_ocols", "sell_orows")
+
+    def index_streams(self):
+        return (IndexStream(vals="sell_dvals", cols="sell_dcols",
+                            x="local", rows="sell_drows"),
+                IndexStream(vals="sell_ovals", cols="sell_ocols",
+                            x="ghost", rows="sell_orows"))
 
     def slot_order(self, row_nnz_local, core_bounds):
         cb = np.asarray(core_bounds, dtype=np.int64)

@@ -23,7 +23,7 @@ def main() -> int:
 
     # per-pod divergent params, replicated layout: emulate with the pod axis
     # by building pod-varying values via shard_map over 'pod'
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     anchor = {"w": jnp.asarray(rng.normal(size=(16,)), jnp.float32)}
     # pod-dependent drift: stack per-pod params along a leading axis sharded
     # over 'pod', then drop it inside shard_map when syncing -> emulate by

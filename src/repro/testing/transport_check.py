@@ -90,9 +90,8 @@ def main() -> int:
     import jax
     import numpy as np
 
-    from repro.core import (available_transports, get_transport,
-                            make_exchange, make_spmv, resolve_transport,
-                            to_dist)
+    from repro.core import (available_transports, make_exchange,
+                            make_spmv, resolve_transport, to_dist)
     from repro.core.transport import autotune_transport
     from repro.util import make_mesh_compat
 

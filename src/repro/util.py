@@ -1,13 +1,17 @@
 """Small shared helpers used across core/, kernels/ and sparse/."""
 from __future__ import annotations
 
+from typing import Any, Iterator
+
 import jax
 
 __all__ = ["align_up", "shard_map_compat", "make_mesh_compat",
            "compiled_hlo_text", "collective_counts",
            "collective_counts_from_text", "while_body_collective_counts",
            "while_body_collective_counts_from_text", "census_split",
-           "COLLECTIVE_OPS", "SOLVER_REDUCTION_OPS", "TRANSPORT_OPS"]
+           "COLLECTIVE_OPS", "SOLVER_REDUCTION_OPS", "TRANSPORT_OPS",
+           "PRIM_COLLECTIVE", "iter_jaxpr_eqns", "subjaxprs",
+           "jaxpr_collective_counts", "jaxpr_while_eqns"]
 
 COLLECTIVE_OPS = ("all-reduce", "reduce-scatter", "all-gather",
                   "all-to-all", "collective-permute",
@@ -61,6 +65,77 @@ def collective_counts_from_text(txt: str) -> dict:
     # TPU); count the start as the op and ignore the matching done
     return {name: len(re.findall(rf"{name}(-start)?\(", txt))
             for name in COLLECTIVE_OPS}
+
+
+#: jaxpr primitive -> compiled-HLO collective kind (the COLLECTIVE_OPS
+#: vocabulary).  This is the bridge between the two census layers: the
+#: static analyzer (repro.analysis.jaxpr_pass) counts primitives in
+#: device-free ``jax.make_jaxpr(..., axis_env=...)`` traces, while the CI
+#: bench assertions count the same kinds in compiled HLO text — both must
+#: speak predicted_cost's language.
+PRIM_COLLECTIVE = {
+    "psum": "all-reduce",
+    "psum_scatter": "reduce-scatter",
+    "reduce_scatter": "reduce-scatter",
+    "all_gather": "all-gather",
+    "all_to_all": "all-to-all",
+    "ppermute": "collective-permute",
+    "pbroadcast": "collective-broadcast",
+}
+
+
+def subjaxprs(eqn) -> Iterator[Any]:
+    """Yield every jaxpr held in ``eqn.params`` (closed or open).
+
+    Handles all the shapes jax uses: a single ClosedJaxpr/Jaxpr param
+    (``while``'s ``body_jaxpr``/``cond_jaxpr``, ``pjit``'s ``jaxpr``) and
+    tuple/list-valued params (``cond``'s ``branches``).  Missing the
+    tuple case silently skips every ``lax.cond`` branch — the pipelined
+    CG's drift-correction restart lives in one — so iterate containers
+    before testing each element.
+    """
+    for v in eqn.params.values():
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for x in vs:
+            if hasattr(x, "jaxpr"):        # ClosedJaxpr
+                yield x.jaxpr
+            elif hasattr(x, "eqns"):       # open Jaxpr
+                yield x
+
+
+def iter_jaxpr_eqns(jaxpr) -> Iterator[Any]:
+    """Yield every equation of ``jaxpr`` and all nested sub-jaxprs
+    (while/cond/pjit/scan bodies), depth-first."""
+    if hasattr(jaxpr, "jaxpr"):            # accept ClosedJaxpr too
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in subjaxprs(eqn):
+            yield from iter_jaxpr_eqns(sub)
+
+
+def jaxpr_collective_counts(jaxpr) -> dict:
+    """Per-kind collective census of a (device-free) jaxpr trace.
+
+    The static twin of :func:`collective_counts_from_text`: count the
+    collective primitives of ``jaxpr`` (nested sub-jaxprs included) and
+    report them under the COLLECTIVE_OPS names, so the result is directly
+    comparable to a transport's ``predicted_cost`` and to the compiled-HLO
+    census — without devices, a mesh, or an XLA compile.
+    """
+    counts = {name: 0 for name in COLLECTIVE_OPS}
+    for eqn in iter_jaxpr_eqns(jaxpr):
+        kind = PRIM_COLLECTIVE.get(eqn.primitive.name)
+        if kind is not None:
+            counts[kind] += 1
+    return counts
+
+
+def jaxpr_while_eqns(jaxpr) -> list:
+    """Every ``while`` equation of ``jaxpr``, nested ones included — the
+    static analogue of finding ``body=`` computations in compiled HLO."""
+    return [eqn for eqn in iter_jaxpr_eqns(jaxpr)
+            if eqn.primitive.name == "while"]
 
 
 def _hlo_computations(txt: str) -> dict:

@@ -11,7 +11,7 @@ from repro.core.partition import partition_balanced, partition_equal_rows
 from repro.kernels import balanced_spmv, ell_spmv
 from repro.kernels.ref import balanced_spmv_ref, ell_spmv_ref
 from repro.sparse import BalancedCOO, extruded_mesh_matrix, random_spd_matrix
-from repro.sparse.csr import CSRMatrix, ELLMatrix
+from repro.sparse.csr import ELLMatrix
 
 
 def _tol(dtype):

@@ -2,7 +2,6 @@
 simulation), serve loop, and a real dry-run cell."""
 import json
 import os
-import signal
 import subprocess
 import sys
 import time

@@ -8,8 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core import build_spmv_plan
-from repro.core.partition import (imbalance, partition_balanced,
-                                  partition_equal_rows)
+from repro.core.partition import imbalance, partition_equal_rows
 from repro.sparse import extruded_mesh_matrix
 
 

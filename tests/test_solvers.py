@@ -9,7 +9,7 @@ import pytest
 
 from conftest import run_subprocess
 from repro.core import build_spmv_plan, from_dist, make_cg, to_dist
-from repro.solvers import (ChebyshevSolver, Preconditioner, Solver,
+from repro.solvers import (Preconditioner, Solver,
                            available_preconds, available_solvers,
                            chebyshev_iters_for_tol, estimate_eig_bounds,
                            from_dist_batch, get_precond, get_solver,

@@ -3,7 +3,6 @@
 The multi-device runs spawn a fresh interpreter with
 ``--xla_force_host_platform_device_count`` so this process keeps 1 device.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
