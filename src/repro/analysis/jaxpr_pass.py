@@ -17,12 +17,17 @@ Proven here (codes in ``repro.analysis.report``):
   ``all_gather`` for the node-local x assembly (``J_CENSUS_MISMATCH``);
 * inter-node wire bytes *derived from the traced exchange* (operand
   shapes x participating pairs) equal the ``predicted_cost`` table
-  (``J_WIRE_MISMATCH``) — the table can no longer drift from the code;
-* an ``exact_wire`` transport's exchange contains only data-movement and
-  single-writer-assembly primitives — bit manipulation or payload
-  arithmetic is how a corrupting transport (``FaultyTransport``) is
-  caught **statically** (``J_PAYLOAD_TRANSFORM`` /
-  ``J_PAYLOAD_UNKNOWN_OP``);
+  (``J_WIRE_MISMATCH``) — the table can no longer drift from the code.
+  The derivation reads operand dtypes, so a compressed wire
+  (``wire_dtype="bf16"|"int8"``) is proven to actually shrink the traced
+  bytes, not just the table;
+* an ``exact_wire`` transport's exchange contains only data-movement,
+  single-writer-assembly, and *declared codec* primitives — for a lossy
+  wire dtype the codec's quantise ops (``PAYLOAD_QUANTISE``) are
+  accepted, but bit manipulation outside them (e.g. ``xor``) is still
+  how a corrupting transport (``FaultyTransport``) is caught
+  **statically** (``J_PAYLOAD_TRANSFORM`` / ``J_PAYLOAD_UNKNOWN_OP``),
+  whatever the wire dtype;
 * each solver's fused while-body carries exactly its declared
   ``reductions_per_iter`` all-reduces (``J_SOLVER_REDUCTIONS`` /
   ``J_SOLVER_UNDECLARED``);
@@ -40,7 +45,8 @@ import jax.numpy as jnp
 
 from repro.analysis.report import Report, Violation
 from repro.core.spmv import make_shard_body, plan_fields, plan_shard_arrays
-from repro.core.transport import get_transport, resolve_transport
+from repro.core.transport import (get_codec, get_transport, plan_wire_dtype,
+                                  resolve_transport)
 from repro.solvers.base import SolverCtx, get_solver
 from repro.solvers.precond import get_precond
 from repro.util import (COLLECTIVE_OPS, SOLVER_REDUCTION_OPS,
@@ -49,7 +55,8 @@ from repro.util import (COLLECTIVE_OPS, SOLVER_REDUCTION_OPS,
 
 __all__ = ["trace_shard_body", "trace_exchange", "check_spmv_static",
            "check_solver_static", "check_precond_static",
-           "check_solver_hlo", "PAYLOAD_ALLOW", "PAYLOAD_DENY"]
+           "check_solver_hlo", "PAYLOAD_ALLOW", "PAYLOAD_DENY",
+           "PAYLOAD_QUANTISE"]
 
 AXES = ("node", "core")
 
@@ -80,6 +87,17 @@ PAYLOAD_DENY = frozenset({
     "ceil", "nextafter",
 })
 
+#: the declared quantise/dequantise primitives of a *lossy* wire codec
+#: (``repro.core.transport.WireCodec``): absmax scale (abs + reduce_max),
+#: scale/apply (div, mul), rounding, and the bitcast that packs the f32
+#: scale into the int8 payload.  Accepted in an exchange **only when the
+#: resolved wire dtype is lossy** — an exact-wire (f32) exchange emitting
+#: any of these is still a violation, and ops outside this set (e.g.
+#: FaultyTransport's ``xor``) stay violations at every wire dtype.
+PAYLOAD_QUANTISE = frozenset({
+    "abs", "reduce_max", "div", "mul", "round", "bitcast_convert_type",
+})
+
 #: call/control-flow wrappers — not operations themselves; their inner
 #: jaxprs are already walked by ``iter_jaxpr_eqns``.
 STRUCTURAL = frozenset({
@@ -102,23 +120,25 @@ def _shard_F(plan: Any, body: Any) -> dict[str, jax.Array]:
 
 
 def trace_shard_body(plan: Any, transport: Any = None,
-                     backend: str = "jnp") -> Any:
+                     backend: str = "jnp",
+                     wire_dtype: str | None = None) -> Any:
     """Closed jaxpr of one shard's two-phase SpMV body, traced under the
     plan's (node, core) axis environment — no devices required."""
     body = make_shard_body(plan, axis_names=AXES, backend=backend,
-                           transport=transport)
+                           transport=transport, wire_dtype=wire_dtype)
     F = _shard_F(plan, body)
     x = jnp.zeros((plan.rc_pad,), plan.mask.dtype)
     return jax.make_jaxpr(lambda v: body(F, v),
                           axis_env=_axis_env(plan))(x)
 
 
-def trace_exchange(plan: Any, transport: Any) -> Any:
+def trace_exchange(plan: Any, transport: Any,
+                   wire_dtype: str | None = None) -> Any:
     """Closed jaxpr of the transport's ghost exchange alone (the wire
     microscope).  Raises on halo-free plans — there is no exchange."""
     if plan.hs == 0:
         raise ValueError("plan has no halo traffic (hs == 0)")
-    tr, state = resolve_transport(transport, plan)
+    tr, state = resolve_transport(transport, plan, wire_dtype=wire_dtype)
     extra = {k: v[0, 0] for k, v in tr.extra_arrays(plan, state).items()}
     F = {"send_own": plan.send_own[0, 0], "recv_own": plan.recv_own[0, 0],
          **extra}
@@ -171,20 +191,27 @@ def derived_wire_bytes(exchange_jaxpr: Any, n_node: int,
     return wire
 
 
-def _lint_payload(plan: Any, transport: Any, out: Report) -> None:
+def _lint_payload(plan: Any, transport: Any, out: Report,
+                  wire_dtype: str | None = None) -> None:
     tr = get_transport(transport)
-    jxp = trace_exchange(plan, tr)
-    ctx = {"format": plan.format, "transport": tr.name}
+    codec = get_codec(wire_dtype if wire_dtype is not None
+                      else plan_wire_dtype(plan))
+    jxp = trace_exchange(plan, tr, wire_dtype=codec.name)
+    ctx = {"format": plan.format, "transport": tr.name,
+           "wire_dtype": codec.name}
     out.count(1)
     for eqn in iter_jaxpr_eqns(jxp):
         name = eqn.primitive.name
         if name in STRUCTURAL:
             continue
+        if not codec.exact and name in PAYLOAD_QUANTISE:
+            continue            # the declared lossy-wire codec ops
         if name in PAYLOAD_DENY:
             out.add(Violation(
                 "J_PAYLOAD_TRANSFORM",
                 f"exchange emits payload-transforming primitive "
-                f"{name!r} while the transport declares "
+                f"{name!r} outside the declared wire codec "
+                f"({codec.name!r}) while the transport declares "
                 f"exact_wire={tr.exact_wire}", ctx,
                 severity=None if tr.exact_wire else "warning"))
         elif name not in PAYLOAD_ALLOW:
@@ -194,9 +221,13 @@ def _lint_payload(plan: Any, transport: Any, out: Report) -> None:
                 "data-movement allowlist", ctx))
 
 
-def _lint_numerics(jxp: Any, ctx: dict[str, Any], out: Report) -> None:
-    """Advisory downcast + scatter-ordering lints over any trace."""
-    seen_downcast: set[str] = set()
+def _lint_numerics(jxp: Any, ctx: dict[str, Any], out: Report,
+                   declared: tuple[str, ...] = ()) -> None:
+    """Advisory downcast + scatter-ordering lints over any trace.
+    ``declared`` lists "src->dst" float conversions the resolved wire
+    codec declares (e.g. bf16's ``float32->bfloat16``) — not silent, so
+    not flagged."""
+    seen_downcast: set[str] = set(declared)
     seen_scatter = False
     for eqn in iter_jaxpr_eqns(jxp):
         name = eqn.primitive.name
@@ -224,17 +255,23 @@ def _lint_numerics(jxp: Any, ctx: dict[str, Any], out: Report) -> None:
 
 
 def check_spmv_static(plan: Any, transport: Any = None,
-                      backend: str = "jnp") -> Report:
+                      backend: str = "jnp",
+                      wire_dtype: str | None = None) -> Report:
     """Prove the SpMV body's collective contract for one (plan,
-    transport): zero all-reduces, census == predicted_cost (+ the one
-    core-axis assembly all_gather), derived wire bytes == predicted,
+    transport, wire_dtype): zero all-reduces, census == predicted_cost
+    (+ the one core-axis assembly all_gather), derived wire bytes ==
+    predicted (dtype-aware, so a compressed wire proves its shrink),
     payload lint, numeric lints.  Returns a :class:`Report`."""
     out = Report()
     tr = get_transport(transport if transport is not None
                        else plan.transport)
-    ctx = {"format": plan.format, "transport": tr.name}
+    codec = get_codec(wire_dtype if wire_dtype is not None
+                      else plan_wire_dtype(plan))
+    ctx = {"format": plan.format, "transport": tr.name,
+           "wire_dtype": codec.name}
 
-    jxp = trace_shard_body(plan, transport=tr, backend=backend)
+    jxp = trace_shard_body(plan, transport=tr, backend=backend,
+                           wire_dtype=codec.name)
     census = jaxpr_collective_counts(jxp)
 
     out.count(1)
@@ -247,7 +284,7 @@ def check_spmv_static(plan: Any, transport: Any = None,
             ctx))
 
     out.count(1)
-    _, state = resolve_transport(tr, plan)
+    _, state = resolve_transport(tr, plan, wire_dtype=codec.name)
     predicted = tr.predicted_cost(plan, state)
     for kind in COLLECTIVE_OPS:
         want = int(predicted.get(kind, 0))
@@ -261,17 +298,20 @@ def check_spmv_static(plan: Any, transport: Any = None,
 
     if plan.hs > 0:
         out.count(1)
-        derived = derived_wire_bytes(trace_exchange(plan, tr),
-                                     plan.n_node, plan.n_core)
+        derived = derived_wire_bytes(
+            trace_exchange(plan, tr, wire_dtype=codec.name),
+            plan.n_node, plan.n_core)
         want_wire = int(predicted.get("wire_bytes", 0))
-        if tr.exact_wire and derived != want_wire:
+        # unconditional: derived bytes read the traced operand dtypes,
+        # so the proof holds for exact and compressed wire alike
+        if derived != want_wire:
             out.add(Violation(
                 "J_WIRE_MISMATCH",
                 f"derived wire bytes {derived} != predicted "
                 f"{want_wire}", ctx))
-        _lint_payload(plan, tr, out)
+        _lint_payload(plan, tr, out, wire_dtype=codec.name)
 
-    _lint_numerics(jxp, ctx, out)
+    _lint_numerics(jxp, ctx, out, declared=codec.declared_downcasts)
     return out
 
 
@@ -290,7 +330,8 @@ def _solver_ctx(plan: Any, body: Any, pre: Any,
 def check_solver_static(plan: Any, solver: Any, precond: Any = "jacobi",
                         transport: Any = None, A: Any = None,
                         layout: dict[str, Any] | None = None,
-                        options: dict[str, Any] | None = None) -> Report:
+                        options: dict[str, Any] | None = None,
+                        wire_dtype: str | None = None) -> Report:
     """Prove one solver's reductions-per-iteration contract on this plan:
     trace the fused ``shard_loop`` device-free, find the while body, and
     count its reduction collectives against the solver's declared
@@ -298,12 +339,16 @@ def check_solver_static(plan: Any, solver: Any, precond: Any = "jacobi",
     out = Report()
     sol = get_solver(solver)
     pre = get_precond(precond)
-    body = make_shard_body(plan, axis_names=AXES, transport=transport)
+    codec = get_codec(wire_dtype if wire_dtype is not None
+                      else plan_wire_dtype(plan))
+    body = make_shard_body(plan, axis_names=AXES, transport=transport,
+                           wire_dtype=codec.name)
     pdata = pre.build(plan, layout=layout, A=A)
     opts = sol.prepare(plan, pre, pdata, A=A, layout=layout,
                        options=options)
     ctx_info = {"format": plan.format, "transport": body.transport,
-                "solver": sol.name, "precond": pre.name}
+                "solver": sol.name, "precond": pre.name,
+                "wire_dtype": codec.name}
 
     sctx = _solver_ctx(plan, body, pre, pdata, opts)
     b = jnp.zeros((1, plan.rc_pad), plan.mask.dtype)
@@ -338,7 +383,7 @@ def check_solver_static(plan: Any, solver: Any, precond: Any = "jacobi",
             f"{sol.name!r} declares reductions_per_iter="
             f"{sol.reductions_per_iter}", ctx_info))
 
-    _lint_numerics(jxp, ctx_info, out)
+    _lint_numerics(jxp, ctx_info, out, declared=codec.declared_downcasts)
     return out
 
 

@@ -10,11 +10,12 @@ from repro.core.partition import (
 )
 from repro.core.halo import (HaloPlan, build_halo_plan, pair_traffic,
                              populated_offsets)
-from repro.core.transport import (HaloTransport, autotune_transport,
-                                  available_transports, get_transport,
-                                  make_exchange, register_transport,
-                                  resolve_transport, transport_census,
-                                  transport_stamp)
+from repro.core.transport import (HaloTransport, WireCodec,
+                                  autotune_transport, available_transports,
+                                  available_wire_dtypes, get_codec,
+                                  get_transport, make_exchange,
+                                  register_transport, resolve_transport,
+                                  transport_census, transport_stamp)
 from repro.core.spmv import (SpMVPlan, build_spmv_plan, make_spmv,
                              make_shard_body, plan_fields, plan_shard_arrays,
                              to_dist, from_dist, MODES)
@@ -31,6 +32,7 @@ __all__ = [
     "HaloTransport", "register_transport", "get_transport",
     "available_transports", "resolve_transport", "transport_census",
     "transport_stamp", "autotune_transport", "make_exchange",
+    "WireCodec", "get_codec", "available_wire_dtypes",
     "SpMVPlan", "build_spmv_plan", "make_spmv", "make_shard_body",
     "plan_fields", "plan_shard_arrays",
     "to_dist", "from_dist", "MODES",

@@ -76,8 +76,9 @@ from jax.sharding import PartitionSpec as P
 from repro.core.halo import HaloPlan, build_halo_plan
 from repro.core.partition import (NODE_PARTITIONS, partition_stats,
                                   partition_two_level)
-from repro.core.transport import (HaloTransport, resolve_transport,
-                                  transport_census, transport_stamp)
+from repro.core.transport import (HaloTransport, get_codec,
+                                  resolve_transport, transport_census,
+                                  transport_stamp)
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.formats import ShardFormat, get_format
 from repro.util import align_up, shard_map_compat
@@ -102,7 +103,7 @@ SHARD_FIELDS = ("diag_cols", "diag_vals", "offd_cols", "offd_vals",
          data_fields=["fmt_data", "send_own", "recv_own", "x_gather",
                       "diag_a", "mask"],
          meta_fields=["n", "n_node", "n_core", "rc_pad", "nl_pad", "g_pad",
-                      "hs", "mode", "format", "transport"])
+                      "hs", "mode", "format", "transport", "wire_dtype"])
 @dataclasses.dataclass
 class SpMVPlan:
     """Device-ready distributed matrix + halo plan (a pytree).
@@ -138,6 +139,12 @@ class SpMVPlan:
     # the measured winner here, and ``make_spmv``/``make_solver`` with
     # ``transport=None`` follow the stamp.
     transport: str = "a2a"
+    # the plan's halo wire codec (repro.core.transport.WireCodec):
+    # "f32" (exact), "bf16", or "int8" — ghost payloads ride the
+    # inter-node wire at this dtype; the ghost-buffer accumulate stays
+    # the vector dtype.  Builders with ``wire_dtype=None`` follow the
+    # stamp.
+    wire_dtype: str = "f32"
 
     # ------------------------------------------------------------------ #
     @property
@@ -186,6 +193,7 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
                     node_partition: str | None = None,
                     format: str | ShardFormat = "ell",
                     transport: str | HaloTransport = "a2a",
+                    wire_dtype: str = "f32",
                     verify: bool = False
                     ) -> tuple[SpMVPlan, dict]:
     """Partition ``A``, split diag/offdiag, pack shard blocks + halo plan.
@@ -209,7 +217,10 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
     (``repro.core.transport``; validated here, so a typo fails at plan
     build, not at trace time inside ``shard_map``).  ``"auto"`` defers the
     choice to ``autotune_transport`` at the first ``make_spmv`` /
-    ``make_solver`` on a live mesh.
+    ``make_solver`` on a live mesh.  ``wire_dtype`` stamps the halo wire
+    codec ("f32" | "bf16" | "int8" — also validated here): ghost payloads
+    ride the inter-node wire compressed to that dtype while the ghost
+    accumulate stays f32.
 
     Returns (plan, layout) where ``layout`` carries the host-side index
     arrays needed by ``to_dist`` / ``from_dist``, a ``stats`` dict with
@@ -228,6 +239,7 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     if transport != "auto":
         transport = transport_stamp(transport)       # fail fast on typos
+    wire_dtype = get_codec(wire_dtype).name          # fail fast on typos
     if node_partition is None:
         node_partition = "nnz" if mode == "balanced" else "rows"
     if node_partition not in NODE_PARTITIONS:
@@ -328,6 +340,7 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
         n=n, n_node=n_node, n_core=n_core,
         rc_pad=rc_pad, nl_pad=nl_pad, g_pad=halo.g_pad, hs=halo.h_own,
         mode=mode, format=fmt.name, transport=transport,
+        wire_dtype=wire_dtype,
     )
     stats = partition_stats(A.row_nnz, node_bounds, core_bounds_all)
     # fraction of stored slots (diag + offd, all shards) holding no real
@@ -389,7 +402,8 @@ def make_shard_body(plan: SpMVPlan,
                     axis_names: tuple[str, str] = ("node", "core"),
                     backend: str = "jnp",
                     transport: str | HaloTransport | None = None,
-                    neighbor_offsets: list[int] | None = None):
+                    neighbor_offsets: list[int] | None = None,
+                    wire_dtype: str | None = None):
     """Build the per-shard two-phase SpMV body: ``body(F, x_mine) -> y_mine``.
 
     ``F`` maps ``plan_fields(plan)`` names (plus the transport's
@@ -401,7 +415,8 @@ def make_shard_body(plan: SpMVPlan,
 
     The halo exchange dispatches to the plan's registered
     ``HaloTransport`` (``repro.core.transport``; ``transport=None``
-    follows ``plan.transport``).  Whatever the transport, the body emits
+    follows ``plan.transport``, ``wire_dtype=None`` follows
+    ``plan.wire_dtype``).  Whatever the transport, the body emits
     **zero all-reduces** — ghost assembly is gather + local add (each
     ghost slot has exactly one writer), so any all-reduce in a compiled
     solver loop is attributable to the solver's own reductions
@@ -434,7 +449,8 @@ def make_shard_body(plan: SpMVPlan,
                          "make_solver (needs a live mesh to time); "
                          "make_shard_body takes a concrete transport")
     tr, tstate = resolve_transport(transport, plan,
-                                   neighbor_offsets=neighbor_offsets)
+                                   neighbor_offsets=neighbor_offsets,
+                                   wire_dtype=wire_dtype)
 
     fmt = get_format(plan.format)
     if backend == "pallas":
@@ -469,6 +485,7 @@ def make_shard_body(plan: SpMVPlan,
         return local_matvec(F, x_local, x_ghost, rc_pad)
 
     body.transport = tr.name
+    body.wire_dtype = tstate["wire_codec"].name
     body.extra = tr.extra_arrays(plan, tstate) if has_halo else {}
     return body
 
@@ -480,7 +497,8 @@ def make_spmv(plan: SpMVPlan, mesh: jax.sharding.Mesh,
               axis_names: tuple[str, str] = ("node", "core"),
               backend: str = "jnp",
               transport: str | HaloTransport | None = None,
-              neighbor_offsets: list[int] | None = None):
+              neighbor_offsets: list[int] | None = None,
+              wire_dtype: str | None = None):
     """Build the jitted distributed SpMV: (n_node, n_core, rc_pad) -> same.
 
     ``backend``: 'jnp' or 'pallas' — dispatched to the plan's shard format
@@ -491,19 +509,23 @@ def make_spmv(plan: SpMVPlan, mesh: jax.sharding.Mesh,
     the module docstring for when each wins).  ``None`` follows the plan's
     stamp (``plan.transport``); ``"auto"`` runs ``autotune_transport`` on
     this mesh, stamps the winner into the plan and returns the winner's
-    compiled SpMV.  The returned function carries ``spmv.transport`` (the
-    resolved name).
+    compiled SpMV.  ``wire_dtype`` selects the halo wire codec
+    ('f32' | 'bf16' | 'int8'; ``None`` follows ``plan.wire_dtype``).  The
+    returned function carries ``spmv.transport`` / ``spmv.wire_dtype``
+    (the resolved names).
     """
     transport = transport if transport is not None else plan.transport
     if transport == "auto":     # explicit, or a deferred plan stamp
         from repro.core.transport import autotune_transport
         return autotune_transport(plan, mesh, axis_names=axis_names,
                                   backend=backend,
-                                  neighbor_offsets=neighbor_offsets).spmv
+                                  neighbor_offsets=neighbor_offsets,
+                                  wire_dtype=wire_dtype).spmv
     node_ax, core_ax = axis_names
     body = make_shard_body(plan, axis_names=axis_names, backend=backend,
                            transport=transport,
-                           neighbor_offsets=neighbor_offsets)
+                           neighbor_offsets=neighbor_offsets,
+                           wire_dtype=wire_dtype)
     fields = plan_fields(plan) + tuple(body.extra)
 
     def shard_fn(*args):
@@ -522,4 +544,5 @@ def make_spmv(plan: SpMVPlan, mesh: jax.sharding.Mesh,
         return fn(*plan_shard_arrays(plan), *body.extra.values(), xd)
 
     spmv.transport = body.transport
+    spmv.wire_dtype = body.wire_dtype
     return spmv

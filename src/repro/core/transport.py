@@ -57,6 +57,15 @@ Four transports ship:
               needs **no** core-axis gather of partial ghost buffers —
               the trade is a replicated inter-node payload (× n_core).
 
+Orthogonal to the transport choice is the **wire dtype**
+(``wire_dtype="f32"|"bf16"|"int8"``): every transport encodes each send
+chunk through a shared ``WireCodec`` right before its collective and
+decodes right after, so ghost payloads ride the inter-node wire at half
+(bf16) or ~quarter (int8, per-chunk absmax scale packed into the payload)
+the bytes while the ghost-buffer accumulate stays f32.  ``predicted_cost``
+wire bytes, the numpy ``host_exchange`` references, and the static
+verifier's traced-wire proof all follow the resolved codec.
+
 ``autotune_transport`` times each registered transport's compiled SpMV on
 the live mesh and stamps the winner into the plan
 (``transport="auto"`` in ``make_spmv``/``make_solver`` resolves through
@@ -74,13 +83,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.halo import pair_traffic, populated_offsets
+from repro.runtime.compression import compress_int8, decompress_int8
 
 __all__ = ["HaloTransport", "A2ATransport", "RingTransport",
            "PairwiseTransport", "HierTransport", "FaultyTransport",
            "register_transport", "unregister_transport",
            "get_transport", "available_transports", "resolve_transport",
            "transport_census", "AutotuneResult", "autotune_transport",
-           "make_exchange"]
+           "make_exchange", "WireCodec", "BF16WireCodec", "Int8WireCodec",
+           "get_codec", "available_wire_dtypes", "plan_wire_dtype"]
 
 
 class HaloTransport:
@@ -95,15 +106,19 @@ class HaloTransport:
 
     name: str = ""
     #: wire-payload contract: True promises ``exchange`` moves the
-    #: owners' vector bits *unchanged* — only data movement and the
-    #: single-writer assembly add may touch the payload.  The static
-    #: verifier (``repro.analysis.jaxpr_pass``) enforces it by linting
-    #: the traced exchange for value-transforming primitives (bit
-    #: manipulation, float arithmetic beyond the assembly add) and by
-    #: checking derived wire bytes against ``predicted_cost``.  A future
-    #: declared-lossy wire format (bf16/quantised ghosts, ROADMAP) sets
-    #: this False to downgrade the payload lint to advisory — corruption
-    #: is only a contract violation when the transport claims exactness.
+    #: owners' vector bits *unchanged up to the declared wire codec* —
+    #: only data movement, the single-writer assembly add, and the
+    #: resolved ``WireCodec``'s encode/decode may touch the payload.
+    #: The static verifier (``repro.analysis.jaxpr_pass``) enforces it by
+    #: linting the traced exchange for value-transforming primitives
+    #: (bit manipulation, float arithmetic beyond the assembly add and
+    #: the codec's declared quantise ops) and by checking derived wire
+    #: bytes against ``predicted_cost``.  Lossiness is a *codec*
+    #: property (``wire_dtype="bf16"|"int8"``), not a transport one: a
+    #: transport sets this False only when it mangles payloads beyond
+    #: its codec, which downgrades the payload lint to advisory —
+    #: corruption is a contract violation exactly when the transport
+    #: claims codec-exactness (how FaultyTransport is caught statically).
     exact_wire: bool = True
 
     # -- static plan state (host) -------------------------------------- #
@@ -150,6 +165,138 @@ class HaloTransport:
         """Padded inter-node wire bytes + per-kind collective counts for
         one exchange (keys match ``repro.util.COLLECTIVE_OPS``)."""
         raise NotImplementedError
+
+
+# --------------------------------------------------------------------- #
+# wire codecs — the wire-dtype axis shared by every transport
+# --------------------------------------------------------------------- #
+class WireCodec:
+    """Encode/decode of halo payload *chunks* on the inter-node wire.
+
+    A chunk is one (sender core -> destination node) send slice of ``hs``
+    entries — the last axis of every transport's send table — so the same
+    codec applied by any transport produces bit-identical decoded ghosts
+    (the conformance harness exploits this: lossy transports still compare
+    bit-exactly against the ``a2a`` reference *at the same wire dtype*).
+
+    Contract:
+      * ``encode``/``decode`` round-trip each last-axis chunk with
+        elementwise error ``|dec - x| <= rel_bound * max|chunk|``
+        (``rel_bound == 0.0`` iff ``exact``, in which case the round trip
+        is the identity *program* — no primitives inserted, so f32-wire
+        builds stay bit-identical to the pre-codec ones);
+      * the ghost-buffer accumulate stays f32: transports decode to
+        ``x_mine.dtype`` immediately after the receiving collective;
+      * ``payload_bytes(hs, itemsize)`` is the on-wire bytes per chunk
+        (int8 carries its per-chunk f32 scale bitcast into 4 trailing
+        payload bytes, so the collective census is unchanged);
+      * ``declared_downcasts`` lists ``"src->dst"`` float conversions the
+        static verifier's J_DOWNCAST lint must accept as declared;
+      * ``host_roundtrip`` applies the exact device encode/decode to a
+        numpy chunk table — the ``host_exchange`` references route sent
+        chunks through it so they stay the bit-level truth under lossy
+        wire.
+    """
+
+    name: str = "f32"
+    exact: bool = True
+    rel_bound: float = 0.0
+    declared_downcasts: tuple[str, ...] = ()
+
+    def encode(self, x: jax.Array) -> jax.Array:
+        return x
+
+    def decode(self, w: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+        return w
+
+    def payload_bytes(self, hs: int, itemsize: int = 4) -> int:
+        return hs * itemsize
+
+    def host_roundtrip(self, x: np.ndarray) -> np.ndarray:
+        if self.exact:
+            return x
+        w = self.decode(self.encode(jnp.asarray(x, jnp.float32)),
+                        jnp.float32)
+        return np.asarray(w).astype(x.dtype)
+
+
+class BF16WireCodec(WireCodec):
+    """Truncate chunks to bfloat16 on the wire: half the bytes, 8
+    significant bits — round-to-nearest error is ``<= 2^-8`` relative,
+    elementwise."""
+
+    name = "bf16"
+    exact = False
+    rel_bound = 2.0 ** -8
+    declared_downcasts = ("float32->bfloat16",)
+
+    def encode(self, x):
+        return x.astype(jnp.bfloat16)
+
+    def decode(self, w, out_dtype=jnp.float32):
+        return w.astype(out_dtype)
+
+    def payload_bytes(self, hs, itemsize=4):
+        return hs * 2
+
+
+class Int8WireCodec(WireCodec):
+    """Per-chunk absmax-scaled int8 quantisation (the seed's
+    ``runtime.compression`` codec, pointed at the halo): ~4x fewer wire
+    bytes + 4 bytes/chunk for the f32 scale, which rides *inside* the
+    int8 payload (bitcast to 4 trailing bytes) so one collective still
+    carries everything.  Error ``<= scale/2 ~= max|chunk| / 254``."""
+
+    name = "int8"
+    exact = False
+    rel_bound = 0.5 / 127.0 + 1e-6
+    declared_downcasts = ()
+
+    def encode(self, x):
+        q, scale = compress_int8(x, axis=-1, keepdims=True)
+        sb = jax.lax.bitcast_convert_type(scale.astype(jnp.float32),
+                                          jnp.int8)      # (..., 1, 4)
+        return jnp.concatenate([q, sb.reshape(x.shape[:-1] + (4,))],
+                               axis=-1)                  # (..., hs + 4)
+
+    def decode(self, w, out_dtype=jnp.float32):
+        q, sb = w[..., :-4], w[..., -4:]
+        scale = jax.lax.bitcast_convert_type(sb, jnp.float32)   # (...,)
+        return decompress_int8(q, scale[..., None], dtype=out_dtype)
+
+    def payload_bytes(self, hs, itemsize=4):
+        return hs + 4 if hs else 0
+
+
+_WIRE_CODECS: dict[str, WireCodec] = {
+    c.name: c for c in (WireCodec(), BF16WireCodec(), Int8WireCodec())}
+
+
+def get_codec(wire_dtype) -> WireCodec:
+    """Resolve a wire-dtype name (or pass through a codec instance)."""
+    if isinstance(wire_dtype, WireCodec):
+        return wire_dtype
+    try:
+        return _WIRE_CODECS[wire_dtype]
+    except KeyError:
+        raise ValueError(
+            f"unknown wire_dtype {wire_dtype!r}; available: "
+            f"{available_wire_dtypes()}") from None
+
+
+def available_wire_dtypes() -> tuple[str, ...]:
+    return tuple(sorted(_WIRE_CODECS))
+
+
+def plan_wire_dtype(plan) -> str:
+    """The wire dtype a plan stamps (pre-wire-format plans read f32)."""
+    return getattr(plan, "wire_dtype", "f32") or "f32"
+
+
+def _wire_codec(state: dict) -> WireCodec:
+    """Codec carried in resolved transport state (f32 when a caller built
+    the state via bare ``plan_state`` rather than ``resolve_transport``)."""
+    return state.get("wire_codec") or _WIRE_CODECS["f32"]
 
 
 # --------------------------------------------------------------------- #
@@ -206,11 +353,13 @@ def _gather_add(part: jax.Array, core_ax: str) -> jax.Array:
 
 
 def _ppermute_exchange(x_mine, F, perm_by_offset: dict, axes, n_node: int,
-                       g_pad: int) -> jax.Array:
+                       g_pad: int, codec: WireCodec) -> jax.Array:
     """Shared ring/pairwise dataflow: one independent ``ppermute`` per
-    neighbour offset, scattered into the partial ghost buffer, assembled
-    with the core-axis gather + add.  The transports differ only in the
-    permutation each offset carries (full cycle vs communicating pairs)."""
+    neighbour offset (send chunk encoded to the wire dtype, decoded back
+    to the accumulate dtype on arrival), scattered into the partial ghost
+    buffer, assembled with the core-axis gather + add.  The transports
+    differ only in the permutation each offset carries (full cycle vs
+    communicating pairs)."""
     node_ax, core_ax = axes
     send_own, recv_own = F["send_own"], F["recv_own"]
     part = jnp.zeros(g_pad + 1, dtype=x_mine.dtype)
@@ -219,18 +368,36 @@ def _ppermute_exchange(x_mine, F, perm_by_offset: dict, axes, n_node: int,
         # I am src for dst = me + d; I receive from src = me - d
         dst_row = (me + d) % n_node
         send = jnp.take(send_own, dst_row, axis=0)              # (hs,)
-        got = jax.lax.ppermute(x_mine[send], node_ax, perm)
+        got = codec.decode(
+            jax.lax.ppermute(codec.encode(x_mine[send]), node_ax, perm),
+            x_mine.dtype)
         src_row = (me - d) % n_node
         part = part.at[jnp.take(recv_own, src_row, axis=0)].set(got)
     return _gather_add(part, core_ax)
 
 
-def _host_pair_scatter(xd, send_own, recv_own, g_pad, traffic=None):
+def _host_send_table(xd, send_own, codec: WireCodec | None):
+    """Gather the full send-chunk table ``(src, core, dst, hs)`` and route
+    it through the wire codec — the chunks are exactly the last axis, so
+    one vectorised ``host_roundtrip`` reproduces the device encode/decode
+    bit-for-bit for every transport."""
+    n_node, n_core = send_own.shape[:2]
+    sent = xd[np.arange(n_node)[:, None, None, None],
+              np.arange(n_core)[None, :, None, None], send_own]
+    if codec is not None and not codec.exact:
+        sent = codec.host_roundtrip(sent)
+    return sent
+
+
+def _host_pair_scatter(xd, send_own, recv_own, g_pad, traffic=None,
+                       codec: WireCodec | None = None):
     """Numpy ghost assembly shared by a2a/ring/pairwise: every core
     scatters its own recv slice per source node, then the per-core partial
     buffers are summed node-wide (duplicate dump-slot writes land in the
-    write-only slot ``g_pad``, exactly like the device path)."""
+    write-only slot ``g_pad``, exactly like the device path).  Sent chunks
+    pass through the wire codec's round trip first."""
     n_node, n_core = send_own.shape[:2]
+    sent = _host_send_table(xd, send_own, codec)
     ghost = np.zeros((n_node, n_core, g_pad + 1), dtype=xd.dtype)
     for dst in range(n_node):
         for c in range(n_core):
@@ -238,7 +405,7 @@ def _host_pair_scatter(xd, send_own, recv_own, g_pad, traffic=None):
             for src in range(n_node):
                 if traffic is not None and not traffic[dst, src]:
                     continue
-                part[recv_own[dst, c, src]] = xd[src, c, send_own[src, c, dst]]
+                part[recv_own[dst, c, src]] = sent[src, c, dst]
             ghost[dst, :, :] += part[None, :]
     return ghost
 
@@ -253,18 +420,23 @@ class A2ATransport(HaloTransport):
     def exchange(self, x_mine, F, *, state, axes, n_node, g_pad):
         node_ax, core_ax = axes
         send_own, recv_own = F["send_own"], F["recv_own"]   # (n_node, hs)
+        codec = _wire_codec(state)
         part = jnp.zeros(g_pad + 1, dtype=x_mine.dtype)
-        recv = jax.lax.all_to_all(x_mine[send_own], node_ax,
-                                  split_axis=0, concat_axis=0)
+        recv = codec.decode(
+            jax.lax.all_to_all(codec.encode(x_mine[send_own]), node_ax,
+                               split_axis=0, concat_axis=0),
+            x_mine.dtype)
         part = part.at[recv_own.reshape(-1)].set(recv.reshape(-1))
         return _gather_add(part, core_ax)
 
     def host_exchange(self, xd, send_own, recv_own, g_pad, state):
-        return _host_pair_scatter(xd, send_own, recv_own, g_pad)
+        return _host_pair_scatter(xd, send_own, recv_own, g_pad,
+                                  codec=_wire_codec(state))
 
     def predicted_cost(self, plan, state, itemsize=4):
         n_node, n_core, hs = plan.n_node, plan.n_core, plan.hs
-        return {"wire_bytes": n_node * (n_node - 1) * n_core * hs * itemsize,
+        pb = _wire_codec(state).payload_bytes(hs, itemsize)
+        return {"wire_bytes": n_node * (n_node - 1) * n_core * pb,
                 "all-to-all": 1 if hs else 0,
                 "all-gather": 1 if hs else 0,
                 "collective-permute": 0}
@@ -290,7 +462,8 @@ class RingTransport(HaloTransport):
     def exchange(self, x_mine, F, *, state, axes, n_node, g_pad):
         perms = {d: [(i, (i + d) % n_node) for i in range(n_node)]
                  for d in state["neighbor_offsets"]}
-        return _ppermute_exchange(x_mine, F, perms, axes, n_node, g_pad)
+        return _ppermute_exchange(x_mine, F, perms, axes, n_node, g_pad,
+                                  _wire_codec(state))
 
     def host_exchange(self, xd, send_own, recv_own, g_pad, state):
         n_node = send_own.shape[0]
@@ -299,12 +472,13 @@ class RingTransport(HaloTransport):
             for src in range(n_node):
                 reach[(src + d) % n_node, src] = True
         return _host_pair_scatter(xd, send_own, recv_own, g_pad,
-                                  traffic=reach)
+                                  traffic=reach, codec=_wire_codec(state))
 
     def predicted_cost(self, plan, state, itemsize=4):
         k = len(state["neighbor_offsets"])
         n_node, n_core, hs = plan.n_node, plan.n_core, plan.hs
-        return {"wire_bytes": k * n_node * n_core * hs * itemsize,
+        pb = _wire_codec(state).payload_bytes(hs, itemsize)
+        return {"wire_bytes": k * n_node * n_core * pb,
                 "all-to-all": 0,
                 "all-gather": 1 if hs else 0,
                 "collective-permute": k}
@@ -342,15 +516,17 @@ class PairwiseTransport(HaloTransport):
         # listed transmit nothing, receivers not listed get zeros — whose
         # recv rows are all dump-slot anyway (no traffic on that pair)
         return _ppermute_exchange(x_mine, F, state["pairs_by_offset"],
-                                  axes, n_node, g_pad)
+                                  axes, n_node, g_pad, _wire_codec(state))
 
     def host_exchange(self, xd, send_own, recv_own, g_pad, state):
         return _host_pair_scatter(xd, send_own, recv_own, g_pad,
-                                  traffic=state["traffic"])
+                                  traffic=state["traffic"],
+                                  codec=_wire_codec(state))
 
     def predicted_cost(self, plan, state, itemsize=4):
         n_pairs = int(np.count_nonzero(state["traffic"]))
-        return {"wire_bytes": n_pairs * plan.n_core * plan.hs * itemsize,
+        pb = _wire_codec(state).payload_bytes(plan.hs, itemsize)
+        return {"wire_bytes": n_pairs * plan.n_core * pb,
                 "all-to-all": 0,
                 "all-gather": 1 if plan.hs else 0,
                 "collective-permute": len(state["pairs_by_offset"])}
@@ -376,11 +552,17 @@ class HierTransport(HaloTransport):
     def exchange(self, x_mine, F, *, state, axes, n_node, g_pad):
         node_ax, core_ax = axes
         send_own = F["send_own"]
-        # intra-node gather to the "leader" (SPMD: replicated on each core)
-        sendtab = jax.lax.all_gather(x_mine[send_own], core_ax, axis=0)
+        codec = _wire_codec(state)
+        # intra-node gather to the "leader" (SPMD: replicated on each
+        # core) — chunks are encoded *before* the gather, so the wire
+        # dtype also shrinks the (cheap) intra-node hop
+        sendtab = jax.lax.all_gather(codec.encode(x_mine[send_own]),
+                                     core_ax, axis=0)
         # one inter-node exchange of the combined per-node payload
-        recv = jax.lax.all_to_all(sendtab, node_ax,
-                                  split_axis=1, concat_axis=1)
+        recv = codec.decode(
+            jax.lax.all_to_all(sendtab, node_ax,
+                               split_axis=1, concat_axis=1),
+            x_mine.dtype)
         # intra-node scatter: the replicated receive table assembles the
         # full ghost buffer locally — no core-axis gather of partials
         part = jnp.zeros(g_pad + 1, dtype=x_mine.dtype)
@@ -388,23 +570,23 @@ class HierTransport(HaloTransport):
 
     def host_exchange(self, xd, send_own, recv_own, g_pad, state):
         n_node, n_core = send_own.shape[:2]
+        sent = _host_send_table(xd, send_own, _wire_codec(state))
         ghost = np.zeros((n_node, n_core, g_pad + 1), dtype=xd.dtype)
         for dst in range(n_node):
             buf = np.zeros(g_pad + 1, dtype=xd.dtype)
             for c in range(n_core):
                 for src in range(n_node):
-                    buf[recv_own[dst, c, src]] = \
-                        xd[src, c, send_own[src, c, dst]]
+                    buf[recv_own[dst, c, src]] = sent[src, c, dst]
             ghost[dst, :, :] = buf[None, :]
         return ghost
 
     def predicted_cost(self, plan, state, itemsize=4):
         n_node, n_core, hs = plan.n_node, plan.n_core, plan.hs
+        pb = _wire_codec(state).payload_bytes(hs, itemsize)
         # the combined payload rides the node axis once per core row
         # (SPMD replication), so the padded wire is n_core x the a2a bytes;
         # the win is the removed receive-side core gather
-        return {"wire_bytes": (n_node * (n_node - 1)
-                               * n_core * n_core * hs * itemsize),
+        return {"wire_bytes": n_node * (n_node - 1) * n_core * n_core * pb,
                 "all-to-all": 1 if hs else 0,
                 "all-gather": 1 if hs else 0,   # send-side, core axis
                 "collective-permute": 0}
@@ -547,8 +729,8 @@ def transport_stamp(transport: str | HaloTransport) -> str:
     return tr.name
 
 
-def resolve_transport(transport, plan,
-                      neighbor_offsets=None) -> tuple[HaloTransport, dict]:
+def resolve_transport(transport, plan, neighbor_offsets=None,
+                      wire_dtype=None) -> tuple[HaloTransport, dict]:
     """(transport, validated plan state) — the up-front resolution used by
     ``make_shard_body``/``make_spmv``/``make_solver``.
 
@@ -556,7 +738,10 @@ def resolve_transport(transport, plan,
     when given it replaces the offsets derived from the plan and is
     validated for completeness (a partial list would silently drop halo
     traffic at trace time — the late failure this resolution step
-    retires).
+    retires).  ``wire_dtype`` overrides the plan's stamped wire codec
+    (default: follow the stamp); the resolved codec rides the state under
+    ``"wire_codec"`` so ``exchange``/``host_exchange``/``predicted_cost``
+    all see the same one.
     """
     tr = get_transport(transport)
     state = tr.plan_state(plan)
@@ -564,17 +749,23 @@ def resolve_transport(transport, plan,
         state = tr.finalize_state(
             plan, dict(state, neighbor_offsets=list(neighbor_offsets)))
     tr.validate(plan, state)
+    state["wire_codec"] = get_codec(
+        wire_dtype if wire_dtype is not None else plan_wire_dtype(plan))
     return tr, state
 
 
-def transport_census(plan, itemsize: int = 4) -> dict:
+def transport_census(plan, itemsize: int = 4, wire_dtype=None) -> dict:
     """{name: predicted_cost} over every registered transport — the static
-    exchange-cost table ``build_spmv_plan`` folds into the layout."""
+    exchange-cost table ``build_spmv_plan`` folds into the layout.  Wire
+    bytes follow ``wire_dtype`` (default: the plan's stamp)."""
+    codec = get_codec(
+        wire_dtype if wire_dtype is not None else plan_wire_dtype(plan))
     out = {}
     for name in available_transports():
         tr = _TRANSPORTS[name]
-        out[name] = tr.predicted_cost(plan, tr.plan_state(plan),
-                                      itemsize=itemsize)
+        state = tr.plan_state(plan)
+        state["wire_codec"] = codec
+        out[name] = tr.predicted_cost(plan, state, itemsize=itemsize)
     return out
 
 
@@ -584,7 +775,7 @@ def transport_census(plan, itemsize: int = 4) -> dict:
 def make_exchange(plan, mesh: jax.sharding.Mesh,
                   axis_names: tuple[str, str] = ("node", "core"),
                   transport: str | HaloTransport = "a2a",
-                  neighbor_offsets=None) -> Callable:
+                  neighbor_offsets=None, wire_dtype=None) -> Callable:
     """Jitted ghost-buffer probe: CG-layout ``x`` ->
     ``(n_node, n_core, g_pad + 1)`` assembled ghost buffers — exactly what
     the shard body feeds the off-diagonal matvec phase, extracted for
@@ -597,7 +788,8 @@ def make_exchange(plan, mesh: jax.sharding.Mesh,
     if plan.hs == 0:
         raise ValueError("plan has no halo traffic (hs == 0): "
                          "there is no exchange to probe")
-    tr, state = resolve_transport(transport, plan, neighbor_offsets)
+    tr, state = resolve_transport(transport, plan, neighbor_offsets,
+                                  wire_dtype=wire_dtype)
     extra = tuple(tr.extra_arrays(plan, state).items())
     node_ax, core_ax = axis_names
     n_node, g_pad = plan.n_node, plan.g_pad
@@ -629,27 +821,34 @@ def make_exchange(plan, mesh: jax.sharding.Mesh,
 @dataclasses.dataclass
 class AutotuneResult:
     winner: str
-    timings_us: dict[str, float]
+    timings_us: dict[str, float]        # per-candidate median, full table
     spmv: Callable                      # the winner's compiled SpMV
+    #: raw per-repetition table behind each median — stamped so the CI
+    #: "auto within tolerance of winner" check can see the spread instead
+    #: of flaking on single-sample noise
+    reps_us: dict[str, list[float]] = dataclasses.field(default_factory=dict)
 
 
 def autotune_transport(plan, mesh: jax.sharding.Mesh,
                        axis_names: tuple[str, str] = ("node", "core"),
                        backend: str = "jnp",
                        candidates: tuple[str, ...] | None = None,
-                       iters: int = 20, warmup: int = 2,
-                       neighbor_offsets=None) -> AutotuneResult:
+                       iters: int = 20, warmup: int = 2, reps: int = 3,
+                       neighbor_offsets=None,
+                       wire_dtype=None) -> AutotuneResult:
     """Time every candidate transport's compiled SpMV on the live mesh and
     stamp the winner into ``plan.transport``.
 
     The probe input is a unit-ish vector in CG layout; each candidate is
-    compiled once, warmed ``warmup`` calls, then timed over ``iters``
-    back-to-back calls.  ``transport="auto"`` in ``make_spmv`` /
-    ``make_solver`` / the CLIs resolves through this function, so a plan
-    autotuned once keeps its winner for every later build
-    (``plan.transport`` is the stamp).  Halo-free plans skip timing —
-    every transport compiles to the same exchange-free body — and stamp
-    ``a2a``.
+    compiled once, warmed ``warmup`` calls (the first also pays the jit),
+    then timed over ``reps`` independent repetitions of ``iters``
+    back-to-back calls — the stamped timing is the per-candidate *median*
+    repetition, so a single noisy window can't crown the wrong winner.
+    ``transport="auto"`` in ``make_spmv`` / ``make_solver`` / the CLIs
+    resolves through this function, so a plan autotuned once keeps its
+    winner for every later build (``plan.transport`` is the stamp).
+    Halo-free plans skip timing — every transport compiles to the same
+    exchange-free body — and stamp ``a2a``.
     """
     from repro.core.spmv import make_spmv
 
@@ -663,22 +862,28 @@ def autotune_transport(plan, mesh: jax.sharding.Mesh,
     # candidate build (ring/pairwise validate it for completeness)
     x = jnp.asarray(plan.mask)          # any full CG-layout vector works
     timings: dict[str, float] = {}
+    reps_us: dict[str, list[float]] = {}
     fns: dict[str, Callable] = {}
     for name in names:
         spmv = make_spmv(plan, mesh, axis_names=axis_names, backend=backend,
-                         transport=name, neighbor_offsets=neighbor_offsets)
+                         transport=name, neighbor_offsets=neighbor_offsets,
+                         wire_dtype=wire_dtype)
         for _ in range(max(warmup, 1)):         # compile + warm
             y = spmv(x)
         jax.block_until_ready(y)
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            y = spmv(x)
-        jax.block_until_ready(y)
-        timings[name] = (time.perf_counter() - t0) / iters * 1e6
+        rep_times = []
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                y = spmv(x)
+            jax.block_until_ready(y)
+            rep_times.append((time.perf_counter() - t0) / iters * 1e6)
+        reps_us[name] = rep_times
+        timings[name] = float(np.median(rep_times))
         fns[name] = spmv
-    winner = min(timings, key=timings.get)
+    winner = min(timings, key=lambda n: timings[n])
     plan.transport = winner
-    return AutotuneResult(winner, timings, fns[winner])
+    return AutotuneResult(winner, timings, fns[winner], reps_us)
 
 
 register_transport(A2ATransport())

@@ -20,14 +20,24 @@ __all__ = ["compress_int8", "decompress_int8", "compress_topk",
            "ef_compress_tree"]
 
 
-def compress_int8(x: jax.Array):
-    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+def compress_int8(x: jax.Array, axis=None, keepdims: bool = False):
+    """Absmax-scaled int8 quantisation.
+
+    ``axis=None`` (default) keeps the original per-leaf behaviour: one
+    scalar scale for the whole array.  The halo wire codec passes
+    ``axis=-1, keepdims=True`` for a per-chunk scale — one scale per
+    (sender core -> destination node) halo slice, so quantisation error
+    is bounded relative to each chunk's own magnitude, not the global
+    one.
+    """
+    scale = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims) / 127.0 + 1e-12
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
 
-def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+def decompress_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return q.astype(dtype) * scale
 
 
 def compress_topk(x: jax.Array, frac: float = 0.05):

@@ -17,6 +17,7 @@ from repro.solvers.precond import (BlockJacobiPrecond, JacobiPrecond,
                                    NonePrecond, Preconditioner,
                                    available_preconds, get_precond,
                                    jacobi_inverse, register_precond)
+from repro.solvers.refine import RefineResult, make_refine, refine_solve
 from repro.solvers.resilient import (ResilientResult, SolveFailure,
                                      make_resilient, resilient_solve)
 
@@ -30,4 +31,5 @@ __all__ = [
     "register_precond", "get_precond", "available_preconds",
     "jacobi_inverse",
     "resilient_solve", "make_resilient", "ResilientResult", "SolveFailure",
+    "make_refine", "refine_solve", "RefineResult",
 ]

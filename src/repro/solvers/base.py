@@ -177,6 +177,15 @@ class Solver:
         """Resolve static solve options on the host.  Default: passthrough."""
         return dict(options or {})
 
+    def lossy_wire_options(self) -> dict:
+        """Option defaults applied when the halo wire codec is lossy
+        (``repro.core.transport`` bf16/int8).  A quantised SpMV is a
+        *different* perturbed operator on every call; solvers whose
+        recurrences amplify such inconsistency override this (pipelined
+        CG tightens its residual-replacement period).  Merged UNDER user
+        options by the refinement combinator (``repro.solvers.refine``)."""
+        return {}
+
     # -- the chunked-execution loop hooks ------------------------------- #
     def state_kinds(self) -> dict[str, str]:
         """``{state key: "vector" | "scalar"}`` — the loop-state layout."""
@@ -312,6 +321,7 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
                 axis_names: tuple[str, str] = ("node", "core"),
                 backend: str = "jnp", transport: str | None = None,
                 neighbor_offsets: list[int] | None = None,
+                wire_dtype: str | None = None,
                 maxiter_static: int = 10_000,
                 nrhs: int | None = None,
                 A=None, layout: dict | None = None,
@@ -336,7 +346,9 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
     ``transport`` selects the halo exchange by name
     (``repro.core.transport``; ``None`` follows the plan's stamp,
     ``"auto"`` autotunes the SpMV on this mesh first and uses the stamped
-    winner — exposed as ``solve.transport``).
+    winner — exposed as ``solve.transport``).  ``wire_dtype`` selects the
+    halo wire codec ('f32' | 'bf16' | 'int8'; ``None`` follows
+    ``plan.wire_dtype`` — exposed as ``solve.wire_dtype``).
 
     ``solve.jitted`` exposes the jitted function (``(b, tol, maxiter)``)
     for HLO inspection — ``repro.util.while_body_collective_counts`` on it
@@ -356,12 +368,14 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
         from repro.core.transport import autotune_transport
         transport = autotune_transport(
             plan, mesh, axis_names=axis_names, backend=backend,
-            neighbor_offsets=neighbor_offsets).winner
+            neighbor_offsets=neighbor_offsets,
+            wire_dtype=wire_dtype).winner
     node_ax, core_ax = axis_names
     axes = tuple(axis_names)
     body = make_shard_body(plan, axis_names=axis_names, backend=backend,
                            transport=transport,
-                           neighbor_offsets=neighbor_offsets)
+                           neighbor_offsets=neighbor_offsets,
+                           wire_dtype=wire_dtype)
     fields = plan_fields(plan) + tuple(body.extra)
     pdata = pre.build(plan, layout=layout, A=A)
     pnames = tuple(pdata)
@@ -408,5 +422,6 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
     solve.solver = sol.name
     solve.precond = pre.name
     solve.transport = body.transport
+    solve.wire_dtype = body.wire_dtype
     solve.options = opts
     return solve

@@ -4,7 +4,8 @@ Usage:  python -m repro.testing.analyze [--n-node 4 --n-core 2] \
             [--include-faulty] [--json report.json] [--strict] [--hlo]
 
 Sweeps **every registered** format x transport x solver x preconditioner
-combination through the three static layers of ``repro.analysis``:
+x wire-dtype combination through the three static layers of
+``repro.analysis``:
 
   plan     host numpy invariants per format (single-writer ghost slots,
            slot-map permutation, partition bounds, storage accounting);
@@ -59,7 +60,8 @@ def run_sweep(args) -> dict:
     from repro.analysis.jaxpr_pass import check_solver_hlo
     from repro.analysis.report import Report
     from repro.core.spmv import build_spmv_plan
-    from repro.core.transport import available_transports
+    from repro.core.transport import (available_transports,
+                                      available_wire_dtypes)
     from repro.solvers.base import available_solvers
     from repro.solvers.precond import available_preconds
     from repro.sparse.formats import available_formats
@@ -69,6 +71,7 @@ def run_sweep(args) -> dict:
     transports = _csv(args.transports, available_transports())
     solvers = _csv(args.solvers, available_solvers())
     preconds = _csv(args.preconds, available_preconds())
+    wire_dtypes = _csv(args.wire_dtypes, available_wire_dtypes())
 
     A = graded_extruded_mesh_matrix(args.n_surface, args.layers, seed=0)
     total = Report()
@@ -91,17 +94,20 @@ def run_sweep(args) -> dict:
         tick(f"plan[{fmt}]", check_plan(plan, layout))
         tick(f"kernel[{fmt}]", check_kernel_streams(plan))
         for tname in transports:
-            tick(f"spmv[{fmt} x {tname}]",
-                 check_spmv_static(plan, tname))
+            for wdt in wire_dtypes:
+                tick(f"spmv[{fmt} x {tname} x {wdt}]",
+                     check_spmv_static(plan, tname, wire_dtype=wdt))
         for pname in preconds:
             tick(f"precond[{fmt} x {pname}]",
                  check_precond_static(plan, pname, A=A, layout=layout))
         for sname in solvers:
             opts = DEFAULT_SOLVER_OPTIONS.get(sname)
             for pname in preconds:
-                tick(f"solver[{fmt} x {sname} x {pname}]",
-                     check_solver_static(plan, sname, pname, A=A,
-                                         layout=layout, options=opts))
+                for wdt in wire_dtypes:
+                    tick(f"solver[{fmt} x {sname} x {pname} x {wdt}]",
+                         check_solver_static(plan, sname, pname, A=A,
+                                             layout=layout, options=opts,
+                                             wire_dtype=wdt))
         if args.hlo:
             from repro.util import make_mesh_compat
             mesh = make_mesh_compat((args.n_node, args.n_core),
@@ -126,6 +132,7 @@ def run_sweep(args) -> dict:
                       "transports": list(transports),
                       "solvers": list(solvers),
                       "preconds": list(preconds),
+                      "wire_dtypes": list(wire_dtypes),
                       "n_node": args.n_node, "n_core": args.n_core,
                       "include_faulty": args.include_faulty,
                       "hlo": args.hlo}}
@@ -142,6 +149,8 @@ def main(argv=None) -> int:
     p.add_argument("--transports", default="all")
     p.add_argument("--solvers", default="all")
     p.add_argument("--preconds", default="all")
+    p.add_argument("--wire-dtypes", default="all",
+                   help="halo wire codecs to sweep (f32 | bf16 | int8)")
     p.add_argument("--include-faulty", action="store_true",
                    help="register the corrupting FaultyTransport into the "
                         "sweep; the analyzer must then exit nonzero")

@@ -33,6 +33,19 @@ def main() -> int:
     ap.add_argument("--n-surface", type=int, default=2000)
     ap.add_argument("--layers", type=int, default=16)
     ap.add_argument("--iters", type=int, default=50)
+    ap.add_argument("--warmup", type=int, default=3,
+                    help="SpMV sweep: executions of each *compiled* program "
+                         "before timing starts (beyond the compile call), "
+                         "so no transport pays first-run costs in its "
+                         "timed passes")
+    ap.add_argument("--reps", type=int, default=5,
+                    help="SpMV sweep: timed repetitions of the --iters "
+                         "loop per transport; us_per_spmv is their median")
+    ap.add_argument("--wire-dtype", default="f32",
+                    help="halo wire codec (repro.core.transport: f32 | "
+                         "bf16 | int8), or a comma list to sweep (SpMV "
+                         "path only): per-dtype timings + predicted and "
+                         "traced wire bytes land in the JSON under 'wire'")
     ap.add_argument("--cg", action="store_true")
     ap.add_argument("--fused", action="store_true",
                     help="with --cg: time the fully-sharded fused CG solver")
@@ -99,6 +112,9 @@ def main() -> int:
     if (args.solver or args.cg) and "," in args.transport:
         ap.error("--transport sweeps are SpMV-only; pick one transport "
                  "for --solver/--cg runs")
+    if (args.solver or args.cg) and "," in args.wire_dtype:
+        ap.error("--wire-dtype sweeps are SpMV-only; pick one wire dtype "
+                 "for --solver/--cg runs")
 
     if args.solver:
         import jax.numpy as jnp
@@ -113,7 +129,9 @@ def main() -> int:
         solve = make_solver(plan, mesh, solver=args.solver,
                             precond=args.precond, transport=args.transport,
                             neighbor_offsets=layout["neighbor_offsets"],
+                            wire_dtype=args.wire_dtype,
                             nrhs=nrhs, A=A, layout=layout)
+        out["wire_dtype"] = solve.wire_dtype
         if nrhs:
             b_host = rng.normal(size=(nrhs, A.n_rows))
             b = to_dist_batch(b_host, layout, plan)
@@ -156,6 +174,7 @@ def main() -> int:
                                 precond=args.precond,
                                 transport=args.transport,
                                 neighbor_offsets=layout["neighbor_offsets"],
+                                wire_dtype=args.wire_dtype,
                                 A=A, layout=layout)
             kw = dict(solver=args.solver, precond=args.precond, mesh=mesh,
                       layout=layout, A=None, tol=args.tol,
@@ -180,6 +199,9 @@ def main() -> int:
 
         from repro.util import collective_counts
 
+        if args.wire_dtype != "f32":
+            ap.error("--cg is the legacy f32-wire path; use --solver for "
+                     "compressed wire")
         solve = make_cg(plan, mesh, fused=args.fused,
                         transport=args.transport,
                         neighbor_offsets=layout["neighbor_offsets"])
@@ -199,42 +221,67 @@ def main() -> int:
                 solve.jitted, b, jnp.asarray(args.tol, jnp.float32),
                 jnp.asarray(args.iters, jnp.int32))
     else:
+        from repro.core import transport_census
         from repro.util import collective_counts
 
         names = args.transport.split(",")
-        sweep = {}
-        for name in names:
-            res = {}
-            if name == "auto":
-                from repro.core.transport import autotune_transport
-                at = autotune_transport(plan, mesh)
-                spmv = at.spmv
-                res["resolved"] = at.winner
-                res["autotune"] = {
-                    "winner": at.winner,
-                    "timings_us": {k: round(v, 1)
-                                   for k, v in at.timings_us.items()}}
-            else:
-                spmv = make_spmv(plan, mesh, transport=name)
-                res["resolved"] = spmv.transport
-            y = spmv(x)
-            jax.block_until_ready(y)       # compile + warmup
-            t0 = time.time()
-            for _ in range(args.iters):
-                y = spmv(x)
-            jax.block_until_ready(y)
-            dt = time.time() - t0
-            res["us_per_spmv"] = dt / args.iters * 1e6
-            res["gflops"] = 2.0 * A.nnz / (dt / args.iters) / 1e9
-            # the transport's own static prediction (padded wire bytes +
-            # per-kind collective counts), to be held against the
-            # compiled-HLO census below
-            res["predicted"] = layout["transport_census"][res["resolved"]]
-            if not args.no_collectives:
-                res["collectives"] = collective_counts(spmv, x)
-            sweep[name] = res
-        out["transports"] = sweep
-        first = sweep[names[0]]
+        wire_dtypes = args.wire_dtype.split(",")
+        wire_sweep = {}
+        for wd in wire_dtypes:
+            census = transport_census(plan, wire_dtype=wd)
+            sweep = {}
+            for name in names:
+                res = {}
+                if name == "auto":
+                    from repro.core.transport import autotune_transport
+                    at = autotune_transport(plan, mesh, wire_dtype=wd)
+                    spmv = at.spmv
+                    res["resolved"] = at.winner
+                    res["autotune"] = {
+                        "winner": at.winner,
+                        "timings_us": {k: round(v, 1)
+                                       for k, v in at.timings_us.items()}}
+                else:
+                    spmv = make_spmv(plan, mesh, transport=name,
+                                     wire_dtype=wd)
+                    res["resolved"] = spmv.transport
+                # fairness: the first call pays compilation and first-run
+                # setup — warm the *compiled* program before any timing so
+                # no transport's timed pass carries one-off costs
+                for _ in range(max(args.warmup, 1)):
+                    y = spmv(x)
+                jax.block_until_ready(y)
+                rep_us = []
+                for _ in range(max(args.reps, 1)):
+                    t0 = time.time()
+                    for _ in range(args.iters):
+                        y = spmv(x)
+                    jax.block_until_ready(y)
+                    rep_us.append((time.time() - t0) / args.iters * 1e6)
+                res["us_per_spmv"] = float(np.median(rep_us))
+                res["reps_us"] = [round(v, 1) for v in rep_us]
+                res["gflops"] = (2.0 * A.nnz
+                                 / (res["us_per_spmv"] * 1e-6) / 1e9)
+                # the transport's own static prediction at this wire
+                # dtype (wire bytes + per-kind collective counts), to be
+                # held against the compiled-HLO census below
+                res["predicted"] = census[res["resolved"]]
+                if plan.hs > 0:
+                    from repro.analysis.jaxpr_pass import (
+                        derived_wire_bytes, trace_exchange)
+                    res["traced_wire_bytes"] = derived_wire_bytes(
+                        trace_exchange(plan, res["resolved"],
+                                       wire_dtype=wd),
+                        plan.n_node, plan.n_core)
+                if not args.no_collectives:
+                    res["collectives"] = collective_counts(spmv, x)
+                sweep[name] = res
+            wire_sweep[wd] = sweep
+        out["transports"] = wire_sweep[wire_dtypes[0]]
+        if len(wire_dtypes) > 1:
+            out["wire"] = wire_sweep
+        out["wire_dtype"] = wire_dtypes[0]
+        first = wire_sweep[wire_dtypes[0]][names[0]]
         out["transport"] = (first["resolved"] if len(names) == 1
                             else "sweep")
         out["us_per_spmv"] = first["us_per_spmv"]

@@ -1,0 +1,132 @@
+"""Mixed-precision refinement + lossy-wire check, run as a subprocess.
+
+Usage:  python -m repro.testing.refine_check --n-node 4 --n-core 2
+
+Proves the ISSUE-8 acceptance criteria on a multi-device mesh:
+
+  * ``make_refine(inner=<solver>, wire_dtype=<wd>)`` converges to
+    ``--tol`` (default 1e-7, below the f32 floor) against the numpy f64
+    host-CG oracle, for every registered solver x every wire dtype;
+  * a resilient solve over int8 wire converges with ZERO rollbacks — the
+    codec-aware guard tolerance must not mistake quantisation noise for
+    corruption.
+
+Sets XLA_FLAGS *before* importing jax so the host platform exposes
+n_node * n_core fake devices — only inside this process.
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-node", type=int, default=4)
+    ap.add_argument("--n-core", type=int, default=2)
+    ap.add_argument("--mode", default="balanced")
+    ap.add_argument("--format", default="ell")
+    ap.add_argument("--transport", default="a2a")
+    ap.add_argument("--matrix", default="graded",
+                    choices=["mesh", "graded", "random"])
+    ap.add_argument("--n-surface", type=int, default=80)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--n", type=int, default=400)
+    ap.add_argument("--solvers", default="all",
+                    help="comma list of registered solvers, or 'all'")
+    ap.add_argument("--wire-dtypes", default="all",
+                    help="comma list of wire dtypes, or 'all'")
+    ap.add_argument("--tol", type=float, default=1e-7,
+                    help="outer refinement target (vs the f64 oracle)")
+    ap.add_argument("--max-cycles", type=int, default=40)
+    ap.add_argument("--skip-resilient", action="store_true",
+                    help="skip the int8-wire zero-rollback regression")
+    args = ap.parse_args()
+
+    ndev = args.n_node * args.n_core
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={ndev}"
+    )
+
+    import jax
+    import numpy as np
+
+    from repro.core import build_spmv_plan
+    from repro.core.transport import available_wire_dtypes, get_codec
+    from repro.solvers import available_solvers, make_refine, resilient_solve
+    from repro.sparse import (extruded_mesh_matrix,
+                              graded_extruded_mesh_matrix, random_spd_matrix)
+    from repro.testing.dist_check import host_cg
+    from repro.util import make_mesh_compat
+
+    assert len(jax.devices()) == ndev, (len(jax.devices()), ndev)
+
+    if args.matrix == "mesh":
+        A = extruded_mesh_matrix(args.n_surface, args.layers, seed=0)
+    elif args.matrix == "graded":
+        A = graded_extruded_mesh_matrix(args.n_surface, args.layers, seed=0)
+    else:
+        A = random_spd_matrix(args.n, nnz_per_row=9, seed=0)
+
+    mesh = make_mesh_compat((args.n_node, args.n_core), ("node", "core"))
+    solvers = (available_solvers() if args.solvers == "all"
+               else tuple(args.solvers.split(",")))
+    wire_dtypes = (available_wire_dtypes() if args.wire_dtypes == "all"
+                   else tuple(args.wire_dtypes.split(",")))
+
+    rng = np.random.default_rng(1)
+    b = rng.normal(size=A.n_rows)
+    xh = host_cg(A, b, tol=1e-12, maxiter=40_000)
+    xh_norm = max(float(np.linalg.norm(xh)), 1e-30)
+    ok = True
+
+    for wd in wire_dtypes:
+        # one plan per wire dtype: the stamp flows into every program
+        plan, layout = build_spmv_plan(
+            A, args.n_node, args.n_core, mode=args.mode,
+            format=args.format, transport=args.transport, wire_dtype=wd)
+        for name in solvers:
+            # the inner target sits just above each solver's lossy-wire
+            # attainable floor: cruder codecs need a looser (cheaper)
+            # inner solve, and pipelined CG's drift adds ~a digit on top
+            # (Ghysels & Vanroose; see solvers/krylov.py)
+            inner_tol = {"f32": 1e-5, "bf16": 1e-4}.get(wd, 1e-3)
+            if name == "pipelined_cg" and wd != "f32":
+                inner_tol = max(inner_tol * 10, 1e-3)
+            refine = make_refine(
+                plan, mesh, solver=name, precond="jacobi", A=A,
+                layout=layout, inner_tol=inner_tol, maxiter_inner=1000,
+                neighbor_offsets=layout["neighbor_offsets"])
+            res = refine(b, tol=args.tol, max_cycles=args.max_cycles)
+            dxh = float(np.linalg.norm(res.x - xh)) / xh_norm
+            # rel is the f64 true residual; dxh adds a kappa factor on
+            # top of it, so give it an order of magnitude of headroom
+            line_ok = res.converged and dxh < 100 * args.tol
+            print(f"REFINE {name} WIRE {wd} CYCLES {res.cycles} "
+                  f"INNER_ITERS {res.inner_iters} REL {res.rel:.3e} "
+                  f"DX_HOST {dxh:.3e} {'ok' if line_ok else 'BAD'}")
+            ok = ok and line_ok
+
+    if not args.skip_resilient:
+        # regression: quantisation noise must not look like corruption —
+        # the codec-aware guard runs a chunked int8-wire solve to a tol
+        # above the int8 floor with zero rollbacks
+        codec = get_codec("int8")
+        res = resilient_solve(
+            A, b, solver="cg", precond="jacobi",
+            n_node=args.n_node, n_core=args.n_core, mode=args.mode,
+            format=args.format, transport=args.transport, mesh=mesh,
+            wire_dtype="int8", tol=max(1e-4, 2 * codec.rel_bound),
+            maxiter=5000, check_every=25)
+        line_ok = res.converged and res.rollbacks == 0
+        print(f"RESILIENT cg WIRE int8 ITERS {int(np.max(res.iters))} "
+              f"CHUNKS {res.chunks} ROLLBACKS {res.rollbacks} "
+              f"TRUE_REL {res.true_rel:.3e} {'ok' if line_ok else 'BAD'}")
+        ok = ok and line_ok
+
+    print("OK" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

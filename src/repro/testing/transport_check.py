@@ -17,6 +17,14 @@ transport):
           reference the hypothesis property tests drive;
   spmv    ``make_spmv`` output is bit-identical to a2a's, per backend.
 
+``--wire-dtype`` sweeps the halo wire codec.  The bit-identity checks
+hold *within* a wire dtype (every transport encodes the same
+(sender-core -> destination-node) chunks, so the decoded ghosts agree to
+the bit regardless of which collective carried them); the **bounded-error
+tier** then compares each lossy ghost against the exact f32 reference and
+requires ``max|err| <= codec.rel_bound * max|x|`` — f32 wire must stay
+bit-identical to the reference.
+
 Plan cases cover the neighbour-structure regimes the transports
 specialise for: ``graded`` (non-uniform two-level node bounds), ``uniform``
 (equal-rows bounds), ``single`` (banded extrusion ordering — one
@@ -71,6 +79,9 @@ def main() -> int:
     ap.add_argument("--backends", default="jnp")
     ap.add_argument("--transports", default=None,
                     help="comma list (default: every registered transport)")
+    ap.add_argument("--wire-dtype", default="f32",
+                    help="halo wire codec(s) to sweep, comma list "
+                         "(f32 | bf16 | int8, or 'all')")
     ap.add_argument("--autotune", action="store_true",
                     help="also run autotune_transport and verify the "
                          "stamped winner is what transport='auto' builds")
@@ -92,7 +103,8 @@ def main() -> int:
 
     from repro.core import (available_transports, make_exchange,
                             make_spmv, resolve_transport, to_dist)
-    from repro.core.transport import autotune_transport
+    from repro.core.transport import (autotune_transport,
+                                      available_wire_dtypes, get_codec)
     from repro.util import make_mesh_compat
 
     assert len(jax.devices()) == ndev, (len(jax.devices()), ndev)
@@ -101,6 +113,8 @@ def main() -> int:
         register_transport(FaultyTransport())
     transports = (tuple(args.transports.split(","))
                   if args.transports else available_transports())
+    wire_dtypes = (available_wire_dtypes() if args.wire_dtype == "all"
+                   else tuple(args.wire_dtype.split(",")))
     ok = True
 
     for fmt in args.formats.split(","):
@@ -115,39 +129,64 @@ def main() -> int:
               f"n_core={plan.n_core} hs={plan.hs} g_pad={g} "
               f"offsets={layout['neighbor_offsets']}")
 
-        ghost_ref = None
+        # the bounded-error tier's yardstick: the exact (f32-wire) ghost
+        exact_ref = None
         if plan.hs:
-            ghost_ref = np.asarray(make_exchange(plan, mesh,
+            exact_ref = np.asarray(make_exchange(plan, mesh,
                                                  transport="a2a")(xd))
-        y_ref = {b: np.asarray(make_spmv(plan, mesh, backend=b,
-                                         transport="a2a")(xd))
-                 for b in args.backends.split(",")}
 
-        for name in transports:
-            line = [f"TRANSPORT {name}"]
+        for wd in wire_dtypes:
+            codec = get_codec(wd)
+            ghost_ref = None
             if plan.hs:
-                ghost = np.asarray(make_exchange(plan, mesh,
-                                                 transport=name)(xd))
-                g_ok = bool(np.array_equal(ghost[..., :g],
-                                           ghost_ref[..., :g]))
-                # core-axis consistency: assembly must replicate the full
-                # buffer on every core of a node
-                g_ok &= all(np.array_equal(ghost[:, 0, :g], ghost[:, c, :g])
-                            for c in range(plan.n_core))
-                tr, state = resolve_transport(name, plan)
-                host = tr.host_exchange(xd_np, np.asarray(plan.send_own),
-                                        np.asarray(plan.recv_own), g, state)
-                h_ok = bool(np.array_equal(host[..., :g], ghost[..., :g]))
-                line += [f"ghost={'ok' if g_ok else 'BAD'}",
-                         f"host={'ok' if h_ok else 'BAD'}"]
-                ok &= g_ok and h_ok
-            for b in args.backends.split(","):
-                y = np.asarray(make_spmv(plan, mesh, backend=b,
-                                         transport=name)(xd))
-                s_ok = bool(np.array_equal(y, y_ref[b]))
-                line.append(f"spmv[{b}]={'ok' if s_ok else 'BAD'}")
-                ok &= s_ok
-            print(" ".join(line))
+                ghost_ref = np.asarray(make_exchange(
+                    plan, mesh, transport="a2a", wire_dtype=wd)(xd))
+            y_ref = {b: np.asarray(make_spmv(plan, mesh, backend=b,
+                                             transport="a2a",
+                                             wire_dtype=wd)(xd))
+                     for b in args.backends.split(",")}
+
+            for name in transports:
+                line = [f"TRANSPORT {name} WIRE {wd}"]
+                if plan.hs:
+                    ghost = np.asarray(make_exchange(
+                        plan, mesh, transport=name, wire_dtype=wd)(xd))
+                    # chunk identity: same codec, same chunks -> the
+                    # decoded ghosts agree to the bit across transports
+                    g_ok = bool(np.array_equal(ghost[..., :g],
+                                               ghost_ref[..., :g]))
+                    # core-axis consistency: assembly must replicate the
+                    # full buffer on every core of a node
+                    g_ok &= all(np.array_equal(ghost[:, 0, :g],
+                                               ghost[:, c, :g])
+                                for c in range(plan.n_core))
+                    tr, state = resolve_transport(name, plan,
+                                                  wire_dtype=wd)
+                    host = tr.host_exchange(xd_np,
+                                            np.asarray(plan.send_own),
+                                            np.asarray(plan.recv_own),
+                                            g, state)
+                    h_ok = bool(np.array_equal(host[..., :g],
+                                               ghost[..., :g]))
+                    # bounded-error tier vs the exact reference: f32 wire
+                    # must be bit-identical, a lossy codec within bound
+                    err = float(np.abs(ghost[..., :g]
+                                       - exact_ref[..., :g]).max())
+                    bound = codec.rel_bound * float(np.abs(xd_np).max())
+                    e_ok = (err == 0.0 if codec.exact else err <= bound)
+                    line += [f"ghost={'ok' if g_ok else 'BAD'}",
+                             f"host={'ok' if h_ok else 'BAD'}",
+                             f"err={err:.2e}<={bound:.2e}="
+                             f"{'ok' if e_ok else 'BAD'}"]
+                    ok &= g_ok and h_ok and e_ok
+                for b in args.backends.split(","):
+                    y = np.asarray(make_spmv(plan, mesh, backend=b,
+                                             transport=name,
+                                             wire_dtype=wd)(xd))
+                    s_ok = bool(np.array_equal(y, y_ref[b]))
+                    line.append(f"spmv[{b}]={'ok' if s_ok else 'BAD'}")
+                    ok &= s_ok
+                print(" ".join(line))
 
         if args.autotune:
             res = autotune_transport(plan, mesh, iters=5, warmup=1)

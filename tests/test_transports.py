@@ -18,7 +18,8 @@ from repro.core import (HaloTransport, available_transports,
                         make_shard_body, make_spmv, pair_traffic,
                         populated_offsets, register_transport,
                         resolve_transport, to_dist, transport_census)
-from repro.core.transport import PairwiseTransport, autotune_transport
+from repro.core.transport import (PairwiseTransport, autotune_transport,
+                                  available_wire_dtypes, get_codec)
 from repro.solvers import make_solver
 from repro.sparse import extruded_mesh_matrix, graded_extruded_mesh_matrix
 from repro.util import make_mesh_compat
@@ -369,3 +370,160 @@ def test_multidevice_auto_transport_fused_cg_vs_oracle():
                         "--n-surface", "40", "--layers", "6", "--fused"])
     assert r.returncode == 0, r.stdout + r.stderr
     assert "OK" in r.stdout
+
+
+# --------------------------------------------------------------------- #
+# wire codecs: compressed halo payloads (f32 | bf16 | int8)
+# --------------------------------------------------------------------- #
+def test_wire_codec_registry_and_payload_bytes():
+    assert set(available_wire_dtypes()) == {"f32", "bf16", "int8"}
+    f32, bf16, int8 = (get_codec(w) for w in ("f32", "bf16", "int8"))
+    assert f32.exact and f32.rel_bound == 0.0
+    assert not bf16.exact and not int8.exact
+    assert bf16.rel_bound > 0 and int8.rel_bound > bf16.rel_bound
+    with pytest.raises(ValueError, match="unknown wire_dtype.*bf16"):
+        get_codec("fp8")
+    assert get_codec(int8) is int8                # instance passthrough
+    hs = 48
+    assert f32.payload_bytes(hs, 4) == hs * 4
+    assert bf16.payload_bytes(hs, 4) == hs * 2    # exactly half
+    assert int8.payload_bytes(hs, 4) == hs + 4    # + per-chunk f32 scale
+    assert int8.payload_bytes(0, 4) == 0          # no chunk, no scale
+
+
+def test_build_spmv_plan_stamps_and_validates_wire_dtype():
+    A = graded_extruded_mesh_matrix(20, 3, seed=0)
+    plan, _ = build_spmv_plan(A, 1, 1)
+    assert plan.wire_dtype == "f32"               # default stamp
+    with pytest.raises(ValueError, match="unknown wire_dtype"):
+        build_spmv_plan(A, 1, 1, wire_dtype="fp8")
+    plan, _ = build_spmv_plan(A, 1, 1, wire_dtype="int8")
+    assert plan.wire_dtype == "int8"
+    # make_spmv/make_solver follow the stamp and expose it; an explicit
+    # wire_dtype= overrides
+    assert make_spmv(plan, _mesh11()).wire_dtype == "int8"
+    assert make_solver(plan, _mesh11()).wire_dtype == "int8"
+    assert make_spmv(plan, _mesh11(),
+                     wire_dtype="bf16").wire_dtype == "bf16"
+    with pytest.raises(ValueError, match="unknown wire_dtype"):
+        make_spmv(plan, _mesh11(), wire_dtype="fp8")
+
+
+def test_predicted_census_wire_dtype_scaling():
+    """bf16 halves every transport's predicted wire bytes exactly; int8
+    lands below half (a quarter + the per-chunk scale word); collective
+    *counts* are codec-independent."""
+    A = graded_extruded_mesh_matrix(40, 6, seed=0)
+    plan, layout = build_spmv_plan(A, 4, 2, mode="balanced")
+    assert plan.hs > 4
+    f32 = transport_census(plan)
+    bf16 = transport_census(plan, wire_dtype="bf16")
+    int8 = transport_census(plan, wire_dtype="int8")
+    assert f32 == layout["transport_census"]      # f32 is the default
+    for name in available_transports():
+        assert bf16[name]["wire_bytes"] * 2 == f32[name]["wire_bytes"]
+        assert 0 < int8[name]["wire_bytes"] < f32[name]["wire_bytes"] // 2
+        for k in f32[name]:
+            if k != "wire_bytes":
+                assert f32[name][k] == bf16[name][k] == int8[name][k], k
+
+
+def test_autotune_result_carries_rep_timings():
+    # halo-free plans are stamped without timing: the per-rep table is
+    # present (the field exists) but empty
+    A = graded_extruded_mesh_matrix(20, 3, seed=0)
+    plan, _ = build_spmv_plan(A, 1, 1, transport="auto")
+    res = autotune_transport(plan, _mesh11())
+    assert res.reps_us == {}
+
+
+@settings(max_examples=15, deadline=None)
+@given(hs=st.integers(1, 64), n_chunk=st.integers(1, 6),
+       seed=st.integers(0, 10), scale_exp=st.integers(-3, 3),
+       wd_i=st.integers(0, 2))
+def test_wire_codec_roundtrip_property(hs, n_chunk, seed, scale_exp,
+                                       wd_i):
+    """decode(encode(x)) is within the codec's declared bound per chunk
+    (the scale granularity), bit-identical for the exact f32 codec, and
+    all-zero chunks (pad slots ride these) decode to exactly zero."""
+    codec = get_codec(available_wire_dtypes()[wd_i])
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(n_chunk, hs))
+         * 10.0 ** scale_exp).astype(np.float32)
+    y = codec.host_roundtrip(x)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    if codec.exact:
+        np.testing.assert_array_equal(y, x)
+    else:
+        for c in range(n_chunk):
+            bound = codec.rel_bound * float(np.abs(x[c]).max())
+            assert float(np.abs(y[c] - x[c]).max()) <= bound, (codec.name,
+                                                               c)
+    assert np.all(codec.host_roundtrip(np.zeros_like(x)) == 0.0)
+
+
+@settings(max_examples=6, deadline=None)
+@given(n_surface=st.integers(8, 20), n_node=st.integers(2, 4),
+       seed=st.integers(0, 4), wd_i=st.integers(0, 2))
+def test_lossy_exchange_bounded_error_and_pads(n_surface, n_node, seed,
+                                               wd_i):
+    """Every transport's host reference at a lossy wire dtype stays
+    within the codec bound of the exact exchange, and pad ghost slots
+    stay exactly zero (quantising a zero chunk yields zero)."""
+    wd = available_wire_dtypes()[wd_i]
+    codec = get_codec(wd)
+    A = graded_extruded_mesh_matrix(n_surface, 3, seed=seed)
+    plan, layout = build_spmv_plan(A, n_node, 2, mode="balanced")
+    if plan.hs == 0:
+        return
+    x = np.random.default_rng(seed).normal(size=A.n_rows)
+    xd = np.asarray(to_dist(x, layout, plan))
+    send, recv = np.asarray(plan.send_own), np.asarray(plan.recv_own)
+    g, halo = plan.g_pad, layout["halo"]
+    ref_tr, ref_state = resolve_transport("a2a", plan)
+    exact = ref_tr.host_exchange(xd, send, recv, g, ref_state)
+    bound = codec.rel_bound * float(np.abs(xd).max())
+    for name in available_transports():
+        tr, state = resolve_transport(name, plan, wire_dtype=wd)
+        ghost = tr.host_exchange(xd, send, recv, g, state)
+        # compare real slots only — slot g is assembly scratch
+        if codec.exact:
+            np.testing.assert_array_equal(ghost[..., :g], exact[..., :g])
+        else:
+            assert float(np.abs(ghost[..., :g]
+                                - exact[..., :g]).max()) <= bound, name
+        for dst in range(n_node):
+            nreal = len(halo.ghost_cols[dst])
+            assert np.all(ghost[dst, :, nreal:g] == 0.0), (name, dst)
+
+
+def test_multidevice_wire_dtype_conformance():
+    """8-device sweep at every wire dtype: chunk identity makes decoded
+    ghosts bit-identical across transports within a dtype, and the
+    bounded-error tier holds each lossy ghost within the codec bound of
+    the exact f32 reference."""
+    r = run_subprocess(["-m", "repro.testing.transport_check",
+                        "--n-node", "4", "--n-core", "2",
+                        "--case", "graded", "--formats", "ell",
+                        "--wire-dtype", "all"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout and "BAD" not in r.stdout
+    for wd in ("f32", "bf16", "int8"):
+        assert f"WIRE {wd}" in r.stdout, (wd, r.stdout)
+
+
+def test_wire_conformance_still_catches_faulty_transport():
+    # the lossy-tier tolerance must not become a blanket excuse: payload
+    # corruption beyond the codec is still flagged at a lossy wire dtype
+    r = run_subprocess(["-m", "repro.testing.transport_check",
+                        "--n-node", "4", "--n-core", "2",
+                        "--case", "graded", "--formats", "ell",
+                        "--wire-dtype", "int8", "--include-faulty"])
+    assert r.returncode != 0, r.stdout + r.stderr
+    faulty = [ln for ln in r.stdout.splitlines()
+              if ln.startswith("TRANSPORT faulty")]
+    assert faulty and all("BAD" in ln for ln in faulty), r.stdout
+    for ln in r.stdout.splitlines():
+        if ln.startswith("TRANSPORT") and not ln.startswith(
+                "TRANSPORT faulty"):
+            assert "BAD" not in ln, ln
