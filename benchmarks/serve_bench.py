@@ -1,0 +1,222 @@
+"""Closed + open-loop load generator for the solve service.
+
+Compares three serving policies over one warm operator, same requests,
+same per-request tolerances:
+
+``sequential``   one solve at a time through the warm monolithic
+                 ``make_solver`` program (nrhs = None) — the naive
+                 baseline: zero batching, a request waits for every
+                 request before it.
+``static``       waves of ``nrhs`` through the warm batched program —
+                 the PR 4 idiom: good throughput, but every wave runs to
+                 its *slowest* column and the batch idles converged slots
+                 until the wave ends.
+``continuous``   the ``repro.serve`` engine: converged columns retire at
+                 chunk boundaries and queued RHS are spliced into freed
+                 slots mid-solve, so the compiled program never carries
+                 an idle slot while work is queued.
+
+Closed loop: all requests arrive at t = 0; reports makespan + per-solve
+latency percentiles (p50/p99).  Open loop: requests arrive at an offered
+rate (deterministic inter-arrival, live wall clock); reports latency
+percentiles and achieved solves/sec vs offered load for continuous and
+sequential.  Per-request tolerances cycle through {tol, 3 tol, 10 tol}
+so columns converge at different times — the regime continuous batching
+exists for.
+
+Prints one JSON dict (piped into ``append_bench.py`` for the committed
+trajectory):
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --n-node 1 --n-core 2 \\
+      --requests 16 --nrhs 4 | python benchmarks/append_bench.py --label pr9
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def pctl(xs, q):
+    import numpy as np
+    return float(np.percentile(np.asarray(xs), q))
+
+
+def lat_summary(latencies_s):
+    return {"p50_ms": round(pctl(latencies_s, 50) * 1e3, 2),
+            "p99_ms": round(pctl(latencies_s, 99) * 1e3, 2),
+            "mean_ms": round(sum(latencies_s) / len(latencies_s) * 1e3, 2)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-node", type=int, default=1)
+    ap.add_argument("--n-core", type=int, default=2)
+    ap.add_argument("--nrhs", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--solver", default="cg")
+    ap.add_argument("--precond", default="jacobi")
+    ap.add_argument("--format", default="ell")
+    ap.add_argument("--transport", default="a2a")
+    ap.add_argument("--n-surface", type=int, default=60)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--tol", type=float, default=1e-5)
+    ap.add_argument("--check-every", type=int, default=20)
+    ap.add_argument("--rates", default="",
+                    help="comma list of offered open-loop rates "
+                         "(solves/sec); empty = closed loop only")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    ndev = args.n_node * args.n_core
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={ndev}")
+
+    import jax
+    import numpy as np
+
+    from repro.core.spmv import to_dist
+    from repro.serve import EngineConfig, PlanCache, SolveEngine
+    from repro.solvers import make_solver
+    from repro.solvers.base import to_dist_batch
+    from repro.sparse import graded_extruded_mesh_matrix
+
+    A = graded_extruded_mesh_matrix(args.n_surface, args.layers, seed=0)
+    n = A.n_rows
+    rng = np.random.default_rng(args.seed)
+    N, K = args.requests, args.nrhs
+    B = rng.normal(size=(N, n))
+    tols = [args.tol * (1, 3, 10)[i % 3] for i in range(N)]
+
+    cache = PlanCache()
+    cfg = EngineConfig(
+        nrhs=K, n_node=args.n_node, n_core=args.n_core,
+        solver=args.solver, precond=args.precond, format=args.format,
+        transport=args.transport, check_every=args.check_every,
+        default_tol=args.tol)
+    engine = SolveEngine(A, cfg, cache=cache)
+    plan, layout, mesh = engine.plan, engine.layout, engine.mesh
+
+    # warm monolithic baselines on the SAME plan/mesh (every policy pays
+    # compile before its first timed request)
+    kw = dict(solver=args.solver, precond=args.precond,
+              transport=args.transport,
+              neighbor_offsets=layout["neighbor_offsets"],
+              A=A, layout=layout)
+    seq_solve = make_solver(plan, mesh, nrhs=None, **kw)
+    bat_solve = make_solver(plan, mesh, nrhs=K, **kw)
+    jax.block_until_ready(seq_solve(
+        to_dist(B[0], layout, plan), tol=args.tol, maxiter=50)[0])
+    jax.block_until_ready(bat_solve(
+        to_dist_batch(B[:K], layout, plan), tol=args.tol, maxiter=50)[0])
+
+    out = {"requests": N, "nrhs": K, "solver": args.solver,
+           "n_node": args.n_node, "n_core": args.n_core, "n_rows": n,
+           "tol": args.tol, "check_every": args.check_every}
+
+    # ---- closed loop: everything arrives at t = 0 --------------------- #
+    closed = {}
+
+    lat = []
+    t0 = time.perf_counter()
+    for i in range(N):
+        x, it, rel = seq_solve(to_dist(B[i], layout, plan), tol=tols[i],
+                               maxiter=cfg.maxiter)
+        jax.block_until_ready(x)
+        lat.append(time.perf_counter() - t0)
+    closed["sequential"] = {"makespan_s": round(lat[-1], 3),
+                            **lat_summary(lat)}
+
+    lat = []
+    t0 = time.perf_counter()
+    for w in range(0, N, K):
+        idx = list(range(w, min(w + K, N)))
+        Bw = np.zeros((K, n))
+        Bw[:len(idx)] = B[idx]
+        tw = np.full((K,), 1.0, np.float32)     # idle pad columns
+        tw[:len(idx)] = [tols[i] for i in idx]
+        x, it, rel = bat_solve(to_dist_batch(Bw, layout, plan),
+                               tol=tw, maxiter=cfg.maxiter)
+        jax.block_until_ready(x)
+        done = time.perf_counter() - t0
+        lat.extend([done] * len(idx))           # wave completes together
+    closed["static"] = {"makespan_s": round(lat[-1], 3),
+                        **lat_summary(lat)}
+
+    lat = []
+    t0 = time.perf_counter()
+    for i in range(N):
+        engine.submit(B[i], tol=tols[i], now=t0)
+    while not engine.idle():
+        for rec in engine.step():
+            lat.append(time.perf_counter() - t0)
+    closed["continuous"] = {"makespan_s": round(max(lat), 3),
+                            **lat_summary(lat),
+                            "chunks": engine.counters["chunks"],
+                            "splices": engine.counters["splices"]}
+    closed["speedup_vs_sequential"] = round(
+        closed["sequential"]["makespan_s"]
+        / closed["continuous"]["makespan_s"], 2)
+    closed["speedup_vs_static"] = round(
+        closed["static"]["makespan_s"]
+        / closed["continuous"]["makespan_s"], 2)
+    out["closed"] = closed
+
+    # ---- open loop: offered arrival rate, live wall clock ------------- #
+    rates = [float(r) for r in args.rates.split(",") if r]
+    if rates:
+        open_loop = {}
+        for rate in rates:
+            arrivals = [i / rate for i in range(N)]
+            per = {}
+
+            lat = []
+            t0 = time.perf_counter()
+            for i in range(N):
+                wait = arrivals[i] - (time.perf_counter() - t0)
+                if wait > 0:
+                    time.sleep(wait)
+                x, _, _ = seq_solve(to_dist(B[i], layout, plan),
+                                    tol=tols[i], maxiter=cfg.maxiter)
+                jax.block_until_ready(x)
+                lat.append(time.perf_counter() - t0 - arrivals[i])
+            per["sequential"] = {
+                **lat_summary(lat),
+                "solves_per_s": round(
+                    N / (time.perf_counter() - t0), 1)}
+
+            lat = []
+            t0 = time.perf_counter()
+            arrival_of = {}                 # engine rid -> arrival time
+            nxt = 0
+            while len(lat) < N:
+                nowr = time.perf_counter() - t0
+                while nxt < N and arrivals[nxt] <= nowr:
+                    req = engine.submit(B[nxt], tol=tols[nxt])
+                    arrival_of[req.rid] = arrivals[nxt]
+                    nxt += 1
+                if engine.idle():           # ahead of the offered load
+                    time.sleep(max(0.0, arrivals[nxt]
+                                   - (time.perf_counter() - t0)))
+                    continue
+                for rec in engine.step():
+                    lat.append(time.perf_counter() - t0
+                               - arrival_of[rec.request.rid])
+            per["continuous"] = {
+                **lat_summary(lat),
+                "solves_per_s": round(
+                    N / (time.perf_counter() - t0), 1)}
+            open_loop[str(rate)] = per
+        out["open"] = open_loop
+
+    out["engine"] = {k: v for k, v in engine.stats().items()
+                     if k != "executables"}
+    print(json.dumps(out))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

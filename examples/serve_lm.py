@@ -1,4 +1,10 @@
-"""Serve a small model with batched requests — continuous-batching decode.
+"""DEPRECATED: the seed LM decode loop this example drove is retired.
+
+Its slot/refill idiom (fixed batch, retire finished slots, refill from a
+request queue) lives on in ``repro.serve.engine``, where it serves the
+solver stack with continuous multi-RHS batching — converged columns are
+retired and respliced mid-solve instead of at wave boundaries.  This
+example now drives that engine through the serving CLI:
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -8,7 +14,7 @@ from repro.launch.serve import main as serve_main
 
 if __name__ == "__main__":
     sys.exit(serve_main([
-        "--arch", "qwen2.5-3b", "--reduced",
-        "--requests", "8", "--batch", "4",
-        "--prompt-len", "32", "--max-new", "16",
+        "--n-node", "1", "--n-core", "2",
+        "--requests", "8", "--nrhs", "4",
+        "--tol-spread", "--oracle",
     ]))

@@ -1,109 +1,113 @@
-"""Batched serving driver: continuous-batching style decode loop.
+"""Solve-serving CLI: queued RHS through the continuous-batching engine.
 
-Maintains a fixed decode batch; finished sequences (EOS or length budget)
-are retired and their slots refilled from a request queue — the slot/refill
-logic is the static-shape serving analogue of the paper's thread-balanced
-work assignment (keep every worker slot busy with equal work).
+The seed LM decode loop that lived here is retired: its slot/refill idiom
+(fixed batch, retire finished slots, refill from the queue) moved into
+``repro.serve.engine`` where it serves the solver stack — the repo's
+actual subject — with mid-solve splicing instead of wave-boundary
+refills.  This module is now a thin CLI over ``repro.serve``:
 
-CPU smoke:
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
-      --requests 8 --batch 4 --prompt-len 16 --max-new 12
+  PYTHONPATH=src python -m repro.launch.serve \\
+      --n-node 2 --n-core 2 --requests 16 --nrhs 4 --tol 1e-5
+
+Prints one JSON dict: per-request convergence/latency aggregates, engine
+counters, and the plan-cache stats (hits / misses / compile seconds).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config
-from repro.data import TokenPipeline
-from repro.models.model import (decode_step, init_cache, init_params,
-                                prefill)
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--n-node", type=int, default=1)
+    ap.add_argument("--n-core", type=int, default=1)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--nrhs", type=int, default=4, help="batch slots")
+    ap.add_argument("--solver", default="cg")
+    ap.add_argument("--precond", default="jacobi")
+    ap.add_argument("--format", default="ell")
+    ap.add_argument("--transport", default="a2a")
+    ap.add_argument("--wire-dtype", default="f32")
+    ap.add_argument("--matrix", default="graded",
+                    choices=["mesh", "graded"])
+    ap.add_argument("--n-surface", type=int, default=60)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--tol", type=float, default=1e-5)
+    ap.add_argument("--tol-spread", action="store_true",
+                    help="cycle requests through {tol, 3*tol, 10*tol} so "
+                         "columns retire at different times (exercises "
+                         "the mid-solve splice)")
+    ap.add_argument("--check-every", type=int, default=25)
+    ap.add_argument("--maxiter", type=int, default=10_000)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--oracle", action="store_true",
+                    help="also solve every request with the host numpy "
+                         "f64 CG oracle and report the worst relative "
+                         "solution error")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    assert not cfg.is_encdec or True  # whisper served like any decoder
+    ndev = args.n_node * args.n_core
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={ndev}")
 
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(key, cfg)
-    pipe = TokenPipeline(vocab=cfg.vocab, global_batch=args.requests,
-                         seq_len=args.prompt_len, seed=args.seed)
-    prompts = pipe.batch_at(0)
-    frames = (pipe.frames_at(0, cfg.n_audio_frames, cfg.d_model)
-              if cfg.is_encdec else None)
+    import numpy as np
 
-    max_len = args.prompt_len + args.max_new + 8
-    B = args.batch
+    from repro.serve import EngineConfig, PlanCache, SolveService
+    from repro.sparse import (extruded_mesh_matrix,
+                              graded_extruded_mesh_matrix)
 
-    prefill_fn = jax.jit(lambda p, t, c, f: prefill(p, cfg, t, c, frames=f))
-    decode_fn = jax.jit(lambda p, t, c, q: decode_step(p, cfg, t, c, q))
+    gen = (graded_extruded_mesh_matrix if args.matrix == "graded"
+           else extruded_mesh_matrix)
+    A = gen(args.n_surface, args.layers, seed=0)
+    cfg = EngineConfig(
+        nrhs=args.nrhs, n_node=args.n_node, n_core=args.n_core,
+        solver=args.solver, precond=args.precond, format=args.format,
+        transport=args.transport, wire_dtype=args.wire_dtype,
+        check_every=args.check_every, maxiter=args.maxiter,
+        default_tol=args.tol)
+    t0 = time.perf_counter()
+    svc = SolveService(A, cfg, cache=PlanCache())
+    t_build = time.perf_counter() - t0
 
-    t0 = time.time()
-    done, generated = 0, {}
-    queue = list(range(args.requests))
-    slots = [None] * B
-    cache = init_cache(cfg, B, max_len)
-    pos = jnp.zeros((B,), jnp.int32)
-    cur = jnp.zeros((B, 1), jnp.int32)
-    new_counts = np.zeros(B, np.int64)
-    steps = 0
+    rng = np.random.default_rng(args.seed)
+    B = rng.normal(size=(args.requests, A.n_rows))
+    tols = ([args.tol, 3 * args.tol, 10 * args.tol]
+            if args.tol_spread else [args.tol])
+    futs = [svc.submit(B[i], tol=tols[i % len(tols)])
+            for i in range(args.requests)]
+    t0 = time.perf_counter()
+    results = svc.drain()
+    t_serve = time.perf_counter() - t0
+    resolved = [f.result() for f in futs]
 
-    def refill():
-        nonlocal cache, pos, cur
-        """Prefill a full batch for the next wave of requests."""
-        wave = [queue.pop(0) if queue else None for _ in range(B)]
-        toks = np.stack([prompts[r] if r is not None else
-                         np.zeros(args.prompt_len, np.int32) for r in wave])
-        fr = (jnp.asarray(np.stack([frames[r if r is not None else 0]
-                                    for r in wave]))
-              if cfg.is_encdec else None)
-        c = init_cache(cfg, B, max_len)
-        c, logits = prefill_fn(params, jnp.asarray(toks), c, fr)
-        return wave, c, jnp.argmax(logits[:, 0, :cfg.vocab], -1)[:, None], \
-            jnp.full((B,), args.prompt_len, jnp.int32)
-
-    while done < args.requests:
-        slots, cache, cur, pos = refill()
-        new_counts[:] = 0
-        for _ in range(args.max_new):
-            logits, cache = decode_fn(params, cur, cache, pos)
-            cur = jnp.argmax(logits[:, :cfg.vocab], -1)[:, None]
-            pos = pos + 1
-            new_counts += 1
-            steps += 1
-        for i, r in enumerate(slots):
-            if r is not None:
-                generated[r] = int(new_counts[i])
-                done += 1
-
-    wall = time.time() - t0
-    total_new = sum(generated.values())
-    print(json.dumps({
-        "arch": cfg.name, "requests": args.requests,
-        "generated_tokens": total_new,
-        "decode_steps": steps,
-        "wall_s": round(wall, 2),
-        "tok_per_s": round(total_new / wall, 1),
-    }))
+    out = {"requests": args.requests, "nrhs": args.nrhs,
+           "solver": args.solver, "n_node": args.n_node,
+           "n_core": args.n_core, "n_rows": A.n_rows,
+           "served": len(results),
+           "converged": len(resolved),
+           "iterations": [r.iterations for r in resolved],
+           "worst_residual_over_tol": max(
+               r.residual / r.tol for r in resolved),
+           "build_s": round(t_build, 2), "serve_s": round(t_serve, 3),
+           "solves_per_s": round(len(results) / max(t_serve, 1e-9), 1),
+           **{k: v for k, v in svc.stats().items()
+              if k != "executables"}}
+    if args.oracle:
+        from repro.testing.dist_check import host_cg
+        errs = []
+        for i, r in enumerate(resolved):
+            xo = host_cg(A, B[i], tol=1e-10, maxiter=20_000)
+            errs.append(float(np.linalg.norm(r.x - xo)
+                              / np.linalg.norm(xo)))
+        out["worst_oracle_err"] = max(errs)
+    print(json.dumps(out))
     return 0
 
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    sys.exit(main())

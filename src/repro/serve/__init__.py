@@ -1,0 +1,18 @@
+"""Solve-as-a-service: persistent engine + continuous multi-RHS batching.
+
+The serving layer turns the solver stack into a long-lived service: a
+plan/executable cache (``repro.serve.plans``) keeps warm compiled
+programs per operator, a continuous-batching engine
+(``repro.serve.engine``) keeps every batch slot busy by retiring
+converged columns and splicing queued RHS in mid-solve, and a request
+API (``repro.serve.service``) wraps it in submit/future/drain with
+structured per-request accounting.
+"""
+from repro.serve.engine import EngineConfig, SolveEngine
+from repro.serve.plans import PlanCache, matrix_fingerprint
+from repro.serve.service import (SolveFuture, SolveResult,  # noqa: F401
+                                 SolveService)
+
+__all__ = ["EngineConfig", "SolveEngine", "PlanCache",
+           "matrix_fingerprint", "SolveFuture", "SolveResult",
+           "SolveService"]

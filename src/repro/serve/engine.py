@@ -1,0 +1,540 @@
+"""Continuous-batching solve engine: slot/refill over a warm chunked loop.
+
+The seed's LM serving loop (the old ``repro.launch.serve``) kept a fixed
+decode batch and refilled finished slots from a request queue — but only
+at *wave* boundaries: the whole batch ran to completion before any slot
+was refilled, so one slow sequence idled every other slot.  This engine is
+the same slot/refill idiom applied to the multi-RHS Krylov batch, made
+*continuous*: the compiled ``nrhs = k`` chunk program never waits for the
+batch — a column that freezes (converged bit-exactly per the PR 4 gating)
+retires at the next chunk boundary and its slot is respliced with the
+next queued RHS mid-solve.
+
+The splice is the engine's core move, and its correctness claim is
+bit-exactness for bystanders: splicing a new RHS into slot ``j`` leaves
+every other column's trajectory bitwise unchanged.  Mechanically:
+
+1. write the new column into the host RHS mirror and its tol into the
+   per-RHS tol vector, then rebuild the device batch from the mirror in
+   one transfer (survivor columns pass through the same pack from the
+   same host bytes — bitwise unchanged) and zero the spliced x columns
+   with one broadcast select;
+2. run the *whole batch* through the compiled ``restart`` program — the
+   solver's ``loop_restart`` true-residual re-basing (the same single
+   recovery primitive behind cold start, rollback, and elastic resume);
+3. merge per state key with one select each: spliced columns take the
+   restart output, all other columns keep their prior state bit-for-bit —
+   vector kinds select on the RHS axis, per-RHS scalars elementwise, and
+   whole-batch scalars (pipelined CG's replace-trip counter ``t``) keep
+   their old value so surviving columns' residual-replacement schedule is
+   unperturbed.
+
+Every per-iteration op in the shipped solvers is column-local (the SpMV
+is vmapped over the RHS axis; reductions are per-RHS), so after the merge
+a surviving column's future iterates are a function of exactly the state
+it already had — bitwise identical to the no-splice run.  The chunk's
+while loop may run *more* trips once a fresh column extends the batch's
+active set, but inactive columns are frozen bit-for-bit by the solvers'
+``_gate``/budget masks, so extra trips are identity on them.
+
+Retirement reads the chunk's per-column ``active`` output (the
+``loop_active`` hook): an inactive column with budget left has converged
+— its iterate is extracted (``from_dist``), its slot freed.  A column
+that exhausts ``maxiter`` or blows its wall-clock deadline produces a
+structured :class:`~repro.solvers.resilient.SolveFailure`; deadline
+evictions force-idle the slot (b = 0, tol = 1 re-bases to an immediately
+inactive column) so the batch never carries zombie work.
+
+Warm restart: :meth:`SolveEngine.checkpoint` persists the in-flight batch
+layout-independently (``state_to_global`` + the global RHS block + tols /
+iteration counts) through ``repro.checkpoint.store``; :meth:`restore`
+re-enters on a fresh engine — any mesh/partition/format/transport —
+through the same ``restart`` program, resuming every in-flight column at
+its checkpointed iterate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.plans import PlanCache, batch_sharding
+from repro.solvers.base import from_dist_batch
+from repro.solvers.resilient import SolveFailure
+
+__all__ = ["EngineConfig", "Request", "SlotResult", "SolveEngine"]
+
+_log = logging.getLogger(__name__)
+
+#: tol stamped on idle slots: with b = 0 the residual norm is exactly 0,
+#: so any positive tolerance makes the column inactive on entry
+_IDLE_TOL = 1.0
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Static configuration of one engine (validated before any compile)."""
+
+    nrhs: int = 4                       # batch slots
+    n_node: int = 1
+    n_core: int = 1
+    solver: str = "cg"
+    precond: str = "jacobi"
+    format: str = "ell"
+    transport: str = "a2a"
+    wire_dtype: str = "f32"
+    mode: str = "balanced"
+    node_partition: str | None = None
+    backend: str = "jnp"
+    check_every: int = 32               # iterations per chunk
+    maxiter: int = 10_000               # per-request iteration budget
+    maxiter_static: int = 10_000
+    max_queue: int = 256                # admission bound (queue_full beyond)
+    default_tol: float = 1e-5
+    batch_fill_timeout_s: float = 0.0   # defer a cold launch this long
+    options: dict | None = None         # solver options (e.g. lmin/lmax)
+
+    def validate(self) -> "EngineConfig":
+        """Fail fast, before any plan build or compile is spent, with the
+        registry's own listings — the PR 7 early-resolution idiom applied
+        to the whole config surface."""
+        from repro.core.transport import (available_transports,
+                                          available_wire_dtypes)
+        from repro.solvers.base import available_solvers
+        from repro.solvers.precond import available_preconds
+        from repro.sparse.formats import available_formats
+
+        def check(kind, value, registered):
+            if value not in registered:
+                raise ValueError(f"unknown {kind} {value!r}; available: "
+                                 f"{tuple(registered)}")
+
+        check("solver", self.solver, available_solvers())
+        check("precond", self.precond, available_preconds())
+        check("format", self.format, available_formats())
+        check("transport", self.transport,
+              available_transports() + ("auto",))
+        check("wire_dtype", self.wire_dtype, available_wire_dtypes())
+        for name, lo in (("nrhs", 1), ("n_node", 1), ("n_core", 1),
+                         ("check_every", 1), ("maxiter", 1),
+                         ("maxiter_static", 1), ("max_queue", 1)):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < lo:
+                raise ValueError(f"{name} must be an int >= {lo}, got {v!r}")
+        if not self.default_tol > 0:
+            raise ValueError(f"default_tol must be > 0, "
+                             f"got {self.default_tol!r}")
+        if self.batch_fill_timeout_s < 0:
+            raise ValueError("batch_fill_timeout_s must be >= 0, got "
+                             f"{self.batch_fill_timeout_s!r}")
+        return self
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued/in-flight RHS (engine-internal; the service wraps it)."""
+
+    rid: int
+    b: np.ndarray                       # (n,) global RHS, f64
+    tol: float
+    deadline_s: float | None = None     # wall-clock budget from submit
+    submit_t: float = 0.0
+    admit_t: float | None = None
+    slot: int | None = None
+    resumed: bool = False               # re-entered from a checkpoint
+
+
+@dataclasses.dataclass
+class SlotResult:
+    """What retiring a slot yields (success or structured failure)."""
+
+    request: Request
+    x: np.ndarray | None                # (n,) global solution (None on fail)
+    iterations: int
+    residual: float                     # true relative residual (host f64)
+    converged: bool
+    queue_s: float
+    solve_s: float
+    failure: SolveFailure | None = None
+
+
+class SolveEngine:
+    """The persistent continuous-batching solver engine.
+
+    ``A`` is a host CSR matrix (``repro.sparse``); ``config`` an
+    :class:`EngineConfig`; ``cache`` an optional shared
+    :class:`~repro.serve.plans.PlanCache` (a fresh private one otherwise).
+    Building the engine compiles (or cache-hits) the restart/chunk/finish
+    triple at serving shapes; everything after is warm.
+    """
+
+    def __init__(self, A, config: EngineConfig,
+                 mesh: jax.sharding.Mesh | None = None,
+                 cache: PlanCache | None = None):
+        from repro.util import make_mesh_compat
+        cfg = config.validate()
+        self.cfg = cfg
+        self.A = A
+        self.cache = cache if cache is not None else PlanCache()
+        if mesh is None:
+            mesh = make_mesh_compat((cfg.n_node, cfg.n_core),
+                                    ("node", "core"))
+        self.mesh = mesh
+        key = self.cache.plan_key(
+            A, n_node=cfg.n_node, n_core=cfg.n_core, mode=cfg.mode,
+            node_partition=cfg.node_partition, format=cfg.format,
+            transport=cfg.transport, wire_dtype=cfg.wire_dtype)
+        self.plan, self.layout = self.cache.plan_for(
+            A, n_node=cfg.n_node, n_core=cfg.n_core, mode=cfg.mode,
+            node_partition=cfg.node_partition, format=cfg.format,
+            transport=cfg.transport, wire_dtype=cfg.wire_dtype,
+            fingerprint=key.fingerprint)
+        self.rs = self.cache.programs_for(
+            key, self.plan, self.layout, mesh,
+            solver=cfg.solver, precond=cfg.precond, nrhs=cfg.nrhs,
+            backend=cfg.backend, maxiter_static=cfg.maxiter_static,
+            A=A, options=cfg.options)
+        self.skeys = self.rs.skeys
+        self.kinds = self.rs.kinds
+        self._x_idx = self.skeys.index("x")
+        self._k_idx = self.skeys.index("k")
+        self._mxd = jnp.asarray(cfg.maxiter, jnp.int32)
+        self._steps = jnp.asarray(cfg.check_every, jnp.int32)
+
+        n, k = self.plan.n, cfg.nrhs
+        self._B = np.zeros((k, n))          # host f64 mirror of the batch
+        self._tol = np.full((k,), _IDLE_TOL, np.float32)
+        # every vector entering restart/chunk is committed to this sharding
+        # (scalars to its replicated sibling) so each program keeps exactly
+        # one compiled executable for life — eager select outputs carry a
+        # derived sharding that jit would key as a fresh signature
+        self._sharding = batch_sharding(mesh)
+        self._replicated = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        shape = (self.plan.n_node, self.plan.n_core, k, self.plan.rc_pad)
+        self._bd = jax.device_put(np.zeros(shape, np.float32),
+                                  self._sharding)
+        self._state = self.rs.restart(
+            self._bd, jnp.asarray(self._tol), self._mxd,
+            jax.device_put(np.zeros(shape, np.float32), self._sharding),
+            jnp.zeros((k,), jnp.int32))
+        self._slots: list[Request | None] = [None] * k
+        self._queue: list[Request] = []
+        self._force_idle: set[int] = set()
+        self._next_rid = 0
+        self.counters = {"submitted": 0, "retired": 0, "failed": 0,
+                         "splices": 0, "chunks": 0, "evicted": 0}
+        # all-idle warm splice: compiles the splice path's eager helper ops
+        # (batch rebuild, selects) at build time so the first real request
+        # doesn't pay them
+        self._splice([(j, None) for j in range(k)])
+        jax.block_until_ready(self._state)
+        self.counters["splices"] = 0
+        self._exec_baseline = PlanCache.executable_counts(self.rs)
+
+    # ------------------------------------------------------------------ #
+    # queue
+    # ------------------------------------------------------------------ #
+    def submit(self, b, tol: float | None = None,
+               deadline_s: float | None = None,
+               now: float | None = None) -> Request:
+        """Queue one RHS.  Raises :class:`SolveFailure` (reason
+        ``queue_full``) past ``max_queue`` and ``ValueError`` on a
+        malformed request — both before the RHS touches any device."""
+        cfg = self.cfg
+        b = np.asarray(b, np.float64)
+        if b.shape != (self.plan.n,):
+            raise ValueError(f"b must be shape ({self.plan.n},), "
+                             f"got {b.shape}")
+        tol = float(cfg.default_tol if tol is None else tol)
+        if not tol > 0:
+            raise ValueError(f"tol must be > 0, got {tol!r}")
+        if deadline_s is not None and not deadline_s > 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s!r}")
+        if len(self._queue) >= cfg.max_queue:
+            raise SolveFailure(
+                f"queue full ({cfg.max_queue} pending)",
+                reason="queue_full", iteration=0, retries=0, trajectory=[])
+        req = Request(rid=self._next_rid, b=b, tol=tol,
+                      deadline_s=deadline_s,
+                      submit_t=time.perf_counter() if now is None else now)
+        self._next_rid += 1
+        self._queue.append(req)
+        self.counters["submitted"] += 1
+        return req
+
+    @property
+    def in_flight(self) -> int:
+        return sum(r is not None for r in self._slots)
+
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    def idle(self) -> bool:
+        return self.in_flight == 0 and not self._queue
+
+    # ------------------------------------------------------------------ #
+    # the splice
+    # ------------------------------------------------------------------ #
+    def _splice(self, assignments: list[tuple[int, Request | None]]):
+        """Re-base slots ``j`` (``None`` request = force-idle) through one
+        whole-batch ``restart`` call, then merge so only the spliced
+        columns change — the bit-exactness contract in the module doc.
+
+        The device work is slot-count independent: one host->device
+        transfer of the RHS batch rebuilt from the host mirror (survivor
+        columns come from the same host bytes through the same pack, so
+        they re-enter bitwise unchanged), one broadcast select zeroing the
+        spliced x columns, the ``restart`` call, and one select per state
+        key for the merge.  No per-slot scatters — a ``.at[j].set`` with a
+        fresh slot index would compile a new executable at serve time,
+        which is exactly the latency cliff the warm cache exists to
+        avoid."""
+        from repro.solvers.base import to_dist_batch
+        keep = np.ones((self.cfg.nrhs,), bool)
+        k = np.asarray(self._state[self._k_idx]).copy()
+        for j, req in assignments:
+            if req is None:
+                self._B[j] = 0.0
+                self._tol[j] = _IDLE_TOL
+            else:
+                self._B[j] = req.b
+                self._tol[j] = req.tol
+            keep[j] = False
+            k[j] = 0
+        keepv = jnp.asarray(keep)
+        bd = jax.device_put(
+            to_dist_batch(self._B, self.layout, self.plan), self._sharding)
+        x = jax.device_put(
+            jnp.where(keepv[None, None, :, None],
+                      self._state[self._x_idx], 0.0), self._sharding)
+        fresh = self.rs.restart(bd, jnp.asarray(self._tol), self._mxd, x,
+                                jnp.asarray(k, jnp.int32))
+        merged = []
+        for i, key in enumerate(self.skeys):
+            old, new = self._state[i], fresh[i]
+            if self.kinds[key] == "vector":
+                merged.append(jax.device_put(
+                    jnp.where(keepv[None, None, :, None], old, new),
+                    self._sharding))
+            elif getattr(old, "ndim", 0) == 1:      # per-RHS scalar
+                merged.append(jax.device_put(jnp.where(keepv, old, new),
+                                             self._replicated))
+            else:
+                # whole-batch scalars (pipelined CG's trip counter t) keep
+                # the OLD value: survivors' replace schedule must not move
+                merged.append(old)
+        self._state = tuple(merged)
+        self._bd = bd
+        self.counters["splices"] += len(assignments)
+
+    def _admit(self, now: float) -> None:
+        assignments: list[tuple[int, Request | None]] = []
+        for j, slot in enumerate(self._slots):
+            if slot is not None:
+                continue
+            if self._queue:
+                req = self._queue.pop(0)
+                req.admit_t = now
+                req.slot = j
+                self._slots[j] = req
+                assignments.append((j, req))
+                self._force_idle.discard(j)
+            elif j in self._force_idle:
+                assignments.append((j, None))
+                self._force_idle.discard(j)
+        if assignments:
+            self._splice(assignments)
+
+    # ------------------------------------------------------------------ #
+    # the chunk step
+    # ------------------------------------------------------------------ #
+    def step(self, now: float | None = None) -> list[SlotResult]:
+        """Admit -> run one ``check_every``-iteration chunk -> retire.
+
+        Returns the slots retired at this boundary (possibly empty).  A
+        cold engine with a part-filled queue defers the launch up to
+        ``batch_fill_timeout_s`` so a burst arriving within the window
+        shares one batch from iteration 0."""
+        real_time = now is None
+        now = time.perf_counter() if real_time else now
+        cfg = self.cfg
+        if (self.in_flight == 0 and self._queue
+                and len(self._queue) < cfg.nrhs
+                and cfg.batch_fill_timeout_s > 0
+                and now - self._queue[0].submit_t < cfg.batch_fill_timeout_s):
+            return []
+        self._admit(now)
+        if self.in_flight == 0:
+            return []
+        out = jax.block_until_ready(self.rs.chunk(
+            self._bd, jnp.asarray(self._tol), self._mxd, self._steps,
+            *self._state))
+        nk = len(self.skeys)
+        self._state = out[:nk]
+        active = np.asarray(out[nk + 2])
+        self.counters["chunks"] += 1
+        return self._retire(active,
+                            time.perf_counter() if real_time else now)
+
+    def _retire(self, active: np.ndarray, now: float) -> list[SlotResult]:
+        cfg = self.cfg
+        k = np.asarray(self._state[self._k_idx])
+        results: list[SlotResult] = []
+        x_host = None
+        for j, req in enumerate(self._slots):
+            if req is None:
+                continue
+            over_deadline = (req.deadline_s is not None
+                             and now - req.submit_t > req.deadline_s)
+            if active[j] and not over_deadline:
+                continue
+            iters = int(k[j])
+            if x_host is None:
+                x_host = np.asarray(self._state[self._x_idx])
+            from repro.core.spmv import from_dist
+            xj = from_dist(x_host[:, :, j, :], self.layout, self.plan)
+            rel = self._true_rel(xj, req.b)
+            queue_s = (req.admit_t or req.submit_t) - req.submit_t
+            solve_s = now - (req.admit_t or req.submit_t)
+            if over_deadline and active[j]:
+                fail = SolveFailure(
+                    f"request {req.rid} missed its {req.deadline_s:.3g}s "
+                    f"deadline at iteration {iters}",
+                    reason="deadline", iteration=iters, retries=0,
+                    trajectory=[(iters, rel)])
+                results.append(SlotResult(
+                    request=req, x=None, iterations=iters, residual=rel,
+                    converged=False, queue_s=queue_s, solve_s=solve_s,
+                    failure=fail))
+                self.counters["evicted"] += 1
+                self.counters["failed"] += 1
+                self._force_idle.add(j)     # zombie column: re-base to idle
+            elif iters >= cfg.maxiter:
+                fail = SolveFailure(
+                    f"request {req.rid} hit maxiter={cfg.maxiter} at "
+                    f"residual {rel:.3g} (tol {req.tol:.3g})",
+                    reason="maxiter", iteration=iters, retries=0,
+                    trajectory=[(iters, rel)])
+                results.append(SlotResult(
+                    request=req, x=None, iterations=iters, residual=rel,
+                    converged=False, queue_s=queue_s, solve_s=solve_s,
+                    failure=fail))
+                self.counters["failed"] += 1
+            else:
+                results.append(SlotResult(
+                    request=req, x=xj, iterations=iters, residual=rel,
+                    converged=True, queue_s=queue_s, solve_s=solve_s))
+                self.counters["retired"] += 1
+            self._slots[j] = None
+        return results
+
+    def _true_rel(self, x: np.ndarray, b: np.ndarray) -> float:
+        r = b - self.A.matvec(x.astype(np.float64))
+        return float(np.linalg.norm(r)
+                     / max(np.linalg.norm(b), 1e-30))
+
+    def drain(self) -> list[SlotResult]:
+        """Run chunks until queue and batch are empty; all retirements."""
+        results: list[SlotResult] = []
+        while not self.idle():
+            got = self.step()
+            results.extend(got)
+            if not got and self.in_flight == 0 and self._queue:
+                # cold batch deferred by the fill timeout: nothing else
+                # can arrive inside drain, so launch immediately
+                self._admit(time.perf_counter())
+        return results
+
+    # ------------------------------------------------------------------ #
+    # warm restart (layout-independent, via checkpoint.store)
+    # ------------------------------------------------------------------ #
+    def checkpoint(self, path: str, step: int | None = None) -> str:
+        """Persist the in-flight batch: global-ordered iterates + RHS block
+        + per-slot tols/budgets/request ids.  Queued (unadmitted) requests
+        are the caller's to resubmit — they hold no solver state."""
+        from repro.checkpoint import save
+        g = self.rs.sol.state_to_global(
+            {"x": np.asarray(self._state[self._x_idx])}, self.layout,
+            self.plan)
+        tree = {"x": np.asarray(g["x"], np.float32),
+                "b": np.asarray(self._B, np.float32)}
+        k = np.asarray(self._state[self._k_idx], np.int32)
+        extra = {"n": int(self.plan.n), "nrhs": int(self.cfg.nrhs),
+                 "solver": self.cfg.solver,
+                 "iteration": k.tolist(),
+                 "tol": np.asarray(self._tol, np.float64).tolist(),
+                 "rids": [r.rid if r is not None else None
+                          for r in self._slots]}
+        return save(path, int(np.max(k)) if step is None else step,
+                    tree, extra=extra)
+
+    def restore(self, path: str, step: int | None = None) -> list[Request]:
+        """Re-enter the latest (or given) checkpoint on THIS engine — any
+        mesh/partition/format/transport, via ``loop_restart`` re-basing.
+        Returns the re-created in-flight requests (fresh clocks)."""
+        from repro.checkpoint import latest_step, load
+        cfg = self.cfg
+        if step is None:
+            step = latest_step(path)
+            if step is None:
+                raise ValueError(f"restore: no checkpoint under {path!r}")
+        like = {"x": jax.ShapeDtypeStruct((cfg.nrhs, self.plan.n),
+                                          np.float32),
+                "b": jax.ShapeDtypeStruct((cfg.nrhs, self.plan.n),
+                                          np.float32)}
+        tree, extra = load(path, step, like)
+        if (extra.get("n") != self.plan.n
+                or extra.get("nrhs") != cfg.nrhs):
+            raise ValueError(
+                f"checkpoint is for n={extra.get('n')}, "
+                f"nrhs={extra.get('nrhs')}; this engine has "
+                f"n={self.plan.n}, nrhs={cfg.nrhs}")
+        if self.in_flight or self._queue:
+            raise RuntimeError("restore on a busy engine")
+        from repro.solvers.base import to_dist_batch
+        B = np.asarray(tree["b"], np.float64)
+        self._B = B.copy()
+        self._bd = jax.device_put(
+            to_dist_batch(B, self.layout, self.plan), self._sharding)
+        self._tol = np.asarray(extra["tol"], np.float32)
+        k = np.asarray(extra["iteration"], np.int32)
+        x_entry = jax.device_put(
+            self.rs.sol.state_from_global(
+                {"x": np.asarray(tree["x"])}, self.layout, self.plan,
+                dtype=self._bd.dtype),
+            self._sharding)
+        self._state = self.rs.restart(
+            self._bd, jnp.asarray(self._tol), self._mxd, x_entry,
+            jnp.asarray(k))
+        now = time.perf_counter()
+        restored: list[Request] = []
+        for j, rid in enumerate(extra.get("rids", [])):
+            if rid is None:
+                self._slots[j] = None
+                continue
+            req = Request(rid=int(rid), b=B[j], tol=float(self._tol[j]),
+                          submit_t=now, admit_t=now, slot=j, resumed=True)
+            self._next_rid = max(self._next_rid, req.rid + 1)
+            self._slots[j] = req
+            restored.append(req)
+        return restored
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> dict:
+        """Engine counters + cache stats + the zero-recompile evidence:
+        ``recompiles`` counts jit executables added after the cache's
+        warmup — 0 across a steady-state serving lifetime."""
+        execs = PlanCache.executable_counts(self.rs)
+        recompiles = sum(max(0, execs[k] - self._exec_baseline[k])
+                         for k in execs
+                         if execs[k] >= 0 and self._exec_baseline[k] >= 0)
+        return {**self.counters,
+                "cache": self.cache.stats.as_dict(),
+                "executables": execs,
+                "recompiles": recompiles}

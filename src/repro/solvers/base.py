@@ -211,9 +211,25 @@ class Solver:
         collectives beyond the SpMV and the re-derived dots)."""
         raise NotImplementedError
 
+    def loop_active(self, ctx: SolverCtx, aux: dict, state: dict):
+        """Per-RHS ``(nrhs,)`` bool: which columns are still iterating.
+
+        This is the *slot* signal of the serving layer
+        (``repro.serve.engine``): a column that goes inactive has either
+        converged (residual-driven solvers freeze it bit-exactly) or
+        exhausted its budget, and its batch slot can be retired and
+        refilled with the next queued RHS.  ``loop_cond`` is its
+        ``any``-reduction, so the two can never disagree.
+        """
+        raise NotImplementedError(
+            f"solver {self.name!r} does not implement the chunked-loop "
+            "protocol (loop_active)")
+
     def loop_cond(self, ctx: SolverCtx, aux: dict, state: dict):
-        """Replicated scalar: any RHS still iterating?"""
-        raise NotImplementedError
+        """Replicated scalar: any RHS still iterating?  Default: the
+        ``any``-reduction of :meth:`loop_active` — override only if the
+        whole-batch predicate is cheaper than the per-column one."""
+        return jnp.any(self.loop_active(ctx, aux, state))
 
     def loop_body(self, ctx: SolverCtx, aux: dict, state: dict) -> dict:
         """One iteration on the state dict (the while-loop body)."""

@@ -105,9 +105,8 @@ class CGSolver(Solver):
         return {"k": k, "x": x, "r": r, "p": z, "rz": s[0], "rr": s[1],
                 "pap": jnp.ones_like(s[0])}
 
-    def loop_cond(self, ctx: SolverCtx, aux, state):
-        return jnp.any((state["k"] < aux["cap"])
-                       & (state["rr"] > aux["tol2"]))
+    def loop_active(self, ctx: SolverCtx, aux, state):
+        return (state["k"] < aux["cap"]) & (state["rr"] > aux["tol2"])
 
     def loop_body(self, ctx: SolverCtx, aux, state):
         k, x, r, p = state["k"], state["x"], state["r"], state["p"]
@@ -232,9 +231,8 @@ class PipelinedCGSolver(Solver):
                 "p": zeros, "g_prev": jnp.full_like(rr, jnp.inf),
                 "a_prev": jnp.ones_like(rr), "rr": rr}
 
-    def loop_cond(self, ctx: SolverCtx, aux, state):
-        return jnp.any((state["k"] < aux["cap"])
-                       & (state["rr"] > aux["tol2"]))
+    def loop_active(self, ctx: SolverCtx, aux, state):
+        return (state["k"] < aux["cap"]) & (state["rr"] > aux["tol2"])
 
     def loop_body(self, ctx: SolverCtx, aux, state):
         b = aux["b"]
@@ -396,22 +394,29 @@ class ChebyshevSolver(Solver):
         return {"k": k, "x": x, "r": r, "p": jnp.zeros_like(x),
                 "a_prev": jnp.full((nrhs,), 1.0 / d, jnp.float32), "kb": k}
 
-    def loop_cond(self, ctx: SolverCtx, aux, state):
+    def loop_active(self, ctx: SolverCtx, aux, state):
         k, kb = state["k"], state["kb"]
-        return jnp.any((k < aux["cap"]) & ((k - kb) < aux["need"]))
+        return (k < aux["cap"]) & ((k - kb) < aux["need"])
 
     def loop_body(self, ctx: SolverCtx, aux, state):
         d, c = self._coeffs(ctx)
         k, x, r, p = state["k"], state["x"], state["r"], state["p"]
         a_prev, kb = state["a_prev"], state["kb"]
+        # freezing matters here only when columns carry *different* budgets
+        # (per-RHS tol, or kb offsets from a serving splice): a column past
+        # its budget must hold its state bit-for-bit while fresher columns
+        # iterate.  With a shared budget every column is active in lockstep
+        # and each gate is where(True, new, old) == new, bitwise.
+        active = (k < aux["cap"]) & ((k - kb) < aux["need"])
         z = ctx.precond(r)
         beta = jnp.where(k == kb, 0.0, (c * a_prev / 2.0) ** 2)
         alpha = jnp.where(k == kb, 1.0 / d, 1.0 / (d - beta / a_prev))
-        p = z + beta[:, None] * p
-        x = x + alpha[:, None] * p
-        r = r - alpha[:, None] * ctx.spmv(p)   # the only collectives
-        return {"k": k + 1, "x": x, "r": r, "p": p, "a_prev": alpha,
-                "kb": kb}
+        p = _gate(active, z + beta[:, None] * p, p)
+        x = _gate(active, x + alpha[:, None] * p, x)
+        r = _gate(active, r - alpha[:, None] * ctx.spmv(p),
+                  r)                           # the only collectives
+        return {"k": k + active.astype(k.dtype), "x": x, "r": r, "p": p,
+                "a_prev": _gate(active, alpha, a_prev), "kb": kb}
 
     def loop_finish(self, ctx: SolverCtx, aux, state):
         rr = pdot(ctx.axes, state["r"], state["r"])  # one psum, post-loop

@@ -154,7 +154,8 @@ def make_resilient(plan, mesh: jax.sharding.Mesh, *,
     solver/preconditioner pair (mirrors ``make_solver``'s plumbing):
 
     ``restart(b, tol, maxiter, x, k)``        -> state tuple
-    ``chunk(b, tol, maxiter, steps, *state)`` -> state + (done, true_rel)
+    ``chunk(b, tol, maxiter, steps, *state)``
+        -> state + (done, true_rel, active)
     ``finish(b, tol, maxiter, *state)``       -> (x, iters, rel)
 
     The state crosses the shard_map boundary as a flat tuple in sorted-key
@@ -258,17 +259,18 @@ def make_resilient(plan, mesh: jax.sharding.Mesh, *,
 
             _, state = jax.lax.while_loop(
                 cond, bdy, (jnp.asarray(0, jnp.int32), state))
-            done = ~sol.loop_cond(ctx, aux, state)
+            active = sol.loop_active(ctx, aux, state)
+            done = ~jnp.any(active)
             # the chunk-level true-residual probe: the guard's only
             # detector for corruption the recurrences never see (a NaN
             # planted in x, transport payload flips, Chebyshev anything)
             rt = b - ctx.spmv(state["x"])
             true_rel = (jnp.sqrt(pdot(axes, rt, rt))
                         / jnp.maximum(aux["bnorm"], 1e-30))
-            return pack_state(state) + (done, true_rel)
+            return pack_state(state) + (done, true_rel, active)
 
         chunk = bind(shard_chunk, (spec, P(), P(), P()) + state_specs,
-                     state_specs + (P(), P()))
+                     state_specs + (P(), P(), P()))
 
         def shard_finish(*args):
             ctx, mask, rest = mk_ctx(args)

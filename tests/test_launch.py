@@ -65,13 +65,22 @@ def test_train_survives_kill_and_resume(tmp_path):
 
 
 def test_serve_loop(tmp_path):
-    r = run_subprocess(["-m", "repro.launch.serve", "--arch", "qwen2.5-3b",
-                        "--reduced", "--requests", "4", "--batch", "2",
-                        "--prompt-len", "16", "--max-new", "4"], timeout=900)
+    """The serving CLI (the retired LM decode loop's successor): queued
+    RHS through the continuous-batching engine, all converged, more
+    requests than slots (so slots were respliced mid-solve), zero
+    post-warmup recompiles."""
+    r = run_subprocess(["-m", "repro.launch.serve", "--n-node", "1",
+                        "--n-core", "2", "--requests", "6", "--nrhs", "2",
+                        "--n-surface", "24", "--layers", "6",
+                        "--tol-spread"], timeout=900)
     assert r.returncode == 0, r.stdout + r.stderr
     out = json.loads([l for l in r.stdout.splitlines()
                       if l.startswith("{")][-1])
-    assert out["generated_tokens"] == 16
+    assert out["served"] == out["converged"] == 6
+    assert out["failed"] == 0
+    assert out["splices"] >= 6           # every request entered via splice
+    assert out["recompiles"] == 0
+    assert out["worst_residual_over_tol"] < 100  # f32 floor slack
 
 
 @pytest.mark.slow

@@ -1,0 +1,246 @@
+"""The solve service: batched transfer round-trips, splice bit-exactness
+(every solver x format), engine end-to-end vs the host oracle, admission
+policy, plan-cache accounting, and checkpoint/restore.
+
+Everything here runs in-process on a 1x1 mesh (the pytest main process
+keeps a single CPU device); the multi-device serving path is covered by
+``repro.testing.serve_check`` (the serve-smoke CI gate) and the launcher
+test in ``test_launch.py``.
+"""
+import numpy as np
+import pytest
+
+from repro.core.spmv import build_spmv_plan, from_dist, to_dist
+from repro.serve import (EngineConfig, PlanCache, SolveEngine, SolveService,
+                         matrix_fingerprint)
+from repro.solvers.base import from_dist_batch, to_dist_batch
+from repro.solvers.resilient import SolveFailure
+from repro.sparse import graded_extruded_mesh_matrix
+from repro.testing.dist_check import host_cg
+from repro.util import make_mesh_compat
+
+
+@pytest.fixture(scope="module")
+def A():
+    return graded_extruded_mesh_matrix(16, 4, seed=0)   # n = 64
+
+
+@pytest.fixture(scope="module")
+def cache():
+    return PlanCache()                  # shared: one compile per program
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh_compat((1, 1), ("node", "core"))
+
+
+def _cfg(**kw):
+    kw.setdefault("nrhs", 3)
+    kw.setdefault("n_node", 1)
+    kw.setdefault("n_core", 1)
+    kw.setdefault("check_every", 5)
+    kw.setdefault("maxiter", 2000)
+    kw.setdefault("maxiter_static", 2000)
+    return EngineConfig(**kw)
+
+
+# --------------------------------------------------------------------- #
+# batched transfer round-trips on a non-uniform partition
+# --------------------------------------------------------------------- #
+def test_to_from_dist_batch_roundtrip_nonuniform_bounds(A, mesh):
+    # graded mesh + nnz partition -> unequal node_bounds by construction
+    plan, layout = build_spmv_plan(A, 2, 2, mode="balanced",
+                                   node_partition="nnz")
+    nb = np.asarray(layout["node_bounds"])
+    assert len(set(np.diff(nb).tolist())) > 1, nb
+    rng = np.random.default_rng(1)
+    B = rng.normal(size=(3, A.n_rows))
+    Bd = to_dist_batch(B, layout, plan)
+    assert Bd.shape == (plan.n_node, plan.n_core, 3, plan.rc_pad)
+    back = from_dist_batch(Bd, layout, plan)
+    assert back.shape == B.shape
+    np.testing.assert_allclose(back, B, rtol=0, atol=1e-6)
+    # column c of the batch is exactly the single-RHS pack of B[c]
+    for c in range(3):
+        col = np.asarray(to_dist(B[c], layout, plan))
+        assert np.asarray(Bd)[:, :, c, :].tobytes() == col.tobytes()
+        assert from_dist(np.asarray(Bd)[:, :, c, :], layout,
+                         plan).tobytes() == back[c].tobytes()
+
+
+# --------------------------------------------------------------------- #
+# splice bit-exactness: every solver x every format
+# --------------------------------------------------------------------- #
+def _x_traj(A, cache, *, solver, fmt, splice):
+    """Serve 3 requests (slot 0's tol is loose, so it retires first); when
+    ``splice``, a 4th request enters slot 0 mid-solve.  Returns per-chunk
+    byte snapshots of every slot's x column plus the per-request
+    iteration counts."""
+    e = SolveEngine(A, _cfg(solver=solver, format=fmt), cache=cache)
+    rng = np.random.default_rng(7)
+    B = rng.normal(size=(4, A.n_rows))
+    for i, tol in enumerate((2e-2, 1e-5, 3e-5)):
+        e.submit(B[i], tol=tol)
+    snaps, iters, added = [], {}, False
+    while not e.idle():
+        for rec in e.step():
+            iters[rec.request.rid] = rec.iterations
+            assert rec.converged
+        if splice and iters and not added:
+            e.submit(B[3], tol=1e-5)
+            added = True
+        x = np.asarray(e._state[e._x_idx])
+        snaps.append([x[:, :, j, :].tobytes() for j in range(3)])
+    if splice:
+        assert added and 3 in iters     # the spliced request retired too
+    return snaps, iters
+
+
+@pytest.mark.parametrize("fmt", ["ell", "sell"])
+@pytest.mark.parametrize("solver", ["cg", "chebyshev", "pipelined_cg"])
+def test_splice_leaves_survivors_bitwise_unchanged(A, cache, solver, fmt):
+    base, it_base = _x_traj(A, cache, solver=solver, fmt=fmt, splice=False)
+    spl, it_spl = _x_traj(A, cache, solver=solver, fmt=fmt, splice=True)
+    # survivors (slots 1, 2) follow the identical per-chunk trajectory
+    for c in range(min(len(base), len(spl))):
+        for j in (1, 2):
+            assert base[c][j] == spl[c][j], (solver, fmt, c, j)
+    # and retire at the identical iteration count
+    for rid in (0, 1, 2):
+        assert it_base[rid] == it_spl[rid], (solver, fmt, rid)
+
+
+# --------------------------------------------------------------------- #
+# engine end-to-end vs the host f64 oracle
+# --------------------------------------------------------------------- #
+def test_engine_serves_queue_against_oracle(A, cache):
+    svc = SolveService(A, _cfg(), cache=cache)
+    rng = np.random.default_rng(3)
+    N = 9                               # 3 x nrhs: every slot respliced
+    B = rng.normal(size=(N, A.n_rows))
+    futs = [svc.submit(B[i], tol=(1e-5, 3e-5, 1e-4)[i % 3])
+            for i in range(N)]
+    results = svc.drain()
+    assert len(results) == N
+    for i, f in enumerate(futs):
+        r = f.result()
+        xh = host_cg(A, B[i], tol=1e-10, maxiter=20_000)
+        dx = np.linalg.norm(r.x - xh) / np.linalg.norm(xh)
+        assert dx < 1e-2, (i, dx)
+        assert r.residual < 2e-4
+        assert r.iterations > 0 and r.solve_s >= 0 and r.queue_s >= 0
+    st = svc.stats()
+    assert st["splices"] >= N
+    assert st["failed"] == 0
+    assert st["recompiles"] == 0
+
+
+# --------------------------------------------------------------------- #
+# admission policy and config validation
+# --------------------------------------------------------------------- #
+def test_config_validation_lists_registered_names():
+    with pytest.raises(ValueError, match=r"unknown solver 'qmr'.*cg"):
+        _cfg(solver="qmr").validate()
+    with pytest.raises(ValueError, match="unknown precond"):
+        _cfg(precond="ilu0").validate()
+    with pytest.raises(ValueError, match=r"unknown format.*ell"):
+        _cfg(format="bsr").validate()
+    with pytest.raises(ValueError, match="unknown transport"):
+        _cfg(transport="nccl").validate()
+    with pytest.raises(ValueError, match="unknown wire_dtype"):
+        _cfg(wire_dtype="f8").validate()
+    with pytest.raises(ValueError, match="nrhs"):
+        _cfg(nrhs=0).validate()
+    with pytest.raises(ValueError, match="check_every"):
+        _cfg(check_every=-1).validate()
+    with pytest.raises(ValueError, match="default_tol"):
+        _cfg(default_tol=0.0).validate()
+
+
+def test_submit_rejects_malformed_and_full_queue(A, cache):
+    e = SolveEngine(A, _cfg(max_queue=2), cache=cache)
+    b = np.ones(A.n_rows)
+    with pytest.raises(ValueError, match="shape"):
+        e.submit(np.ones(A.n_rows + 1))
+    with pytest.raises(ValueError, match="tol"):
+        e.submit(b, tol=-1e-5)
+    with pytest.raises(ValueError, match="deadline"):
+        e.submit(b, tol=1e-5, deadline_s=0.0)
+    e.submit(b)
+    e.submit(b)
+    with pytest.raises(SolveFailure) as ei:
+        e.submit(b)
+    assert ei.value.reason == "queue_full"
+    assert e.counters["submitted"] == 2
+
+
+def test_deadline_eviction_keeps_serving(A, cache):
+    svc = SolveService(A, _cfg(), cache=cache)
+    rng = np.random.default_rng(5)
+    doomed = svc.submit(rng.normal(size=A.n_rows), tol=1e-30,
+                        deadline_s=1e-6)
+    healthy = svc.submit(rng.normal(size=A.n_rows), tol=1e-4)
+    results = svc.drain()
+    with pytest.raises(SolveFailure) as ei:
+        doomed.result()
+    assert ei.value.reason == "deadline"
+    assert [r.request_id for r in results] == [healthy.request_id]
+    st = svc.stats()
+    assert st["evicted"] == 1 and st["retired"] == 1
+    assert st["recompiles"] == 0        # eviction re-bases, no compile
+
+
+# --------------------------------------------------------------------- #
+# the plan/program cache
+# --------------------------------------------------------------------- #
+def test_cache_hits_and_keying(A, cache):
+    before = cache.stats.as_dict()
+    SolveEngine(A, _cfg(), cache=cache)          # same key as fixtures
+    mid = cache.stats.as_dict()
+    assert mid["plan_hits"] == before["plan_hits"] + 1
+    assert mid["program_hits"] == before["program_hits"] + 1
+    assert mid["compile_s"] == before["compile_s"]
+    SolveEngine(A, _cfg(nrhs=2), cache=cache)    # nrhs is a program key
+    after = cache.stats.as_dict()
+    assert after["plan_hits"] == mid["plan_hits"] + 1
+    assert after["program_misses"] == mid["program_misses"] + 1
+    assert after["compile_s"] > mid["compile_s"]
+
+
+def test_fingerprint_covers_values(A):
+    A2 = graded_extruded_mesh_matrix(16, 4, seed=0)
+    assert matrix_fingerprint(A2) == matrix_fingerprint(A)
+    A2.data[0] += 1e-9                  # same pattern, new values -> miss
+    assert matrix_fingerprint(A2) != matrix_fingerprint(A)
+
+
+# --------------------------------------------------------------------- #
+# checkpoint / warm restore
+# --------------------------------------------------------------------- #
+def test_checkpoint_restore_resumes_inflight(A, cache, tmp_path):
+    e1 = SolveEngine(A, _cfg(nrhs=2), cache=cache)
+    rng = np.random.default_rng(11)
+    B = rng.normal(size=(2, A.n_rows))
+    e1.submit(B[0], tol=1e-5)
+    e1.submit(B[1], tol=3e-5)
+    assert e1.step() == []              # mid-solve, nothing retired yet
+    e1.checkpoint(str(tmp_path))
+
+    # restore on a DIFFERENT layout: sell format, fresh engine
+    e2 = SolveEngine(A, _cfg(nrhs=2, format="sell"), cache=cache)
+    restored = e2.restore(str(tmp_path))
+    assert sorted(r.rid for r in restored) == [0, 1]
+    assert all(r.resumed for r in restored)
+    recs = e2.drain()
+    assert len(recs) == 2 and all(r.converged for r in recs)
+    for rec in recs:
+        xh = host_cg(A, B[rec.request.rid], tol=1e-10, maxiter=20_000)
+        assert np.linalg.norm(rec.x - xh) / np.linalg.norm(xh) < 1e-2
+    # restore refuses a busy engine and a mismatched batch shape
+    e2.submit(B[0])
+    with pytest.raises(RuntimeError, match="busy"):
+        e2.restore(str(tmp_path))
+    e3 = SolveEngine(A, _cfg(nrhs=3), cache=cache)
+    with pytest.raises(ValueError, match="shape"):    # load's leaf check
+        e3.restore(str(tmp_path))
