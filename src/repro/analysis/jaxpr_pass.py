@@ -127,7 +127,8 @@ def trace_shard_body(plan: Any, transport: Any = None,
     body = make_shard_body(plan, axis_names=AXES, backend=backend,
                            transport=transport, wire_dtype=wire_dtype)
     F = _shard_F(plan, body)
-    x = jnp.zeros((plan.rc_pad,), plan.mask.dtype)
+    # SpMV input lives in the column space (== rc_pad for square plans)
+    x = jnp.zeros((plan.cc_pad,), plan.mask.dtype)
     return jax.make_jaxpr(lambda v: body(F, v),
                           axis_env=_axis_env(plan))(x)
 
@@ -142,7 +143,7 @@ def trace_exchange(plan: Any, transport: Any,
     extra = {k: v[0, 0] for k, v in tr.extra_arrays(plan, state).items()}
     F = {"send_own": plan.send_own[0, 0], "recv_own": plan.recv_own[0, 0],
          **extra}
-    x = jnp.zeros((plan.rc_pad,), plan.mask.dtype)
+    x = jnp.zeros((plan.cc_pad,), plan.mask.dtype)
     return jax.make_jaxpr(
         lambda v: tr.exchange(v, F, state=state, axes=AXES,
                               n_node=plan.n_node, g_pad=plan.g_pad),
@@ -315,14 +316,14 @@ def check_spmv_static(plan: Any, transport: Any = None,
     return out
 
 
-def _solver_ctx(plan: Any, body: Any, pre: Any,
+def _solver_ctx(plan: Any, body: Any, papply: Any,
                 pdata: dict[str, jax.Array], opts: dict[str, Any],
                 maxiter_static: int = 10_000) -> SolverCtx:
     F = _shard_F(plan, body)
     Pd = {k: v[0, 0] for k, v in pdata.items()}
     return SolverCtx(
         spmv=jax.vmap(lambda v: body(F, v)),
-        precond=lambda r: pre.apply(Pd, r),
+        precond=lambda r: papply(Pd, r),
         mask=plan.mask[0, 0], axes=AXES,
         maxiter_static=maxiter_static, options=opts)
 
@@ -331,6 +332,7 @@ def check_solver_static(plan: Any, solver: Any, precond: Any = "jacobi",
                         transport: Any = None, A: Any = None,
                         layout: dict[str, Any] | None = None,
                         options: dict[str, Any] | None = None,
+                        precond_options: dict[str, Any] | None = None,
                         wire_dtype: str | None = None) -> Report:
     """Prove one solver's reductions-per-iteration contract on this plan:
     trace the fused ``shard_loop`` device-free, find the while body, and
@@ -343,14 +345,15 @@ def check_solver_static(plan: Any, solver: Any, precond: Any = "jacobi",
                       else plan_wire_dtype(plan))
     body = make_shard_body(plan, axis_names=AXES, transport=transport,
                            wire_dtype=codec.name)
-    pdata = pre.build(plan, layout=layout, A=A)
+    pdata, papply = pre.bind(plan, layout=layout, A=A, axis_names=AXES,
+                             options=precond_options)
     opts = sol.prepare(plan, pre, pdata, A=A, layout=layout,
                        options=options)
     ctx_info = {"format": plan.format, "transport": body.transport,
                 "solver": sol.name, "precond": pre.name,
                 "wire_dtype": codec.name}
 
-    sctx = _solver_ctx(plan, body, pre, pdata, opts)
+    sctx = _solver_ctx(plan, body, papply, pdata, opts)
     b = jnp.zeros((1, plan.rc_pad), plan.mask.dtype)
     jxp = jax.make_jaxpr(
         lambda bb, tt, mm: sol.shard_loop(sctx, bb, tt, mm),
@@ -388,33 +391,58 @@ def check_solver_static(plan: Any, solver: Any, precond: Any = "jacobi",
 
 
 def check_precond_static(plan: Any, precond: Any, A: Any = None,
-                         layout: dict[str, Any] | None = None) -> Report:
-    """Prove a ``local_only`` preconditioner's ``apply`` is
-    collective-free (traced under the mesh axis environment)."""
+                         layout: dict[str, Any] | None = None,
+                         options: dict[str, Any] | None = None) -> Report:
+    """Prove a preconditioner's collective contract (traced under the
+    mesh axis environment, no devices required):
+
+    - ``local_only`` preconds must be collective-free
+      (``J_PRECOND_COLLECTIVE``);
+    - non-local preconds must emit exactly their declared
+      ``reductions_per_apply`` reduction collectives
+      (``J_PRECOND_REDUCTIONS``) — every registered precond today
+      declares 0, which is what keeps the solver census invariant
+      across preconds (DESIGN §9/§12).
+    """
     out = Report()
     pre = get_precond(precond)
-    pdata = pre.build(plan, layout=layout, A=A)
+    pdata, papply = pre.bind(plan, layout=layout, A=A, axis_names=AXES,
+                             options=options)
     Pd = {k: v[0, 0] for k, v in pdata.items()}
     r = jnp.zeros((1, plan.rc_pad), plan.mask.dtype)
-    jxp = jax.make_jaxpr(lambda rr: pre.apply(Pd, rr),
+    jxp = jax.make_jaxpr(lambda rr: papply(Pd, rr),
                          axis_env=_axis_env(plan))(r)
     out.count(1)
     census = jaxpr_collective_counts(jxp)
     total = sum(census.values())
-    if total and pre.local_only:
-        out.add(Violation(
-            "J_PRECOND_COLLECTIVE",
-            f"preconditioner {pre.name!r} declares local_only but apply "
-            f"emits {total} collective(s): "
-            f"{ {k: v for k, v in census.items() if v} }",
-            {"format": plan.format, "precond": pre.name}))
+    if pre.local_only:
+        if total:
+            out.add(Violation(
+                "J_PRECOND_COLLECTIVE",
+                f"preconditioner {pre.name!r} declares local_only but "
+                f"apply emits {total} collective(s): "
+                f"{ {k: v for k, v in census.items() if v} }",
+                {"format": plan.format, "precond": pre.name}))
+    else:
+        out.count(1)
+        got = sum(census[k] for k in SOLVER_REDUCTION_OPS)
+        want = int(getattr(pre, "reductions_per_apply", 0))
+        if got != want:
+            out.add(Violation(
+                "J_PRECOND_REDUCTIONS",
+                f"preconditioner {pre.name!r} apply emits {got} "
+                f"reduction collective(s); declares "
+                f"reductions_per_apply={want}",
+                {"format": plan.format, "precond": pre.name}))
     return out
 
 
 def check_solver_hlo(plan: Any, mesh: Any, solver: str,
                      precond: str = "jacobi",
                      A: Any = None, layout: dict[str, Any] | None = None,
-                     options: dict[str, Any] | None = None) -> Report:
+                     options: dict[str, Any] | None = None,
+                     precond_options: dict[str, Any] | None = None
+                     ) -> Report:
     """Compiled-HLO spot check (needs a live mesh): the while-body census
     of the real ``make_solver`` program must agree with the statically
     proven contract.  This is the bridge to the bench-smoke CI
@@ -426,7 +454,8 @@ def check_solver_hlo(plan: Any, mesh: Any, solver: str,
     out = Report()
     sol = get_solver(solver)
     solve = make_solver(plan, mesh, solver=solver, precond=precond,
-                        A=A, layout=layout, options=options)
+                        A=A, layout=layout, options=options,
+                        precond_options=precond_options)
     b = jnp.zeros(plan.cg_shape, plan.mask.dtype)
     census = while_body_collective_counts(
         solve.jitted, b, jnp.float32(1e-6), jnp.int32(10))

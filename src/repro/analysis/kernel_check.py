@@ -9,7 +9,9 @@ registered format declares its streams (``ShardFormat.index_streams``)
 so this checker can prove, per plan:
 
 * every gather index is inside its buffer extent — ``nl_pad`` for the
-  node-local slice, ``g_pad + 1`` for the ghost buffer (``K_INDEX_OOB``);
+  node-local slice (column-keyed: the width of the local x shard, which
+  differs from the row count on rectangular plans), ``g_pad + 1`` for
+  the ghost buffer (``K_INDEX_OOB``);
 * every scatter (accumulation-slot) index is inside ``rc_pad``
   (``K_ROW_OOB``);
 * only zero-valued (pad) entries read the ghost dump slot ``g_pad``,

@@ -12,11 +12,15 @@ no devices.  The invariants proven (codes in ``repro.analysis.report``):
 * the send/receive tables index inside their buffers (``P_SEND_OOB`` /
   ``P_RECV_OOB``);
 * the folded slot order is a true permutation: ``x_gather`` maps the
-  node's rows bijectively onto mask-valid vector slots and is replicated
-  across the core axis (``P_SLOT_PERM``);
-* partition bounds are monotone, cover ``[0, n]``, and agree with the
-  per-node valid-row counts (``P_NODE_BOUNDS``, needs ``layout``);
-* the mask counts exactly ``n`` valid slots (``P_MASK_COUNT``);
+  node's *columns* bijectively onto mask_col-valid vector slots and is
+  replicated across the core axis (``P_SLOT_PERM``) — on square plans
+  ``mask_col``/``cc_pad`` alias ``mask``/``rc_pad``, so this is the
+  familiar row-space check;
+* partition bounds are monotone, cover ``[0, n]`` (and, for rectangular
+  plans, the column space covers ``[0, n_cols]``), and agree with the
+  per-node valid counts (``P_NODE_BOUNDS``, needs ``layout``);
+* the mask counts exactly ``n`` valid slots and ``mask_col`` exactly
+  ``n_cols`` (``P_MASK_COUNT``);
 * format storage accounting is self-consistent (``P_ACCOUNTING``);
 * halo-free plans really carry no ghost machinery (``P_HALO_FREE``).
 """
@@ -59,13 +63,15 @@ def _check_halo_tables(plan: Any, out: Report) -> None:
         return
 
     out.count(2)
-    bad_send = (send < 0) | (send >= plan.rc_pad)
+    # send_own gathers from the local x shard, which lives in the COLUMN
+    # space (cc_pad slots; == rc_pad for square plans)
+    bad_send = (send < 0) | (send >= plan.cc_pad)
     if np.any(bad_send):
         idx = tuple(int(i) for i in np.argwhere(bad_send)[0])
         out.add(Violation(
             "P_SEND_OOB",
             f"{int(bad_send.sum())} send_own entries outside "
-            f"[0, {plan.rc_pad}) (first at {idx}: "
+            f"[0, {plan.cc_pad}) (first at {idx}: "
             f"{int(send[idx])})", _ctx(plan)))
     bad_recv = (recv < 0) | (recv > g_pad)
     if np.any(bad_recv):
@@ -117,8 +123,11 @@ def _check_halo_tables(plan: Any, out: Report) -> None:
 def _check_slot_maps(plan: Any, out: Report) -> None:
     xg = np.asarray(plan.x_gather)
     mask = np.asarray(plan.mask)
+    # column-space mask: aliases ``mask`` on square plans, separate for
+    # rectangular ones — x_gather is a permutation of COLUMN slots
+    mask_col = np.asarray(plan.mask_col)
 
-    out.count(1)
+    out.count(2)
     if not np.all((mask == 0.0) | (mask == 1.0)):
         out.add(Violation("P_MASK_COUNT",
                           "mask holds values other than 0/1", _ctx(plan)))
@@ -128,38 +137,48 @@ def _check_slot_maps(plan: Any, out: Report) -> None:
             "P_MASK_COUNT",
             f"mask marks {total} valid slots, matrix has n={plan.n} rows",
             _ctx(plan)))
+    if not np.all((mask_col == 0.0) | (mask_col == 1.0)):
+        out.add(Violation("P_MASK_COUNT",
+                          "mask_col holds values other than 0/1",
+                          _ctx(plan)))
+    total_c = int(mask_col.sum())
+    if total_c != plan.n_cols:
+        out.add(Violation(
+            "P_MASK_COUNT",
+            f"mask_col marks {total_c} valid slots, matrix has "
+            f"n_cols={plan.n_cols} columns", _ctx(plan)))
 
     out.count(plan.n_node)
-    n_slots = plan.n_core * plan.rc_pad
+    n_slots = plan.n_core * plan.cc_pad
     for node in range(plan.n_node):
-        nl = int(mask[node].sum())
+        ncl = int(mask_col[node].sum())
         if not np.all(xg[node] == xg[node, :1]):
             out.add(Violation(
                 "P_SLOT_PERM",
                 f"node {node}: x_gather differs across the core axis "
                 "(must be replicated)", _ctx(plan, node=node)))
             continue
-        e = xg[node, 0, :nl].astype(np.int64)
+        e = xg[node, 0, :ncl].astype(np.int64)
         if np.any((e < 0) | (e >= n_slots)):
             out.add(Violation(
                 "P_SLOT_PERM",
                 f"node {node}: x_gather points outside the node's "
                 f"{n_slots} vector slots", _ctx(plan, node=node)))
             continue
-        if len(np.unique(e)) != nl:
+        if len(np.unique(e)) != ncl:
             out.add(Violation(
                 "P_SLOT_PERM",
-                f"node {node}: x_gather maps {nl} rows onto "
+                f"node {node}: x_gather maps {ncl} columns onto "
                 f"{len(np.unique(e))} distinct slots — not a permutation",
                 _ctx(plan, node=node)))
             continue
-        core, lr = e // plan.rc_pad, e % plan.rc_pad
-        if not np.all(mask[node, core, lr] == 1.0):
-            bad = int(np.argwhere(mask[node, core, lr] != 1.0)[0][0])
+        core, lr = e // plan.cc_pad, e % plan.cc_pad
+        if not np.all(mask_col[node, core, lr] == 1.0):
+            bad = int(np.argwhere(mask_col[node, core, lr] != 1.0)[0][0])
             out.add(Violation(
                 "P_SLOT_PERM",
-                f"node {node}: x_gather row {bad} targets a padding slot "
-                f"(core {int(core[bad])}, slot {int(lr[bad])})",
+                f"node {node}: x_gather column {bad} targets a padding "
+                f"slot (core {int(core[bad])}, slot {int(lr[bad])})",
                 _ctx(plan, node=node)))
 
 
@@ -230,6 +249,38 @@ def _check_bounds(plan: Any, layout: dict[str, Any], out: Report) -> None:
                 "P_NODE_BOUNDS",
                 f"node {node}: core_bounds {cb.tolist()} does not cover "
                 f"[0, {nl}]", _ctx(plan, node=node)))
+
+    # column-space partition (rectangular plans carry their own; square
+    # plans alias the row partition)
+    cs = layout.get("col_space")
+    if cs is None:
+        return
+    cnb = np.asarray(cs["node_bounds"], dtype=np.int64)
+    mask_col = np.asarray(plan.mask_col)
+    out.count(1)
+    if (len(cnb) != plan.n_node + 1 or np.any(np.diff(cnb) < 0)
+            or int(cnb[0]) != 0 or int(cnb[-1]) != plan.n_cols):
+        out.add(Violation(
+            "P_NODE_BOUNDS",
+            f"col_space node_bounds {cnb.tolist()} is not monotone over "
+            f"[0, {plan.n_cols}]", _ctx(plan)))
+        return
+    for node in range(plan.n_node):
+        ncl = int(cnb[node + 1] - cnb[node])
+        got = int(mask_col[node].sum())
+        if ncl != got:
+            out.add(Violation(
+                "P_NODE_BOUNDS",
+                f"node {node}: col_space bounds claim {ncl} columns, "
+                f"mask_col marks {got} valid slots",
+                _ctx(plan, node=node)))
+        ccb = np.asarray(cs["core_bounds"][node], dtype=np.int64)
+        if (len(ccb) != plan.n_core + 1 or np.any(np.diff(ccb) < 0)
+                or int(ccb[0]) != 0 or int(ccb[-1]) != ncl):
+            out.add(Violation(
+                "P_NODE_BOUNDS",
+                f"node {node}: col_space core_bounds {ccb.tolist()} does "
+                f"not cover [0, {ncl}]", _ctx(plan, node=node)))
 
 
 def check_plan(plan: Any, layout: dict[str, Any] | None = None) -> Report:

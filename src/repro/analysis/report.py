@@ -122,6 +122,11 @@ CODES: dict[str, tuple[str, str, str]] = {
         "jaxpr", ERROR,
         "a preconditioner declaring local_only emits a collective in "
         "apply()"),
+    "J_PRECOND_REDUCTIONS": (
+        "jaxpr", ERROR,
+        "a non-local preconditioner's apply() emits a number of "
+        "reduction collectives different from its declared "
+        "reductions_per_apply"),
     "J_DOWNCAST": (
         "jaxpr", WARNING,
         "a traced program silently narrows float precision "

@@ -101,16 +101,24 @@ SHARD_FIELDS = ("diag_cols", "diag_vals", "offd_cols", "offd_vals",
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["fmt_data", "send_own", "recv_own", "x_gather",
-                      "diag_a", "mask"],
+                      "diag_a", "mask", "mask_col"],
          meta_fields=["n", "n_node", "n_core", "rc_pad", "nl_pad", "g_pad",
-                      "hs", "mode", "format", "transport", "wire_dtype"])
+                      "hs", "mode", "format", "transport", "wire_dtype",
+                      "n_cols", "cc_pad"])
 @dataclasses.dataclass
 class SpMVPlan:
     """Device-ready distributed matrix + halo plan (a pytree).
 
     Leading axes of every data field are (n_node, n_core, ...) so that
     ``shard_map`` with ``P('node', 'core')`` assigns one slice per device.
-    Vectors in "CG layout" are (n_node, n_core, rc_pad).
+    Vectors in "CG layout" (the **row space** — SpMV outputs, Krylov
+    iterates) are (n_node, n_core, rc_pad); SpMV *inputs* live in the
+    **column space**, (n_node, n_core, cc_pad) (``x_shape``).  For square
+    plans with no explicit column-space override the two spaces coincide
+    (``cc_pad == rc_pad``, ``mask_col is mask``) and every array is
+    bit-identical to the historical square-only plans; rectangular plans
+    (n_cols != n) key the halo/ghost machinery and ``x_gather`` on a
+    separate column-space partition.
     """
 
     # format-owned local matrix blocks, one entry per format field
@@ -145,11 +153,33 @@ class SpMVPlan:
     # the vector dtype.  Builders with ``wire_dtype=None`` follow the
     # stamp.
     wire_dtype: str = "f32"
+    # column-space meta (rectangular operators; default to the row space,
+    # preserving the historical square plan bit-for-bit)
+    n_cols: int = -1       # -1 -> n (square)
+    cc_pad: int = -1       # -1 -> rc_pad (square)
+    # (n_node, n_core, cc_pad) 1.0 valid / 0.0 padding in the *input*
+    # (column-space) layout; the same array object as ``mask`` for square
+    # plans with the default column space.
+    mask_col: jax.Array | None = None
+
+    def __post_init__(self):
+        if self.n_cols < 0:
+            self.n_cols = self.n
+        if self.cc_pad < 0:
+            self.cc_pad = self.rc_pad
+        if self.mask_col is None:
+            self.mask_col = self.mask
 
     # ------------------------------------------------------------------ #
     @property
     def cg_shape(self) -> tuple[int, int, int]:
+        """Row-space (output / Krylov iterate) distributed shape."""
         return (self.n_node, self.n_core, self.rc_pad)
+
+    @property
+    def x_shape(self) -> tuple[int, int, int]:
+        """Column-space (SpMV input) distributed shape."""
+        return (self.n_node, self.n_core, self.cc_pad)
 
     def nnz_stored(self) -> int:
         return get_format(self.format).nnz_stored(self.fmt_data)
@@ -194,6 +224,8 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
                     format: str | ShardFormat = "ell",
                     transport: str | HaloTransport = "a2a",
                     wire_dtype: str = "f32",
+                    row_space: dict | None = None,
+                    col_space: dict | None = None,
                     verify: bool = False
                     ) -> tuple[SpMVPlan, dict]:
     """Partition ``A``, split diag/offdiag, pack shard blocks + halo plan.
@@ -229,6 +261,23 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
     exchange cost (padded wire bytes + per-kind collective counts) for
     this plan.
 
+    ``A`` may be **rectangular** (n_rows != n_cols): the row partition /
+    slot layout / mask / diag are keyed on the row space as before, while
+    column ownership — the halo plan, ``x_gather`` and the input-vector
+    layout — is keyed on a separate column-space partition (same two-level
+    strategy over per-column nnz).  Square inputs with no explicit
+    ``col_space`` reduce *bit-identically* to the historical square-only
+    plans (``tests/golden_square_hashes.json`` pins this).
+
+    ``row_space`` / ``col_space`` pin the corresponding partition to an
+    existing plan's layout instead of computing one — dicts with keys
+    ``node_bounds`` (n_node+1,), ``core_bounds`` (per-node arrays),
+    ``lr`` (per-node bin-local slot maps) and ``pad`` (the shard slot
+    count), exactly what ``layout["row_space"]`` / ``layout["col_space"]``
+    of the plan to pin against carry.  This is how restriction /
+    prolongation plans lock their shared spaces to the fine operator's
+    exact slot layout (including a SELL plan's σ-window permutation).
+
     ``verify=True`` runs the static contract verifier's host layers
     (``repro.analysis``: plan invariants + kernel index-stream bounds)
     on the finished plan and raises ``ValueError`` on any error-severity
@@ -237,6 +286,21 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    # -- up-front shape validation: fail here, not at pack/trace time ----- #
+    if A.n_rows < 1:
+        raise ValueError("build_spmv_plan: empty row space "
+                         f"(A.shape = {A.shape}); the plan needs at least "
+                         "one row to partition")
+    if A.n_cols < 1:
+        raise ValueError("build_spmv_plan: empty column space "
+                         f"(A.shape = {A.shape})")
+    if A.indices.size:
+        c_lo, c_hi = int(A.indices.min()), int(A.indices.max())
+        if c_lo < 0 or c_hi >= A.n_cols:
+            raise ValueError(
+                "build_spmv_plan: stored column index out of range for "
+                f"shape {A.shape}: indices span [{c_lo}, {c_hi}] but "
+                f"n_cols = {A.n_cols}")
     if transport != "auto":
         transport = transport_stamp(transport)       # fail fast on typos
     wire_dtype = get_codec(wire_dtype).name          # fail fast on typos
@@ -247,10 +311,49 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
                          f"got {node_partition!r}")
     fmt = get_format(format)
     n = A.n_rows
-    node_bounds, core_bounds_all = partition_two_level(
-        A.row_nnz, n_node, n_core,
-        node_partition=node_partition,
-        core_partition="nnz" if mode == "balanced" else "rows")
+    core_partition = "nnz" if mode == "balanced" else "rows"
+    if row_space is not None:
+        node_bounds = np.asarray(row_space["node_bounds"], dtype=np.int64)
+        core_bounds_all = [np.asarray(cb, dtype=np.int64)
+                           for cb in row_space["core_bounds"]]
+        if len(node_bounds) != n_node + 1 or int(node_bounds[-1]) != n:
+            raise ValueError(
+                f"row_space pin inconsistent with A: node_bounds covers "
+                f"[0, {int(node_bounds[-1])}] over {len(node_bounds) - 1} "
+                f"node(s), matrix has {n} rows on {n_node} node(s)")
+    else:
+        node_bounds, core_bounds_all = partition_two_level(
+            A.row_nnz, n_node, n_core,
+            node_partition=node_partition,
+            core_partition=core_partition)
+
+    # Column-space partition: for square inputs with no override it *is*
+    # the row partition (same array objects -> the historical square plan,
+    # bit for bit); otherwise it is pinned (``col_space``) or computed as
+    # an independent two-level split over per-column nnz.
+    square_default = (A.n_cols == n) and col_space is None
+    if square_default:
+        col_node_bounds, col_core_bounds = node_bounds, core_bounds_all
+    elif col_space is not None:
+        col_node_bounds = np.asarray(col_space["node_bounds"],
+                                     dtype=np.int64)
+        col_core_bounds = [np.asarray(cb, dtype=np.int64)
+                           for cb in col_space["core_bounds"]]
+        if (len(col_node_bounds) != n_node + 1
+                or int(col_node_bounds[-1]) != A.n_cols):
+            raise ValueError(
+                f"col_space pin inconsistent with A: node_bounds covers "
+                f"[0, {int(col_node_bounds[-1])}] over "
+                f"{len(col_node_bounds) - 1} node(s), matrix has "
+                f"{A.n_cols} columns on {n_node} node(s)")
+    else:
+        col_nnz = np.bincount(A.indices.astype(np.int64),
+                              minlength=A.n_cols) \
+            if A.indices.size else np.zeros(A.n_cols, dtype=np.int64)
+        col_node_bounds, col_core_bounds = partition_two_level(
+            col_nnz, n_node, n_core,
+            node_partition=node_partition,
+            core_partition=core_partition)
 
     diag_nodes: list[CSRMatrix] = []
     offd_nodes: list[CSRMatrix] = []
@@ -258,8 +361,9 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
 
     for i in range(n_node):
         lo, hi = int(node_bounds[i]), int(node_bounds[i + 1])
+        clo, chi = int(col_node_bounds[i]), int(col_node_bounds[i + 1])
         Ai = A.row_slice(lo, hi)
-        diag_i, offd_i, ghosts = Ai.col_split(lo, hi)
+        diag_i, offd_i, ghosts = Ai.col_split(clo, chi)
         ghost_cols.append(ghosts)
         diag_nodes.append(diag_i)
         offd_nodes.append(offd_i)
@@ -267,7 +371,26 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
     # uniform static shapes across every (node, core) shard
     rc_pad = align_up(max(int(np.diff(cb).max()) for cb in core_bounds_all),
                       rows_align)
-    nl_pad = align_up(max(int(node_bounds[i + 1] - node_bounds[i])
+    if row_space is not None and row_space.get("pad") is not None:
+        if int(row_space["pad"]) < rc_pad:
+            raise ValueError(f"row_space pad {row_space['pad']} smaller "
+                             f"than the largest core bin ({rc_pad} slots)")
+        rc_pad = int(row_space["pad"])
+    if square_default:
+        cc_pad = rc_pad
+    else:
+        cc_pad = align_up(
+            max(int(np.diff(cb).max()) for cb in col_core_bounds),
+            rows_align)
+        if col_space is not None and col_space.get("pad") is not None:
+            if int(col_space["pad"]) < cc_pad:
+                raise ValueError(
+                    f"col_space pad {col_space['pad']} smaller than the "
+                    f"largest column core bin ({cc_pad} slots)")
+            cc_pad = int(col_space["pad"])
+    # x_gather width: the widest node-local *column* count (== the widest
+    # node-local row count for square plans)
+    nl_pad = align_up(max(int(col_node_bounds[i + 1] - col_node_bounds[i])
                           for i in range(n_node)), rows_align)
 
     x_gather = np.zeros((n_node, n_core, nl_pad), dtype=np.int32)
@@ -275,17 +398,21 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
     diag_a = np.ones((n_node, n_core, rc_pad), dtype=np.float64)
     # host layout maps for to_dist / from_dist
     global_row_of = np.full((n_node, n_core, rc_pad), -1, dtype=np.int64)
-    # bin-local row id -> vector-layout slot, per shard (for the halo remap)
-    slot_of = np.zeros((n_node, n_core, rc_pad), dtype=np.int32)
+    # bin-local *column* id -> input-vector-layout slot, per shard (for the
+    # halo remap; the column space is the row space for square plans)
+    slot_of = np.zeros((n_node, n_core, cc_pad), dtype=np.int32)
 
-    diag_full = A.diagonal()
-    zero_diag = np.flatnonzero(diag_full == 0)
-    if zero_diag.size:
-        raise ValueError(
-            f"A has a zero or missing diagonal entry on {zero_diag.size} "
-            f"owned row(s) (first: row {int(zero_diag[0])}); the Jacobi "
-            "preconditioner 1/diag(A) would be infinite there.  Add a "
-            "diagonal shift or fix the assembly.")
+    if A.n_cols == n:       # square: diag(A) exists and Jacobi needs it
+        diag_full = A.diagonal()
+        zero_diag = np.flatnonzero(diag_full == 0)
+        if zero_diag.size:
+            raise ValueError(
+                f"A has a zero or missing diagonal entry on {zero_diag.size} "
+                f"owned row(s) (first: row {int(zero_diag[0])}); the Jacobi "
+                "preconditioner 1/diag(A) would be infinite there.  Add a "
+                "diagonal shift or fix the assembly.")
+    else:                   # rectangular: no diagonal; diag_a stays ones
+        diag_full = None
     c_of_all: list[np.ndarray] = []
     lr_all: list[np.ndarray] = []
     for i in range(n_node):
@@ -294,20 +421,52 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
         cb = core_bounds_all[i]
         ar = np.arange(nl, dtype=np.int64)
         c_of = np.searchsorted(cb, ar, side="right") - 1   # owning core per row
-        lr = fmt.slot_order(A.row_nnz[lo:lo + nl], cb)     # slot inside the bin
+        if row_space is not None and row_space.get("lr") is not None:
+            lr = np.asarray(row_space["lr"][i], dtype=np.int64)  # pinned slots
+        else:
+            lr = fmt.slot_order(A.row_nnz[lo:lo + nl], cb)   # slot in the bin
         c_of_all.append(c_of)
         lr_all.append(lr)
-        x_gather[i, :, :nl] = (c_of * rc_pad + lr)[None, :]
         mask[i, c_of, lr] = 1.0
-        diag_a[i, c_of, lr] = diag_full[lo:lo + nl]
+        if diag_full is not None:
+            diag_a[i, c_of, lr] = diag_full[lo:lo + nl]
         global_row_of[i, c_of, lr] = lo + ar
-        slot_of[i, c_of, ar - cb[c_of]] = lr
+        if square_default:
+            # column space == row space: the input-vector maps reuse the
+            # row-space structures unchanged (the historical code path)
+            x_gather[i, :, :nl] = (c_of * rc_pad + lr)[None, :]
+            slot_of[i, c_of, ar - cb[c_of]] = lr
+
+    if square_default:
+        col_c_of_all, col_lr_all = c_of_all, lr_all
+        mask_col = mask
+        global_col_of = global_row_of
+    else:
+        col_c_of_all, col_lr_all = [], []
+        mask_col = np.zeros((n_node, n_core, cc_pad), dtype=np.float64)
+        global_col_of = np.full((n_node, n_core, cc_pad), -1, dtype=np.int64)
+        for i in range(n_node):
+            clo = int(col_node_bounds[i])
+            ncl = int(col_node_bounds[i + 1]) - clo
+            ccb = col_core_bounds[i]
+            ar = np.arange(ncl, dtype=np.int64)
+            c_of = np.searchsorted(ccb, ar, side="right") - 1
+            if col_space is not None and col_space.get("lr") is not None:
+                lr = np.asarray(col_space["lr"][i], dtype=np.int64)
+            else:
+                lr = ar - ccb[c_of]     # identity slot order within the bin
+            col_c_of_all.append(c_of)
+            col_lr_all.append(lr)
+            x_gather[i, :, :ncl] = (c_of * cc_pad + lr)[None, :]
+            mask_col[i, c_of, lr] = 1.0
+            global_col_of[i, c_of, lr] = clo + ar
+            slot_of[i, c_of, ar - ccb[c_of]] = lr
 
     fmt_data = fmt.pack(diag_nodes, offd_nodes, core_bounds_all,
                         c_of_all, lr_all, rc_pad, width_align, dtype)
 
-    halo: HaloPlan = build_halo_plan(ghost_cols, node_bounds, n_core,
-                                     core_bounds=core_bounds_all)
+    halo: HaloPlan = build_halo_plan(ghost_cols, col_node_bounds, n_core,
+                                     core_bounds=col_core_bounds)
     # halo send indices are bin-local row ids; route them through the
     # format's slot assignment (identity for ELL) so the exchange reads the
     # permuted vector shards correctly with no format special case
@@ -324,7 +483,7 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
     for dst in range(n_node):
         g = np.asarray(ghost_cols[dst], dtype=np.int64)
         if g.size:
-            owner = np.searchsorted(node_bounds, g, side="right") - 1
+            owner = np.searchsorted(col_node_bounds, g, side="right") - 1
             pair_counts[dst] = np.bincount(owner, minlength=n_node)
     offsets = sorted({int((dst - src) % n_node)
                       for dst in range(n_node) for src in range(n_node)
@@ -341,6 +500,9 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
         rc_pad=rc_pad, nl_pad=nl_pad, g_pad=halo.g_pad, hs=halo.h_own,
         mode=mode, format=fmt.name, transport=transport,
         wire_dtype=wire_dtype,
+        n_cols=A.n_cols, cc_pad=cc_pad,
+        mask_col=(None if square_default
+                  else jnp.asarray(mask_col, dtype=dtype)),
     )
     stats = partition_stats(A.row_nnz, node_bounds, core_bounds_all)
     # fraction of stored slots (diag + offd, all shards) holding no real
@@ -352,11 +514,20 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
         "node_partition": node_partition,
         "format": fmt.name,
         "global_row_of": global_row_of,
+        "global_col_of": global_col_of,
         "halo": halo,
         "neighbor_offsets": offsets,
         "pair_counts": pair_counts,
         "transport_census": transport_census(plan),
         "stats": stats,
+        # partition descriptors another plan can pin its spaces to
+        # (restriction / prolongation locking onto this plan's layout)
+        "row_space": {"node_bounds": node_bounds,
+                      "core_bounds": core_bounds_all,
+                      "lr": lr_all, "pad": rc_pad},
+        "col_space": {"node_bounds": col_node_bounds,
+                      "core_bounds": col_core_bounds,
+                      "lr": col_lr_all, "pad": cc_pad},
     }
     if verify:
         # late import: repro.analysis sits above core in the layering
@@ -375,21 +546,45 @@ def build_spmv_plan(A: CSRMatrix, n_node: int, n_core: int,
 # vector layout conversion (host)
 # ---------------------------------------------------------------------- #
 def to_dist(v: np.ndarray, layout: dict, plan: SpMVPlan,
-            dtype=None) -> jax.Array:
-    """Global (n,) vector -> CG layout.  Driven entirely by the layout's
-    ``global_row_of`` table, so it is exact for non-uniform ``node_bounds``
-    (two-level nnz partitions) and format row permutations alike."""
-    g = layout["global_row_of"]
-    out = np.zeros(plan.cg_shape, dtype=np.asarray(v).dtype)
+            dtype=None, space: str = "col") -> jax.Array:
+    """Global vector -> distributed layout.  Driven entirely by the
+    layout's slot tables, so it is exact for non-uniform ``node_bounds``
+    (two-level nnz partitions) and format row permutations alike.
+
+    ``space="col"`` (default) produces the SpMV *input* layout — an
+    ``(n_cols,)`` vector into ``plan.x_shape``; ``space="row"`` produces
+    the output / Krylov-iterate layout — ``(n,)`` into ``plan.cg_shape``.
+    For square plans with the default column space the two are identical
+    (so existing square callers see no change)."""
+    if space not in ("row", "col"):
+        raise ValueError(f"space must be 'row' or 'col', got {space!r}")
+    if space == "col":
+        g = layout.get("global_col_of", layout["global_row_of"])
+        shape = plan.x_shape
+    else:
+        g = layout["global_row_of"]
+        shape = plan.cg_shape
+    out = np.zeros(shape, dtype=np.asarray(v).dtype)
     valid = g >= 0
     out[valid] = np.asarray(v)[g[valid]]
     return jnp.asarray(out, dtype=dtype or plan.mask.dtype)
 
 
-def from_dist(vd: jax.Array, layout: dict, plan: SpMVPlan) -> np.ndarray:
-    g = layout["global_row_of"]
+def from_dist(vd: jax.Array, layout: dict, plan: SpMVPlan,
+              space: str = "row") -> np.ndarray:
+    """Distributed layout -> global vector (inverse of ``to_dist``;
+    ``space="row"`` (default) reads ``plan.cg_shape`` SpMV outputs,
+    ``space="col"`` reads ``plan.x_shape`` input-layout vectors)."""
+    if space not in ("row", "col"):
+        raise ValueError(f"space must be 'row' or 'col', got {space!r}")
+    if space == "col":
+        g = layout.get("global_col_of", layout["global_row_of"])
+        n = plan.n_cols
+    else:
+        g = layout["global_row_of"]
+        n = plan.n
     vd = np.asarray(vd)
-    out = np.zeros(plan.n, dtype=vd.dtype)
+    out = np.zeros(n, dtype=vd.dtype)
     valid = g >= 0
     out[g[valid]] = vd[valid]
     return out
@@ -408,8 +603,11 @@ def make_shard_body(plan: SpMVPlan,
 
     ``F`` maps ``plan_fields(plan)`` names (plus the transport's
     ``body.extra`` arrays) to per-shard arrays (leading (1, 1) shard dims
-    already stripped); ``x_mine`` is this core's (rc_pad,) bin of the
-    distributed vector.  Meant to run *inside* a ``shard_map`` over
+    already stripped); ``x_mine`` is this core's (cc_pad,) bin of the
+    distributed *input* (column-space) vector — (rc_pad,) and identical
+    to the output layout for square plans — and the returned ``y_mine``
+    is the (rc_pad,) row-space bin.  Meant to run *inside* a ``shard_map``
+    over
     ``axis_names`` — ``make_spmv`` wraps it directly and ``repro.solvers``
     calls it from the fused Krylov ``while_loop``.
 
@@ -470,7 +668,7 @@ def make_shard_body(plan: SpMVPlan,
             x_ghost = None      # halo-free plan: no exchange, no ghost phase
 
         # -- shared-memory read analogue: assemble the node-local x slice --
-        x_bins = jax.lax.all_gather(x_mine, core_ax, axis=0)  # (n_core, rc_pad)
+        x_bins = jax.lax.all_gather(x_mine, core_ax, axis=0)  # (n_core, cc_pad)
         x_local = x_bins.reshape(-1)[F["x_gather"]]           # (nl_pad,)
 
         if mode == "vector":
@@ -499,7 +697,9 @@ def make_spmv(plan: SpMVPlan, mesh: jax.sharding.Mesh,
               transport: str | HaloTransport | None = None,
               neighbor_offsets: list[int] | None = None,
               wire_dtype: str | None = None):
-    """Build the jitted distributed SpMV: (n_node, n_core, rc_pad) -> same.
+    """Build the jitted distributed SpMV:
+    ``plan.x_shape`` (n_node, n_core, cc_pad) -> ``plan.cg_shape``
+    (n_node, n_core, rc_pad) — the same shape for square plans.
 
     ``backend``: 'jnp' or 'pallas' — dispatched to the plan's shard format
     (``repro.sparse.formats``; Pallas kernels run interpret-mode on CPU).

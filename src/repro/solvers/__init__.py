@@ -8,15 +8,17 @@ multi-RHS solves.  See DESIGN.md §9.
 """
 from repro.solvers.base import (Solver, SolverCtx, available_solvers,
                                 from_dist_batch, get_solver, local_dot,
-                                make_solver, pdot, pdot_stack,
-                                register_solver, to_dist_batch)
+                                make_precond_apply, make_solver, pdot,
+                                pdot_stack, register_solver, to_dist_batch)
 from repro.solvers.krylov import (CGSolver, ChebyshevSolver,
                                   PipelinedCGSolver, chebyshev_iters_for_tol,
                                   estimate_eig_bounds)
-from repro.solvers.precond import (BlockJacobiPrecond, JacobiPrecond,
-                                   NonePrecond, Preconditioner,
+from repro.solvers.precond import (BlockJacobiPrecond, FaultyPrecond,
+                                   JacobiPrecond, NonePrecond,
+                                   Preconditioner, TwoLevelPrecond,
                                    available_preconds, get_precond,
-                                   jacobi_inverse, register_precond)
+                                   jacobi_inverse, register_precond,
+                                   unregister_precond)
 from repro.solvers.refine import RefineResult, make_refine, refine_solve
 from repro.solvers.resilient import (ResilientResult, SolveFailure,
                                      make_resilient, resilient_solve)
@@ -28,8 +30,9 @@ __all__ = [
     "CGSolver", "PipelinedCGSolver", "ChebyshevSolver",
     "estimate_eig_bounds", "chebyshev_iters_for_tol",
     "Preconditioner", "NonePrecond", "JacobiPrecond", "BlockJacobiPrecond",
-    "register_precond", "get_precond", "available_preconds",
-    "jacobi_inverse",
+    "TwoLevelPrecond", "FaultyPrecond",
+    "register_precond", "unregister_precond", "get_precond",
+    "available_preconds", "jacobi_inverse", "make_precond_apply",
     "resilient_solve", "make_resilient", "ResilientResult", "SolveFailure",
     "make_refine", "refine_solve", "RefineResult",
 ]

@@ -56,7 +56,8 @@ from repro.util import shard_map_compat
 
 __all__ = ["local_dot", "pdot", "pdot_stack", "SolverCtx", "Solver",
            "register_solver", "get_solver", "available_solvers",
-           "make_solver", "to_dist_batch", "from_dist_batch"]
+           "make_solver", "make_precond_apply",
+           "to_dist_batch", "from_dist_batch"]
 
 
 # --------------------------------------------------------------------- #
@@ -341,7 +342,8 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
                 maxiter_static: int = 10_000,
                 nrhs: int | None = None,
                 A=None, layout: dict | None = None,
-                options: dict | None = None):
+                options: dict | None = None,
+                precond_options: dict | None = None):
     """Bundle plan + mesh + a registered solver/preconditioner pair into
     ``solve(b, tol=..., maxiter=...)`` running as one sharded program.
 
@@ -379,6 +381,10 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
     # seconds compiling and timing candidate SpMVs it will throw away
     sol = get_solver(solver)
     pre = get_precond(precond)
+    # validate precond options just as early — an unknown coarse-space
+    # option (e.g. two_level's agg_size/smoother) must raise the
+    # ValueError listing valid names before autotune or any compile
+    pre.validate_options(precond_options)
     transport = transport if transport is not None else plan.transport
     if transport == "auto":     # explicit, or a deferred plan stamp
         from repro.core.transport import autotune_transport
@@ -393,7 +399,9 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
                            neighbor_offsets=neighbor_offsets,
                            wire_dtype=wire_dtype)
     fields = plan_fields(plan) + tuple(body.extra)
-    pdata = pre.build(plan, layout=layout, A=A)
+    pdata, papply = pre.bind(plan, layout=layout, A=A,
+                             axis_names=axis_names, backend=backend,
+                             options=precond_options)
     pnames = tuple(pdata)
     opts = sol.prepare(plan, pre, pdata, A=A, layout=layout, options=options)
     batched = nrhs is not None
@@ -409,7 +417,7 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
             b = b[None]                     # (1, rc_pad)
         ctx = SolverCtx(
             spmv=jax.vmap(lambda v: body(F, v)),
-            precond=lambda r: pre.apply(Pd, r),
+            precond=lambda r: papply(Pd, r),
             mask=mask, axes=axes, maxiter_static=maxiter_static,
             options=opts)
         x, iters, rel = sol.shard_loop(ctx, b * mask, tol, maxiter)
@@ -441,3 +449,45 @@ def make_solver(plan, mesh: jax.sharding.Mesh, *,
     solve.wire_dtype = body.wire_dtype
     solve.options = opts
     return solve
+
+
+def make_precond_apply(plan, mesh: jax.sharding.Mesh, *,
+                       precond: str | Preconditioner = "jacobi",
+                       axis_names: tuple[str, str] = ("node", "core"),
+                       backend: str = "jnp",
+                       A=None, layout: dict | None = None,
+                       precond_options: dict | None = None):
+    """Jitted standalone preconditioner application on the live mesh:
+    ``apply(rd) -> zd`` over CG-layout ``(n_node, n_core, rc_pad)``.
+
+    The same ``bind`` + sharded-region composition ``make_solver`` uses,
+    without a Krylov loop around it — what the ``precond_check``
+    conformance harness sweeps against each preconditioner's numpy
+    ``host_apply`` oracle.  Carries ``apply.precond`` (resolved name).
+    """
+    pre = get_precond(precond)
+    pre.validate_options(precond_options)
+    pdata, papply = pre.bind(plan, layout=layout, A=A,
+                             axis_names=axis_names, backend=backend,
+                             options=precond_options)
+    pnames = tuple(pdata)
+    node_ax, core_ax = axis_names
+
+    def shard_apply(*args):
+        pvals = args[:len(pnames)]
+        rd = args[len(pnames)]
+        Pd = {k: v[0, 0] for k, v in zip(pnames, pvals)}
+        z = papply(Pd, rd[0, 0][None])      # (1, rc_pad) residual block
+        return z[0][None, None]
+
+    spec = P(node_ax, core_ax)
+    fn = shard_map_compat(shard_apply, mesh=mesh,
+                          in_specs=(spec,) * (len(pnames) + 1),
+                          out_specs=spec)
+
+    @jax.jit
+    def apply(rd: jax.Array) -> jax.Array:
+        return fn(*(pdata[k] for k in pnames), rd)
+
+    apply.precond = pre.name
+    return apply

@@ -61,7 +61,8 @@ def make_refine(plan, mesh, *, solver="cg", precond="jacobi",
                 backend: str = "jnp", transport=None,
                 neighbor_offsets=None, wire_dtype: str | None = None,
                 maxiter_static: int = 10_000,
-                options: dict | None = None):
+                options: dict | None = None,
+                precond_options: dict | None = None):
     """Wrap a registry solver in the f64 iterative-refinement outer loop.
 
     ``A`` (host matrix with ``matvec``) and ``layout`` (the dict
@@ -99,7 +100,8 @@ def make_refine(plan, mesh, *, solver="cg", precond="jacobi",
                         neighbor_offsets=neighbor_offsets,
                         wire_dtype=wire_dtype,
                         maxiter_static=maxiter_static,
-                        A=A, layout=layout, options=options)
+                        A=A, layout=layout, options=options,
+                        precond_options=precond_options)
 
     def refine(b, tol: float = 1e-7,
                max_cycles: int = 40) -> RefineResult:

@@ -149,7 +149,8 @@ def make_resilient(plan, mesh: jax.sharding.Mesh, *,
                    neighbor_offsets=None, wire_dtype: str | None = None,
                    maxiter_static: int = 10_000,
                    A=None, layout: dict | None = None,
-                   options: dict | None = None) -> _Resilient:
+                   options: dict | None = None,
+                   precond_options: dict | None = None) -> _Resilient:
     """Compile the three chunked-execution programs for a registered
     solver/preconditioner pair (mirrors ``make_solver``'s plumbing):
 
@@ -177,6 +178,7 @@ def make_resilient(plan, mesh: jax.sharding.Mesh, *,
             wire_dtype=wire_dtype).winner
     sol = get_solver(solver)
     pre = get_precond(precond)
+    pre.validate_options(precond_options)
     kinds = sol.state_kinds()
     if "x" not in kinds or "k" not in kinds:
         raise ValueError(f"solver {sol.name!r} state_kinds() must include "
@@ -184,7 +186,9 @@ def make_resilient(plan, mesh: jax.sharding.Mesh, *,
     skeys = tuple(sorted(kinds))
     node_ax, core_ax = axis_names
     axes = tuple(axis_names)
-    pdata = pre.build(plan, layout=layout, A=A)
+    pdata, papply = pre.bind(plan, layout=layout, A=A,
+                             axis_names=axis_names, backend=backend,
+                             options=precond_options)
     pnames = tuple(pdata)
     opts = sol.prepare(plan, pre, pdata, A=A, layout=layout, options=options)
     spec = P(node_ax, core_ax)
@@ -206,7 +210,7 @@ def make_resilient(plan, mesh: jax.sharding.Mesh, *,
                   for k, v in zip(pnames, args[n_f:n_f + n_p])}
             mask = args[n_f + n_p][0, 0]
             ctx = SolverCtx(spmv=jax.vmap(lambda v: body(F, v)),
-                            precond=lambda r: pre.apply(Pd, r),
+                            precond=lambda r: papply(Pd, r),
                             mask=mask, axes=axes,
                             maxiter_static=maxiter_static, options=opts)
             return ctx, mask, args[n_consts:]
@@ -350,6 +354,7 @@ def resilient_solve(A_or_plan, b, *, solver="cg", precond="jacobi",
                     injector: FaultInjector | None = None,
                     watchdog: Watchdog | None = None,
                     options: dict | None = None,
+                    precond_options: dict | None = None,
                     divergence_factor: float = 1e3,
                     mismatch_factor: float = 1e3,
                     stall_chunks: int = 8,
@@ -431,7 +436,8 @@ def resilient_solve(A_or_plan, b, *, solver="cg", precond="jacobi",
                             neighbor_offsets=neighbor_offsets,
                             wire_dtype=wire_dtype,
                             maxiter_static=maxiter_static, A=A,
-                            layout=layout, options=options)
+                            layout=layout, options=options,
+                            precond_options=precond_options)
     sol = rs.sol
     # lossy wire legitimately separates recurrence from true residual by up
     # to the codec bound — widen the guard's thresholds to it (f32: no-op)

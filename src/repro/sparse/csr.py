@@ -126,6 +126,11 @@ class CSRMatrix:
         np.add.at(y, self._row_of_nnz(), prod.astype(out_dtype))
         return y
 
+    def transpose(self) -> "CSRMatrix":
+        """Aᵀ as a new CSRMatrix (host; e.g. prolongation P = Rᵀ)."""
+        return CSRMatrix.from_coo(self.indices, self._row_of_nnz(),
+                                  self.data, (self.n_cols, self.n_rows))
+
     def diagonal(self) -> np.ndarray:
         d = np.zeros(self.n_rows, dtype=self.data.dtype)
         if self.nnz:

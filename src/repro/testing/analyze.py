@@ -5,7 +5,9 @@ Usage:  python -m repro.testing.analyze [--n-node 4 --n-core 2] \
 
 Sweeps **every registered** format x transport x solver x preconditioner
 x wire-dtype combination through the three static layers of
-``repro.analysis``:
+``repro.analysis``, plus a rectangular-plan section (fat R-style and
+tall P-style probes through the plan/kernel/jaxpr layers — these are the
+shapes the two-level preconditioner builds internally):
 
   plan     host numpy invariants per format (single-writer ghost slots,
            slot-map permutation, partition bounds, storage accounting);
@@ -64,8 +66,11 @@ def run_sweep(args) -> dict:
                                       available_wire_dtypes)
     from repro.solvers.base import available_solvers
     from repro.solvers.precond import available_preconds
+    from repro.sparse.csr import CSRMatrix
     from repro.sparse.formats import available_formats
     from repro.sparse.mesh_gen import graded_extruded_mesh_matrix
+
+    import numpy as np
 
     formats = _csv(args.formats, available_formats())
     transports = _csv(args.transports, available_transports())
@@ -118,6 +123,34 @@ def run_sweep(args) -> dict:
                                       layout=layout,
                                       options=DEFAULT_SOLVER_OPTIONS.get(
                                           sname)))
+
+    # rectangular plans: fat (R-style restriction shape) and tall
+    # (P-style prolongation shape) probes through the plan/kernel/jaxpr
+    # layers.  Solvers and preconditioners are square-only, so the sweep
+    # stops at the SpMV contract for these.
+    def rect_probe(n_rows: int, n_cols: int, seed: int) -> CSRMatrix:
+        rng = np.random.default_rng(seed)
+        rows = np.repeat(np.arange(n_rows), 4)
+        cols = rng.integers(0, n_cols, size=rows.size)
+        vals = rng.standard_normal(rows.size) + 2.0
+        return CSRMatrix.from_coo(rows, cols, vals, (n_rows, n_cols))
+
+    n = A.n_rows
+    for label, R in (("fat", rect_probe(n // 2, n, seed=3)),
+                     ("tall", rect_probe(n, n // 2, seed=5))):
+        for fmt in formats:
+            plan_r, layout_r = build_spmv_plan(
+                R, n_node=args.n_node, n_core=args.n_core, format=fmt)
+            print(f"rect[{label}] {fmt}: {plan_r.n}x{plan_r.n_cols} "
+                  f"hs={plan_r.hs} g_pad={plan_r.g_pad}")
+            tick(f"rect-plan[{label} x {fmt}]",
+                 check_plan(plan_r, layout_r))
+            tick(f"rect-kernel[{label} x {fmt}]",
+                 check_kernel_streams(plan_r))
+            for tname in transports:
+                for wdt in wire_dtypes:
+                    tick(f"rect-spmv[{label} x {fmt} x {tname} x {wdt}]",
+                         check_spmv_static(plan_r, tname, wire_dtype=wdt))
 
     wall = time.perf_counter() - t0
     for v in total.violations:
